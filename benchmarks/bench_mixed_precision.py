@@ -1,0 +1,47 @@
+"""Paper Fig. 7: mixed-precision throughput of dTVC / dHOPM_3 — storage
+formats f32 / bf16("brain") / f16("half"), compute in f32 (§5.5)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tvc
+from repro.core.dhopm import hopm3
+from .common import TENSORS, emit, rand_tensor, time_fn
+
+POLICIES = {"single": jnp.float32, "brain-single": jnp.bfloat16,
+            "half-single": jnp.float16}
+
+
+def run(orders=(3, 6, 10)):
+    lines = []
+    for d in orders:
+        shape = TENSORS[d]
+        base = {}
+        for pol, dt in POLICIES.items():
+            A = rand_tensor(shape, seed=d).astype(dt)
+            xs = [rand_tensor((m,), seed=60 + i).astype(dt)
+                  for i, m in enumerate(shape)]
+            polname = {"single": "f32", "brain-single": "bf16",
+                       "half-single": "f16"}[pol]
+            fn = jax.jit(lambda A, *xs: hopm3(A, list(xs), sweeps=1,
+                                              prec=polname)[1])
+            t = time_fn(fn, A, *xs)
+            base[pol] = t
+            speed = base["single"] / t
+            lines.append(emit(f"mp_hopm3_d{d}_{pol}", t * 1e6,
+                              f"{speed:.2f}x_vs_single"))
+        # dTVC single-mode comparison
+        for pol, dt in POLICIES.items():
+            A = rand_tensor(shape, seed=d).astype(dt)
+            x = rand_tensor((shape[1],), seed=61).astype(dt)
+            polname = {"single": "f32", "brain-single": "bf16",
+                       "half-single": "f16"}[pol]
+            fn = jax.jit(lambda A, x: tvc(A, x, 1, prec=polname))
+            t = time_fn(fn, A, x)
+            lines.append(emit(f"mp_tvc_d{d}_{pol}", t * 1e6, f"storage{dt.dtype.itemsize if hasattr(dt,'dtype') else jnp.dtype(dt).itemsize}B"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

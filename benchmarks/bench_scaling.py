@@ -1,0 +1,70 @@
+"""Paper Figs. 3/4/6 analogue: distributed strong-scaling behaviour.
+
+Runs in a SUBPROCESS with 8 virtual CPU devices (virtual devices share the
+physical cores, so absolute speedup is not the point on this container — the
+measurable axes are the paper's: (i) assembled vs distributed-output dTVC
+(Fig. 3's CTF-style assembly penalty), (ii) k = s vs k != s (Eq. 2 vs Eq. 1),
+(iii) dHOPM_3 delayed-reduction collective cost per splitting dim."""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+_CHILD = r"""
+import numpy as np, jax, jax.numpy as jnp, time
+from repro.core import dtvc as dtvc_mod
+from repro.core import dhopm as dh
+from benchmarks.common import time_fn, emit, rand_tensor
+
+mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+shape = (64, 64, 64)
+A = rand_tensor(shape, seed=3)
+
+# Fig 3: distributed-output vs assembled dTVC (k != s)
+for assemble in (False, True):
+    f = lambda A, x: dtvc_mod.dtvc(A, x, 1, 2, mesh, "x", assemble=assemble)
+    x = rand_tensor((shape[1],), seed=4)
+    t = time_fn(f, A, x)
+    emit(f"dtvc_d3_assemble_{assemble}", t*1e6, f"{1.0/t:.1f}it/s")
+
+# Eq. 1 vs Eq. 2: k != s vs k == s
+for (k, s, tag) in ((1, 2, "k_ne_s"), (2, 2, "k_eq_s")):
+    x = rand_tensor((shape[k],), seed=5)
+    f = lambda A, x, k=k, s=s: dtvc_mod.dtvc(A, x, k, s, mesh, "x", assemble=False if k != s else True)
+    t = time_fn(f, A, x)
+    emit(f"dtvc_d3_{tag}", t*1e6, f"{1.0/t:.1f}it/s")
+
+# Fig 6: dHOPM_3 across splitting dims (delayed reduction)
+xs = [rand_tensor((n,), seed=10+i) for i, n in enumerate(shape)]
+for s in range(3):
+    f = lambda A, *xs, s=s: dh.dhopm3(A, list(xs), mesh, "x", s=s, sweeps=1)[1]
+    t = time_fn(f, A, *xs)
+    emit(f"dhopm3_d3_s{s}", t*1e6, f"{1.0/t:.1f}it/s")
+
+# sequential baseline for the same tensor (p = 1 reference)
+f = lambda A, *xs: dh.hopm3(A, list(xs), sweeps=1)[1]
+t = time_fn(f, A, *xs)
+emit("hopm3_d3_p1", t*1e6, f"{1.0/t:.1f}it/s")
+print("SCALING_DONE")
+"""
+
+
+def run():
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = f"{root / 'src'}:{root}"
+    proc = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if "SCALING_DONE" not in proc.stdout:
+        raise RuntimeError(f"scaling bench failed:\n{proc.stdout}\n{proc.stderr[-2000:]}")
+    lines = [ln for ln in proc.stdout.splitlines() if "," in ln]
+    for ln in lines:
+        print(ln)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Table 2: looped vs unfolded vs native TVC bandwidth, averaged over
+all contraction modes, normalized to the measured STREAM triad."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import tvc, tvc_bytes
+from .common import TENSORS, emit, rand_tensor, stream_triad_gbs, time_fn
+
+
+def run(orders=(2, 3, 4, 5, 6, 8, 10), impls=("looped", "unfolded", "native")):
+    peak = stream_triad_gbs()
+    lines = [emit("stream_triad", 0.0, f"{peak:.1f}GB/s")]
+    rows = {}
+    for d in orders:
+        shape = TENSORS[d]
+        A = rand_tensor(shape, seed=d)
+        for impl in impls:
+            bws = []
+            t_total = 0.0
+            for k in range(d):
+                x = rand_tensor((shape[k],), seed=100 + k)
+                fn = jax.jit(lambda A, x, k=k, impl=impl: tvc(A, x, k, impl=impl))
+                t = time_fn(fn, A, x)
+                t_total += t
+                bws.append(tvc_bytes(shape, k, 4) / t / 1e9)
+            mean = float(np.mean(bws))
+            std = float(np.std(bws))
+            rows[(d, impl)] = (mean / peak * 100, std / peak * 100)
+            lines.append(emit(
+                f"tvc_d{d}_{impl}", t_total / d * 1e6,
+                f"{mean:.1f}GB/s={mean/peak*100:.0f}%peak±{std/peak*100:.0f}"))
+    return lines, rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tvc,hopm,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ("memory_model", "tvc", "hopm", "mixed_precision", "scaling",
+          "compression")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list from {SUITES}")
+    args = ap.parse_args()
+    chosen = args.only.split(",") if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name in chosen:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        print(f"# == {name} ==", flush=True)
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            print(f"# FAILED {name}: {e}", flush=True)
+    print(f"# total {time.time()-t0:.1f}s")
+    if failures:
+        for name, e in failures:
+            print(f"# failure: {name}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

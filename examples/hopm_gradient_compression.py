@@ -1,0 +1,61 @@
+"""dHOPM_3 gradient compression end-to-end (the paper integrated into the
+optimizer path).  Runs under 8 virtual devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/hopm_gradient_compression.py
+
+Trains the same model twice — exact DP sync vs dHOPM_3 rank-r compression —
+and reports final losses and per-step gradient wire bytes.  (Step counts are
+sized for a single-core container; raise --steps on real hardware.)
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.data import DataConfig, SyntheticLMData  # noqa: E402
+from repro.models import registry  # noqa: E402
+from repro.train import optimizer as opt_mod  # noqa: E402
+from repro.train.grad_compress import CompressorCfg, wire_bytes_summary  # noqa: E402
+from repro.train.train_loop import TrainConfig, train  # noqa: E402
+
+
+def run(tcfg, cfg, mesh, steps=3):
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, 16, 8, seed=4), mesh)
+    _, _, hist = train(cfg, mesh, tcfg, data.iterate(0), steps,
+                       log_every=10)
+    return hist
+
+
+def main():
+    assert jax.device_count() == 8
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    ocfg = opt_mod.OptConfig(lr=2e-3, warmup_steps=5, total_steps=40)
+
+    print("== exact DP sync (baseline) ==")
+    hist_exact = run(TrainConfig(opt=ocfg, mode="dp_explicit"), cfg, mesh)
+
+    print("== dHOPM_3 compression (rank 4, 1 sweep, bf16 wire) ==")
+    # single-core container: keep the compiled graph small — compress the
+    # embedding + the largest matrices only (min_size gates the rest)
+    ccfg = CompressorCfg(rank=4, sweeps=1, min_size=16384, prec="bf16")
+    hist_comp = run(TrainConfig(opt=ocfg, mode="dp_explicit", compression=ccfg),
+                    cfg, mesh)
+
+    params = registry.get(cfg.family).init(cfg, jax.random.PRNGKey(0))
+    stats = wire_bytes_summary(params, ccfg, 8)
+    print(f"\nwire bytes/step/device: dense {stats['dense_bytes']/1e6:.2f} MB "
+          f"-> compressed {stats['compressed_bytes']/1e6:.2f} MB "
+          f"({stats['ratio']:.1f}x less)")
+    print(f"final loss exact      : {hist_exact[-1]['loss']:.4f}")
+    print(f"final loss compressed : {hist_comp[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

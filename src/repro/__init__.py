@@ -1,0 +1,5 @@
+"""repro: a multi-pod JAX training/inference framework built around the
+distributed tensor-vector contraction algorithms of Martinez-Ferrer,
+Yzelman & Beltran (2025)."""
+
+__version__ = "1.0.0"

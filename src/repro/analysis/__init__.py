@@ -1,0 +1,2 @@
+"""Compiled-artifact analysis: roofline terms from cost_analysis + HLO."""
+from .roofline import RooflineReport, analyze_compiled, collective_bytes  # noqa: F401

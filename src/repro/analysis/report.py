@@ -1,0 +1,71 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.analysis.report reports/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.1f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}m"
+    return f"{x*1e6:.0f}u"
+
+
+def roofline_table(results: list[dict], mesh: str) -> str:
+    rows = [r for r in results if r["mesh"] == mesh]
+    hdr = ("| arch | shape | status | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bound | roofline | useful FLOPs | temp GB/chip | args GB/chip |")
+    sep = "|" + "---|" * 11
+    out = [hdr, sep]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | "
+                       f"{r['reason']} | | | | | | | | |")
+            continue
+        if r["status"] == "error":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                       f"{r['error'][:60]} | | | | | | | | |")
+            continue
+        rl = r["roofline"]
+        ma = r["memory_analysis"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {_fmt_s(rl['t_compute'])} | {_fmt_s(rl['t_memory'])} "
+            f"| {_fmt_s(rl['t_collective'])} | {rl['bottleneck']} "
+            f"| {rl['roofline_fraction']:.2f} "
+            f"| {min(1.0, rl['useful_flops_fraction']):.2f} "
+            f"| {ma['temp_bytes']/1e9:.2f} | {ma['argument_bytes']/1e9:.2f} |")
+    return "\n".join(out)
+
+
+def dryrun_summary(results: list[dict]) -> str:
+    out = []
+    for mesh in sorted({r["mesh"] for r in results}):
+        rows = [r for r in results if r["mesh"] == mesh]
+        ok = sum(r["status"] == "ok" for r in rows)
+        sk = sum(r["status"] == "skipped" for r in rows)
+        er = sum(r["status"] == "error" for r in rows)
+        out.append(f"- mesh {mesh}: {ok} compiled OK, {sk} skipped "
+                   f"(assignment rules), {er} errors")
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun.json"
+    results = json.loads(open(path).read())
+    print(dryrun_summary(results))
+    for mesh in sorted({r["mesh"] for r in results}):
+        print(f"\n### Mesh {mesh}\n")
+        print(roofline_table(results, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+    compute    = HLO_FLOPs / peak_FLOPs          (per chip: cost_analysis of
+    memory     = HLO_bytes / HBM_bw               the partitioned module is
+    collective = collective_bytes / link_bw       already per-device)
+
+collective_bytes is not in cost_analysis: we parse the (post-partitioning)
+HLO text and sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+# TPU v5e constants (per assignment)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-reduce.5 = f32[128,1024]{1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")\(")
+# tuple-result collectives:  = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-reduce(
+# (shape layout annotations {1,0} contain commas — match them explicitly)
+_ELT = r"[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?"
+_TUPLE_RE = re.compile(
+    r"=\s*\(((?:\s*" + _ELT + r"\s*,?)+)\)\s*("
+    + "|".join(_COLLECTIVES) + r")\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes (per device, post-partitioning)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        out[kind] += _shape_bytes(dtype, dims)
+    for m in _TUPLE_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        for sm in _SHAPE_RE.finditer(shapes):
+            out[kind] += _shape_bytes(sm.group(1), sm.group(2))
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict
+    model_flops: float          # 6*N*D (train) / 2*N_active*tokens (decode)
+    bytes_per_device: int       # peak memory (memory_analysis)
+    argument_bytes: int
+    output_bytes: int
+    temp_bytes: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step spent on the bound resource if perfectly
+        overlapped: dominant / sum — 1.0 means the bound resource is busy
+        100% of the time (ideal)."""
+        total = self.t_compute + self.t_memory + self.t_collective
+        if total == 0:
+            return 0.0
+        return max(self.t_compute, self.t_memory, self.t_collective) / total
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        if self.hlo_flops == 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 roofline_fraction=self.roofline_fraction,
+                 useful_flops_fraction=self.useful_flops_fraction)
+        return d
+
+
+def model_flops_for(cfg, shape, n_params_active: int) -> float:
+    """MODEL_FLOPS convention: 6 N D for training (fwd+bwd), 2 N D for
+    forward-only (prefill), 2 N per token for decode."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    return 2.0 * n_params_active * shape.global_batch  # decode: 1 new token
+
+
+def analyze_compiled(compiled, *, arch: str, shape, mesh, cfg=None,
+                     per_device_flops: bool = True) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    chips = math.prod(mesh.shape.values())
+    from repro.models import registry
+    n_active = registry.get(cfg.family).active_param_count(cfg) if cfg else 0
+    mf = model_flops_for(cfg, shape, n_active) / chips if cfg else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape.name,
+        mesh="x".join(str(v) for v in mesh.shape.values()),
+        chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=float(coll["total"]),
+        coll_breakdown={k: v for k, v in coll.items() if k != "total"},
+        model_flops=mf,
+        bytes_per_device=int(mem.temp_size_in_bytes + mem.argument_size_in_bytes),
+        argument_bytes=int(mem.argument_size_in_bytes),
+        output_bytes=int(mem.output_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+    )

@@ -1,0 +1,16 @@
+"""Architecture configs (the 10 assigned archs).  Importing this package
+registers every config; use base.get_config(name[, smoke=True])."""
+from . import (  # noqa: F401
+    deepseek_v2_lite_16b,
+    granite_8b,
+    internvl2_26b,
+    kimi_k2_1t_a32b,
+    llama3_405b,
+    qwen2_1_5b,
+    recurrentgemma_9b,
+    rwkv6_3b,
+    stablelm_1_6b,
+    whisper_tiny,
+)
+from .base import ModelConfig, get_config, list_archs  # noqa: F401
+from .shapes import SHAPES, ShapeSpec, get_shape, cell_is_runnable  # noqa: F401

@@ -1,0 +1,141 @@
+"""Model configuration schema + registry for the 10 assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    group_tokens: int = 4096     # dispatch sub-group size (memory bound)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    q_lora_rank: Optional[int] = None  # V2-Lite: no q compression
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVCfg:
+    head_dim: int = 64
+    decay_lora: int = 64
+    mix_lora: int = 32
+    gate_lora: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class GriffinCfg:
+    lru_width: int = 4096
+    conv_width: int = 4
+    window: int = 2048
+    pattern: Sequence[str] = ("rec", "rec", "attn")
+    lru_c: float = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecCfg:
+    n_enc_layers: int = 4
+    n_audio_ctx: int = 1500   # Whisper frame count (stub frontend output)
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMCfg:
+    n_img_tokens: int = 1024  # stub ViT frontend output length
+    img_embed_dim: Optional[int] = None  # defaults to d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | rwkv | griffin | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0   # stablelm2: 0.25 partial rotary
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    mlp: str = "swiglu"          # swiglu | geglu | gelu
+    tie_embeddings: bool = False
+    window: Optional[int] = None
+    moe: Optional[MoECfg] = None
+    mla: Optional[MLACfg] = None
+    rwkv: Optional[RWKVCfg] = None
+    griffin: Optional[GriffinCfg] = None
+    encdec: Optional[EncDecCfg] = None
+    vlm: Optional[VLMCfg] = None
+    # numerics / memory knobs
+    dtype: str = "bfloat16"
+    optimizer: str = "adamw"     # adamw | adafactor (405B/1T configs)
+    remat: bool = True
+    q_chunk: int = 2048
+    kv_chunk: int = 1024
+    vocab_pad_multiple: int = 128
+    # long-context capability: sub-quadratic archs run the long_500k shape
+    subquadratic: bool = False
+    max_train_seq: int = 4096
+    # lowering knobs (dry-run cost-model shadow configs + perf tuning):
+    # python-loop the layer stack instead of lax.scan (XLA cost_analysis
+    # counts while bodies once; unrolled modules cost-analyze correctly)
+    unroll_layers: bool = False
+    # unroll time scans (RWKV wkv) — only sane for small seq shadows
+    time_scan_unroll: bool = False
+    # remat policy for the layer scan: "full" (recompute everything) or
+    # "dots" (save matmul outputs — less recompute, more memory)
+    remat_policy: str = "full"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(1, self.n_heads))
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks), for roofline
+        MODEL_FLOPS = 6 N D."""
+        from repro.models import registry
+        return registry.get(self.family).param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models import registry
+        return registry.get(self.family).active_param_count(self)
+
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ModelConfig],
+             smoke: Callable[[], ModelConfig]) -> None:
+    _REGISTRY[name] = full
+    _SMOKE[name] = smoke
+
+
+def get_config(name: str, *, smoke: bool = False) -> ModelConfig:
+    import repro.configs  # noqa: F401  (triggers per-arch registration)
+    table = _SMOKE if smoke else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,33 @@
+"""DeepSeek-V2-Lite 16B [arXiv:2405.04434; hf].
+27L d_model=2048 16H d_ff=1408(expert) vocab=102400, MLA kv_lora=512,
+2 shared + 64 routed experts top-6 (the "160 routed" in the pool line is the
+full-V2 figure; 64 is the Lite config — see DESIGN.md)."""
+from .base import MLACfg, ModelConfig, MoECfg, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b", family="moe",
+        n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+        d_ff=1408, vocab_size=102400,
+        moe=MoECfg(n_experts=64, top_k=6, d_expert=1408, n_shared=2),
+        mla=MLACfg(kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+                   v_head_dim=128, q_lora_rank=None),
+        rope_theta=10000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=64, vocab_size=512,
+        moe=MoECfg(n_experts=8, top_k=2, d_expert=64, n_shared=1,
+                   capacity_factor=2.0, group_tokens=64),
+        mla=MLACfg(kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                   v_head_dim=16, q_lora_rank=None),
+        dtype="float32", remat=False, q_chunk=32, kv_chunk=16,
+    )
+
+
+register("deepseek-v2-lite-16b", full, smoke)

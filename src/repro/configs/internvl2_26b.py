@@ -1,0 +1,27 @@
+"""InternVL2-26B [arXiv:2404.16821; hf] — InternViT + InternLM2 backbone.
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553; ViT frontend is a
+STUB (precomputed patch embeddings)."""
+from .base import ModelConfig, VLMCfg, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b", family="vlm",
+        n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+        d_ff=16384, vocab_size=92553,
+        vlm=VLMCfg(n_img_tokens=1024, img_embed_dim=3200),  # InternViT-6B width
+        rope_theta=1000000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512,
+        vlm=VLMCfg(n_img_tokens=8, img_embed_dim=32),
+        dtype="float32", remat=False, q_chunk=32, kv_chunk=16,
+    )
+
+
+register("internvl2-26b", full, smoke)

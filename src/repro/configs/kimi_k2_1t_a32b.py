@@ -1,0 +1,29 @@
+"""Kimi K2 — trillion-param MoE [arXiv:2501.kimi2; unverified].
+61L d_model=7168 64H (GQA kv=8) d_ff=2048(expert) vocab=163840, MoE 384e top-8.
+Assignment spec followed as given (GQA, not MLA); +1 shared expert per the
+published K2 config."""
+from .base import ModelConfig, MoECfg, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, head_dim=112,
+        d_ff=2048, vocab_size=163840,
+        moe=MoECfg(n_experts=384, top_k=8, d_expert=2048, n_shared=1),
+        rope_theta=50000.0, optimizer="adafactor",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=96, vocab_size=512,
+        moe=MoECfg(n_experts=8, top_k=2, d_expert=96, n_shared=1,
+                   capacity_factor=2.0, group_tokens=64),
+        dtype="float32", remat=False, q_chunk=32, kv_chunk=16,
+    )
+
+
+register("kimi-k2-1t-a32b", full, smoke)

@@ -1,0 +1,24 @@
+"""Qwen2-1.5B [arXiv:2407.10671; hf].
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936; QKV bias."""
+from .base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b", family="dense",
+        n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2, head_dim=128,
+        d_ff=8960, vocab_size=151936,
+        qkv_bias=True, rope_theta=1000000.0, tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512,
+        qkv_bias=True, dtype="float32", remat=False, q_chunk=32, kv_chunk=16,
+    )
+
+
+register("qwen2-1.5b", full, smoke)

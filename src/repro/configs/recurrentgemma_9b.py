@@ -1,0 +1,31 @@
+"""RecurrentGemma-9B (Griffin) [arXiv:2402.19427; unverified].
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000; RG-LRU + local
+attention (window 2048), pattern rec,rec,attn (1 attn : 2 recurrent).
+Sub-quadratic: runs the long_500k shape."""
+from .base import GriffinCfg, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b", family="griffin",
+        n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+        d_ff=12288, vocab_size=256000,
+        mlp="geglu",
+        griffin=GriffinCfg(lru_width=4096, conv_width=4, window=2048),
+        subquadratic=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b-smoke", family="griffin",
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=512,
+        mlp="geglu",
+        griffin=GriffinCfg(lru_width=64, conv_width=4, window=16),
+        subquadratic=True,
+        dtype="float32", remat=False, q_chunk=32, kv_chunk=16,
+    )
+
+
+register("recurrentgemma-9b", full, smoke)

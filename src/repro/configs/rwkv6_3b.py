@@ -1,0 +1,28 @@
+"""RWKV-6 "Finch" 3B [arXiv:2404.05892; hf].
+32L d_model=2560 (attention-free, 40 heads x 64) d_ff=8960 vocab=65536.
+Sub-quadratic: runs the long_500k shape (O(1) state decode)."""
+from .base import ModelConfig, RWKVCfg, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b", family="rwkv",
+        n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40, head_dim=64,
+        d_ff=8960, vocab_size=65536,
+        rwkv=RWKVCfg(head_dim=64, decay_lora=64, mix_lora=32),
+        subquadratic=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b-smoke", family="rwkv",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=512,
+        rwkv=RWKVCfg(head_dim=16, decay_lora=8, mix_lora=8),
+        subquadratic=True,
+        dtype="float32", remat=False, q_chunk=32, kv_chunk=16,
+    )
+
+
+register("rwkv6-3b", full, smoke)

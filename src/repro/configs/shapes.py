@@ -1,0 +1,34 @@
+"""Assigned input shapes (one set, shared by all 10 LM-family archs)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k":    ShapeSpec("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeSpec("long_500k",   524_288, 1,   "decode"),
+}
+
+
+def get_shape(name: str) -> ShapeSpec:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def cell_is_runnable(cfg, shape: ShapeSpec) -> tuple[bool, str]:
+    """Implements the assignment's skip rules: long_500k needs sub-quadratic
+    attention (SSM / hybrid archs only)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "skipped(full-attention arch; long_500k needs sub-quadratic)"
+    return True, ""

@@ -1,0 +1,26 @@
+"""StableLM-2 1.6B [hf:stabilityai/stablelm-2-1_6b; unverified].
+24L d_model=2048 32H (MHA kv=32) d_ff=5632 vocab=100352; LayerNorm, partial
+rotary (25%)."""
+from .base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-1.6b", family="dense",
+        n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+        d_ff=5632, vocab_size=100352,
+        norm="layernorm", rope_fraction=0.25, rope_theta=10000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-1.6b-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=512,
+        norm="layernorm", rope_fraction=0.25,
+        dtype="float32", remat=False, q_chunk=32, kv_chunk=16,
+    )
+
+
+register("stablelm-1.6b", full, smoke)

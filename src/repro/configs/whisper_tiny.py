@@ -1,0 +1,28 @@
+"""Whisper-tiny [arXiv:2212.04356; unverified].
+4L enc + 4L dec, d_model=384 6H d_ff=1536 vocab=51865; conv audio frontend is
+a STUB (precomputed frame embeddings)."""
+from .base import EncDecCfg, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny", family="encdec",
+        n_layers=4, d_model=384, n_heads=6, n_kv_heads=6, head_dim=64,
+        d_ff=1536, vocab_size=51865,
+        norm="layernorm", mlp="gelu", qkv_bias=True,
+        encdec=EncDecCfg(n_enc_layers=4, n_audio_ctx=1500),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny-smoke", family="encdec",
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=512,
+        norm="layernorm", mlp="gelu", qkv_bias=True,
+        encdec=EncDecCfg(n_enc_layers=2, n_audio_ctx=16),
+        dtype="float32", remat=False, q_chunk=32, kv_chunk=16,
+    )
+
+
+register("whisper-tiny", full, smoke)

@@ -1,0 +1,168 @@
+"""Distributed tensor–vector contraction (dTVC) — paper §4.1, Eqs. (1)–(2).
+
+The input tensor is split along one dimension ``s`` over a named mesh axis
+(1-D splitting: minimal communication, no unfolding, trivial reassembly).
+The contraction vector is harmlessly replicated (uv >> n_k), except in the
+suboptimal k = s case where each process contracts against its slice and the
+results are full-size partial sums requiring a collective reduction.
+
+API levels:
+
+* :func:`dtvc_local` — the per-shard computation with symbolic split/partial
+  bookkeeping (:class:`ShardState`); composable, used by dHOPM_3's chains.
+* :func:`dtvc` — global-array convenience wrapper: shard_map over the mesh
+  axis, optional assembly (⊔ all-gather for k != s, Σ all-reduce for k = s).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import collectives as coll
+from .mixed_precision import F32, Precision, get_policy
+from .tvc import tvc, tvc_shape
+
+__all__ = ["ShardState", "dtvc_local", "dtvc"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardState:
+    """Symbolic distribution state of a per-process tensor shard.
+
+    ``split``   — local dim along which the global tensor is split (None if
+                  the shard spans full extents).
+    ``partial`` — True when the local values are one summand of a pending
+                  global Σ (Eq. 2's delayed reduction).
+    """
+
+    split: int | None = None
+    partial: bool = False
+
+    def after_contraction(self, k: int, hit_split: bool) -> "ShardState":
+        if hit_split:
+            return ShardState(split=None, partial=True)
+        split = self.split
+        if split is not None and k < split:
+            split = split - 1
+        return ShardState(split=split, partial=self.partial)
+
+
+def dtvc_local(
+    A_loc: jax.Array,
+    x: jax.Array,
+    k: int,
+    state: ShardState,
+    *,
+    axis_name: str | None,
+    impl: str = "native",
+    prec: Precision | str = F32,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    y: jax.Array | None = None,
+) -> tuple[jax.Array, ShardState]:
+    """One TVC on a local shard; ``k`` is the *local* mode index of ``A_loc``.
+
+    When ``k == state.split`` (Eq. 2) the function slices ``x`` to this
+    process's range and marks the output partial — the global Σ is *delayed*
+    (Algorithm 1) until the caller reduces.
+    """
+    prec = get_policy(prec)
+    hit_split = state.split is not None and k == state.split
+    if hit_split:
+        if axis_name is None:
+            raise ValueError("split contraction requires a mesh axis")
+        chunk = A_loc.shape[k]
+        idx = lax.axis_index(axis_name)
+        x_use = lax.dynamic_slice_in_dim(x, idx * chunk, chunk)
+    else:
+        if x.shape[0] != A_loc.shape[k]:
+            raise ValueError(
+                f"x size {x.shape[0]} != local mode extent {A_loc.shape[k]}"
+            )
+        x_use = x
+    out = tvc(A_loc, x_use, k, alpha=alpha, beta=beta, y=y, impl=impl, prec=prec)
+    return out, state.after_contraction(k, hit_split)
+
+
+def _out_split_dim(k: int, s: int) -> int:
+    return s - 1 if s > k else s
+
+
+def dtvc(
+    A: jax.Array,
+    x: jax.Array,
+    k: int,
+    s: int,
+    mesh: jax.sharding.Mesh,
+    axis_name: str = "model",
+    *,
+    impl: str = "native",
+    prec: Precision | str = F32,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    y: jax.Array | None = None,
+    assemble: bool = True,
+) -> jax.Array:
+    """Global dTVC: Eq. (1) for k != s, Eq. (2) for k = s.
+
+    ``A.shape[s]`` must be divisible by the axis size (use
+    :func:`repro.core.splitting.plan_split_for_mesh` + zero padding upstream;
+    padding is exact for TVC).  With ``assemble=False`` and k != s the result
+    is returned still split along the output dim (the paper's strong
+    recommendation: keep outputs distributed).  k = s always reduces (the
+    delayed-reduction variant lives in :func:`dtvc_local` / dHOPM_3).
+    """
+    prec = get_policy(prec)
+    p = mesh.shape[axis_name]
+    if A.shape[s] % p:
+        raise ValueError(
+            f"split dim {s} extent {A.shape[s]} not divisible by axis "
+            f"'{axis_name}' size {p}; pad via plan_split_for_mesh first"
+        )
+    d = A.ndim
+    in_spec_A = P(*[axis_name if i == s else None for i in range(d)])
+    so = _out_split_dim(k, s)
+    split_out = P(*[axis_name if i == so else None for i in range(d - 1)])
+    have_y = y is not None
+    if have_y and assemble and k != s:
+        raise NotImplementedError(
+            "beta-update with assembled output: assemble first, then axpby"
+        )
+
+    if k == s:
+        out_spec, y_spec = P(), P()
+    else:
+        out_spec = P() if assemble else split_out
+        y_spec = split_out
+
+    def body(a_loc, x_full, *maybe_y):
+        y_loc = maybe_y[0] if maybe_y else None
+        if k == s:
+            out, _ = dtvc_local(
+                a_loc, x_full, k, ShardState(split=s), axis_name=axis_name,
+                impl=impl, prec=prec, alpha=alpha,
+            )
+            out = coll.mp_allreduce(out, axis_name, prec)
+            if y_loc is not None:
+                out = out + jnp.asarray(beta, prec.compute) * y_loc.astype(prec.compute)
+            return out.astype(prec.storage)
+        out, _ = dtvc_local(
+            a_loc, x_full, k, ShardState(split=s), axis_name=axis_name,
+            impl=impl, prec=prec, alpha=alpha,
+            beta=beta if y_loc is not None else 0.0, y=y_loc,
+        )
+        if assemble:
+            out = coll.all_gather_tiled(out, axis_name, axis=so)
+        return out
+
+    in_specs = (in_spec_A, P()) + ((y_spec,) if have_y else ())
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_spec, check_vma=False
+    )
+    args = (A, x) + ((y,) if have_y else ())
+    return jax.jit(fn)(*args)

@@ -1,0 +1,86 @@
+"""Mixed-precision policies (paper §5.5).
+
+The paper stores tensors in a *low* precision and promotes to a *high*
+precision immediately before arithmetic ("every arithmetic operation, besides
+accumulations, is done in high precision"), then demotes results back to the
+storage format.  Communication stays in the storage (wire) precision while
+sums accumulate in the compute precision — this required ad-hoc MPI functions
+in the paper; here it is realized by kernels that take
+``preferred_element_type`` accumulators and by the ppermute-based collectives
+in :mod:`repro.dist.collectives`.
+
+On TPU the paper's double/single pair maps to f32/bf16 (no f64 hardware);
+the f16 ("half") storage format of §5.5 is kept as well.  CPU-only tests can
+exercise f64 pairs by enabling jax_enable_x64 locally.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """A (storage, compute) dtype pair.
+
+    ``storage`` is the in-memory & on-wire format; ``compute`` is the
+    accumulation / arithmetic format.
+    """
+
+    storage: jnp.dtype
+    compute: jnp.dtype
+    name: str = ""
+
+    def promote(self, x):
+        return x.astype(self.compute) if x.dtype != self.compute else x
+
+    def demote(self, x):
+        return x.astype(self.storage) if x.dtype != self.storage else x
+
+    @property
+    def storage_bytes(self) -> int:
+        return jnp.dtype(self.storage).itemsize
+
+    @property
+    def compute_bytes(self) -> int:
+        return jnp.dtype(self.compute).itemsize
+
+
+# The paper's precision ladder, adapted to TPU dtypes.
+F32 = Precision(jnp.float32, jnp.float32, "single")             # paper: double
+BF16_F32 = Precision(jnp.bfloat16, jnp.float32, "brain-single")  # paper: brain-single
+F16_F32 = Precision(jnp.float16, jnp.float32, "half-single")     # paper: half-single
+F32_F32 = F32
+
+#: registry for CLI / config lookup
+POLICIES = {
+    "f32": F32,
+    "single": F32,
+    "bf16": BF16_F32,
+    "brain-single": BF16_F32,
+    "f16": F16_F32,
+    "half-single": F16_F32,
+}
+
+
+def get_policy(name_or_policy) -> Precision:
+    if isinstance(name_or_policy, Precision):
+        return name_or_policy
+    try:
+        return POLICIES[str(name_or_policy)]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision policy {name_or_policy!r}; "
+            f"choose from {sorted(POLICIES)}"
+        ) from None
+
+
+def f64_policy() -> Precision:
+    """Paper-faithful double precision; valid only with jax_enable_x64 (CPU)."""
+    return Precision(jnp.float64, jnp.float64, "double")
+
+
+def f32_f64_policy() -> Precision:
+    """Paper's single-double pair; valid only with jax_enable_x64 (CPU)."""
+    return Precision(jnp.float32, jnp.float64, "single-double")

@@ -1,0 +1,219 @@
+"""Tensor–vector contraction (TVC) — paper §2 and §4.1, single device.
+
+For a d-order tensor ``A`` in last-order (C) layout and contraction mode
+``k``, define ``u = prod(shape[:k])`` and ``v = prod(shape[k+1:])``.  The
+contiguous 3-D *view* ``A[u, n_k, v]`` is free (a reshape, never a copy) and
+
+    Y[u, v] = sum_k A[u, k, v] * x[k]            (arithmetic intensity 1–2)
+
+Three algorithms are provided, mirroring the paper's taxonomy:
+
+* ``native``   — the paper's mode-oblivious algorithm: one streaming pass over
+  the (u, n_k, v) view.  On TPU this dispatches to the Pallas kernel in
+  :mod:`repro.kernels`; elsewhere it is a single fused einsum with a
+  high-precision accumulator.
+* ``looped``   — the BLAS-2 baseline: one matvec for k = d-1, otherwise u
+  batched vector–matrix products (the cblas_gemv_batch_strided /
+  cublasGemvStridedBatched analogue).  Mode-aware, used as the baseline.
+* ``unfolded`` — transpose the tensor to move mode k last, materialize the
+  unfolding (extra data movement), then one single matvec.
+
+All variants honour the BLAS-style update ``Y = alpha * (A x_k x) + beta * Y``
+and a :class:`~repro.core.mixed_precision.Precision` policy (low-precision
+storage, high-precision accumulation).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .mixed_precision import F32, Precision, get_policy
+
+__all__ = [
+    "mode_uv",
+    "tvc_shape",
+    "tvc",
+    "tvc_bytes",
+    "IMPLS",
+]
+
+IMPLS = ("native", "looped", "unfolded", "pallas")
+
+
+def mode_uv(shape: Sequence[int], k: int) -> tuple[int, int, int]:
+    """(u, n_k, v) for contracting mode ``k`` of ``shape``."""
+    d = len(shape)
+    if not 0 <= k < d:
+        raise ValueError(f"mode k={k} out of range for order-{d} tensor")
+    u = math.prod(shape[:k])
+    v = math.prod(shape[k + 1:])
+    return u, shape[k], v
+
+
+def tvc_shape(shape: Sequence[int], k: int) -> tuple[int, ...]:
+    """Output shape: mode ``k`` removed."""
+    return tuple(shape[:k]) + tuple(shape[k + 1:])
+
+
+def tvc_bytes(shape: Sequence[int], k: int, itemsize: int, beta: float = 0.0) -> int:
+    """Streamed (touched) memory of one TVC: read A, read x, write Y
+    (+ read Y when beta != 0).  This is the denominator of the paper's
+    bandwidth metric."""
+    n = math.prod(shape)
+    nk = shape[k]
+    out = n // nk
+    y_traffic = out * (2 if beta else 1)
+    return (n + nk + y_traffic) * itemsize
+
+
+def _contract_core(a3, x, prec: Precision):
+    """Y[u,v] = sum_k A[u,k,v] x[k] with high-precision accumulation."""
+    return jnp.einsum(
+        "ukv,k->uv", a3, x, preferred_element_type=prec.compute
+    )
+
+
+def _native(a3, x, prec):
+    return _contract_core(a3, x, prec)
+
+
+def _looped(a3, x, prec):
+    u, nk, v = a3.shape
+    if v == 1:
+        # k = d-1: one matrix-vector multiplication over A^{u x n_k}.
+        a2 = a3.reshape(u, nk)
+        y = lax.dot_general(
+            a2, x, (((1,), (0,)), ((), ())), preferred_element_type=prec.compute
+        )
+        return y.reshape(u, 1)
+    # k < d-1: u independent vector-matrix multiplications x^T A^{n_k x v}.
+    def one(mat):  # (nk, v)
+        return lax.dot_general(
+            x, mat, (((0,), (0,)), ((), ())), preferred_element_type=prec.compute
+        )
+    return jax.vmap(one)(a3)  # (u, v)
+
+
+def _unfolded(a3, x, prec):
+    u, nk, v = a3.shape
+    # Materialize the k-mode unfolding A^{uv x n_k}: a genuine transpose (the
+    # paper's "additional computation and data movement").  The optimization
+    # barrier stops XLA from fusing the transpose into the matvec, keeping the
+    # algorithmic distinction observable.
+    unf = jnp.transpose(a3, (0, 2, 1)).reshape(u * v, nk)
+    unf = lax.optimization_barrier(unf)
+    y = lax.dot_general(
+        unf, x, (((1,), (0,)), ((), ())), preferred_element_type=prec.compute
+    )
+    return y.reshape(u, v)
+
+
+def tvc(
+    A: jax.Array,
+    x: jax.Array,
+    k: int,
+    *,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    y: jax.Array | None = None,
+    impl: str = "native",
+    prec: Precision | str = F32,
+):
+    """``Y = alpha * (A x_k x) + beta * Y`` — the paper's TVC (Eq. 1 local part).
+
+    ``A`` may be any order >= 1; ``x`` must have shape ``(A.shape[k],)``.
+    The result has ``A``'s shape with mode ``k`` removed and ``A``'s storage
+    dtype under policy ``prec``.
+    """
+    prec = get_policy(prec)
+    shape = A.shape
+    u, nk, v = mode_uv(shape, k)
+    if x.shape != (nk,):
+        raise ValueError(f"x shape {x.shape} incompatible with mode {k} of {shape}")
+    a3 = A.reshape(u, nk, v)
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops  # local import: optional dep cycle
+        y2 = kops.tvc_pallas(a3, x, prec=prec)
+    elif impl == "native":
+        y2 = _native(a3, x, prec)
+    elif impl == "looped":
+        y2 = _looped(a3, x, prec)
+    elif impl == "unfolded":
+        y2 = _unfolded(a3, x, prec)
+    else:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+
+    y2 = y2.astype(prec.compute)
+    if alpha != 1.0:
+        y2 = y2 * jnp.asarray(alpha, prec.compute)
+    if beta != 0.0:
+        if y is None:
+            raise ValueError("beta != 0 requires y")
+        y2 = y2 + jnp.asarray(beta, prec.compute) * y.reshape(u, v).astype(prec.compute)
+    out_dtype = A.dtype if prec.storage is None else prec.storage
+    return y2.reshape(tvc_shape(shape, k)).astype(out_dtype)
+
+
+def tvc2(
+    A: jax.Array,
+    x1: jax.Array,
+    k1: int,
+    x2: jax.Array,
+    k2: int,
+    *,
+    impl: str = "native",
+    prec: Precision | str = F32,
+):
+    """BEYOND-PAPER: fused two-mode contraction — one streaming pass computes
+    ``(A x_{k1} x1) x_{k2'} x2`` without materializing the order-(d-1)
+    intermediate, cutting the streamed memory of a contraction pair from
+    N + 2N/n_{k1} + N/(n_{k1} n_{k2}) to N + N/(n_{k1} n_{k2}).  Requires
+    k2 == k1 + 1 (HOPM chains contract consecutive modes).  On TPU this is
+    the Pallas kernel in repro.kernels (two sequential reduction grid dims).
+    """
+    if k2 != k1 + 1:
+        raise ValueError(f"tvc2 fuses adjacent modes only, got {k1},{k2}")
+    prec = get_policy(prec)
+    shape = A.shape
+    u = math.prod(shape[:k1])
+    n1, n2 = shape[k1], shape[k2]
+    v = math.prod(shape[k2 + 1:])
+    if x1.shape != (n1,) or x2.shape != (n2,):
+        raise ValueError("vector shapes incompatible with fused modes")
+    a4 = A.reshape(u, n1, n2, v)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y = kops.tvc2_pallas(a4, x1, x2, prec=prec)
+    else:
+        y = jnp.einsum("uabv,a,b->uv", a4, x1, x2,
+                       preferred_element_type=prec.compute)
+    out_shape = tuple(shape[:k1]) + tuple(shape[k2 + 1:])
+    return y.reshape(out_shape).astype(prec.storage)
+
+
+def tvc_chain(
+    A: jax.Array,
+    xs: Sequence[jax.Array],
+    modes: Sequence[int],
+    *,
+    impl: str = "native",
+    prec: Precision | str = F32,
+):
+    """Contract ``A`` along the given *global* modes (ascending or not) with
+    the matching vectors.  Mode indices refer to the original tensor; the
+    helper tracks the shift as dimensions disappear.  Used by HOPM.
+    """
+    prec = get_policy(prec)
+    remaining = list(range(A.ndim))
+    cur = A
+    for m in modes:
+        ax = remaining.index(m)
+        cur = tvc(cur, xs[m], ax, impl=impl, prec=prec)
+        remaining.pop(ax)
+    return cur

@@ -1,0 +1,2 @@
+"""Data substrate."""
+from .pipeline import DataConfig, SyntheticLMData  # noqa: F401

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+* :mod:`tvc_kernel` — the paper's native mode-oblivious TVC (HBM->VMEM
+  streaming, mixed-precision accumulator).
+* :mod:`axpby`      — the paper's §5.5 mixed-precision axpby.
+* :mod:`ops`        — jit'd wrappers (padding, dispatch, views).
+* :mod:`ref`        — pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401

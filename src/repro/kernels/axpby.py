@@ -1,0 +1,55 @@
+"""Mixed-precision axpby Pallas kernel (paper §5.5 caching snippet).
+
+``y := alpha*x + beta*y`` with *low-precision storage* and *high-precision
+compute*.  The paper's CPU version needs an explicit cache-line work array
+because software half-float conversion defeats vectorization; on TPU the
+promote/compute/demote pipeline is native vector work, and the VMEM block IS
+the cache-resident work array.  The kernel keeps the same contract: HBM
+traffic in the storage dtype, arithmetic in the compute dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.mixed_precision import F32, Precision, get_policy
+
+
+def _axpby_body(ab_ref, x_ref, y_ref, o_ref):
+    cdt = ab_ref.dtype
+    alpha = ab_ref[0, 0]
+    beta = ab_ref[0, 1]
+    o_ref[...] = (
+        alpha * x_ref[...].astype(cdt) + beta * y_ref[...].astype(cdt)
+    ).astype(o_ref.dtype)
+
+
+def axpby_padded(
+    alpha,
+    x: jax.Array,
+    beta,
+    y: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    block: tuple[int, int] = (8, 128),
+    interpret: bool = False,
+) -> jax.Array:
+    """x, y: 2-D arrays with block-multiple dims (wrapper pads/reshapes)."""
+    prec = get_policy(prec)
+    r, c = x.shape
+    br, bc = block
+    assert r % br == 0 and c % bc == 0, (x.shape, block)
+    ab = jnp.asarray([alpha, beta], prec.compute).reshape(1, 2)
+    return pl.pallas_call(
+        _axpby_body,
+        grid=(r // br, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), prec.storage),
+        interpret=interpret,
+    )(ab, x, y)

@@ -1,0 +1,148 @@
+"""Jit-ready wrappers around the Pallas kernels: zero-padding to block
+multiples (exact for contractions/sums), backend dispatch (compiled on TPU,
+interpret elsewhere), and view plumbing from arbitrary-order tensors."""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mixed_precision import F32, Precision, get_policy
+from . import axpby as _axpby
+from . import tvc_kernel as _tvc
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _pad_axis(a: jax.Array, axis: int, to: int) -> jax.Array:
+    pad = to - a.shape[axis]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _pick(block: int, dim: int, quantum: int) -> int:
+    """Shrink the block to the padded dim when the dim is small."""
+    return min(block, _round_up(dim, quantum))
+
+
+@partial(jax.jit, static_argnames=("prec", "bu", "bk", "bv", "interpret"))
+def tvc_pallas(
+    a3: jax.Array,
+    x: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    bu: int = 8,
+    bk: int = 128,
+    bv: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Mode-oblivious TVC on the (u, n_k, v) view.  Zero-pads every dim to a
+    block multiple (exact: padded rows/cols contribute zero), dispatches to
+    the matvec kernel when v == 1."""
+    prec = get_policy(prec)
+    if interpret is None:
+        interpret = _interpret_default()
+    u, nk, v = a3.shape
+
+    if v == 1:
+        a2 = a3.reshape(u, nk)
+        bu2 = _pick(8, u, 8)
+        bk2 = _pick(512, nk, 128)
+        a2 = _pad_axis(_pad_axis(a2, 0, _round_up(u, bu2)), 1, _round_up(nk, bk2))
+        xp = _pad_axis(x, 0, _round_up(nk, bk2))
+        y = _tvc.tvc2_padded(a2, xp, prec=prec, bu=bu2, bk=bk2, interpret=interpret)
+        return y[:u].reshape(u, 1)
+
+    bu_ = _pick(bu, u, 8)
+    bk_ = _pick(bk, nk, 8)
+    bv_ = _pick(bv, v, 128)
+    ap = a3
+    ap = _pad_axis(ap, 0, _round_up(u, bu_))
+    ap = _pad_axis(ap, 1, _round_up(nk, bk_))
+    ap = _pad_axis(ap, 2, _round_up(v, bv_))
+    xp = _pad_axis(x, 0, _round_up(nk, bk_))
+    y = _tvc.tvc3_padded(ap, xp, prec=prec, bu=bu_, bk=bk_, bv=bv_, interpret=interpret)
+    return y[:u, :v]
+
+
+def tvc(
+    A: jax.Array,
+    x: jax.Array,
+    k: int,
+    *,
+    prec: Precision | str = F32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Arbitrary-order mode-k TVC through the Pallas kernel."""
+    u = math.prod(A.shape[:k])
+    v = math.prod(A.shape[k + 1:])
+    y = tvc_pallas(A.reshape(u, A.shape[k], v), x, prec=get_policy(prec),
+                   interpret=interpret)
+    return y.reshape(A.shape[:k] + A.shape[k + 1:])
+
+
+@partial(jax.jit, static_argnames=("prec", "interpret"))
+def tvc2_pallas(
+    a4: jax.Array,
+    x1: jax.Array,
+    x2: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused two-mode contraction on the (u, n1, n2, v) view (zero-padded)."""
+    prec = get_policy(prec)
+    if interpret is None:
+        interpret = _interpret_default()
+    u, n1, n2, v = a4.shape
+    bu = _pick(8, u, 8)
+    b1 = _pick(8, n1, 8)
+    b2 = _pick(8, n2, 8)
+    bv = _pick(128, v, 128)
+    ap = a4
+    ap = _pad_axis(ap, 0, _round_up(u, bu))
+    ap = _pad_axis(ap, 1, _round_up(n1, b1))
+    ap = _pad_axis(ap, 2, _round_up(n2, b2))
+    ap = _pad_axis(ap, 3, _round_up(v, bv))
+    x1p = _pad_axis(x1, 0, _round_up(n1, b1))
+    x2p = _pad_axis(x2, 0, _round_up(n2, b2))
+    y = _tvc.tvc4_padded(ap, x1p, x2p, prec=prec, bu=bu, b1=b1, b2=b2, bv=bv,
+                         interpret=interpret)
+    return y[:u, :v]
+
+
+@partial(jax.jit, static_argnames=("prec", "interpret"))
+def axpby_pallas(
+    alpha,
+    x: jax.Array,
+    beta,
+    y: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Mixed-precision ``alpha*x + beta*y`` over arbitrary-shape arrays."""
+    prec = get_policy(prec)
+    if interpret is None:
+        interpret = _interpret_default()
+    shape = x.shape
+    n = math.prod(shape) if shape else 1
+    cols = 128
+    rows = _round_up(max(1, -(-n // cols)), 8)
+    flat = _pad_axis(x.reshape(-1), 0, rows * cols).reshape(rows, cols)
+    flaty = _pad_axis(y.reshape(-1), 0, rows * cols).reshape(rows, cols)
+    out = _axpby.axpby_padded(
+        alpha, flat, beta, flaty, prec=prec, block=(8, 128), interpret=interpret
+    )
+    return out.reshape(-1)[:n].reshape(shape)

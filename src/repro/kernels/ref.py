@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (interpret-mode validation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.mixed_precision import F32, Precision, get_policy
+
+
+def tvc3_ref(a3, x, prec: Precision | str = F32):
+    """Y[u,v] = sum_k A[u,k,v] x[k] with high-precision accumulation."""
+    prec = get_policy(prec)
+    y = jnp.einsum(
+        "ukv,k->uv",
+        a3.astype(prec.compute),
+        x.astype(prec.compute),
+        preferred_element_type=prec.compute,
+    )
+    return y.astype(prec.storage)
+
+
+def tvc_ref(A, x, k, prec: Precision | str = F32):
+    """Mode-k TVC oracle on an arbitrary-order tensor."""
+    import math
+
+    prec = get_policy(prec)
+    u = math.prod(A.shape[:k])
+    v = math.prod(A.shape[k + 1:])
+    y = tvc3_ref(A.reshape(u, A.shape[k], v), x, prec)
+    return y.reshape(A.shape[:k] + A.shape[k + 1:])
+
+
+def axpby_ref(alpha, x, beta, y, prec: Precision | str = F32):
+    """y := alpha*x + beta*y, promoted to compute dtype (paper §5.5 snippet)."""
+    prec = get_policy(prec)
+    out = (
+        jnp.asarray(alpha, prec.compute) * x.astype(prec.compute)
+        + jnp.asarray(beta, prec.compute) * y.astype(prec.compute)
+    )
+    return out.astype(prec.storage)

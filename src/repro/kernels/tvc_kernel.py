@@ -1,0 +1,201 @@
+"""Mode-oblivious native TVC as a Pallas TPU kernel.
+
+TPU adaptation of the paper's native algorithm (§2, §4.1): the tensor is
+interpreted through its free (u, n_k, v) view and streamed through VMEM
+exactly once, independent of the contraction mode k.  The paper's CPU kernel
+distributes the column space of A^{n_k x uv} over cores with 512-bit SIMD; the
+TPU analogue tiles (u, v) over the grid with (sublane, lane)-aligned VMEM
+blocks and reduces n_k over the minor (sequential) grid dimension,
+accumulating in a high-precision VMEM scratch (mixed precision §5.5: storage
+dtype on HBM, compute dtype in the accumulator).
+
+Two kernel bodies cover every mode with one streaming pass each:
+  * v > 1  : blocks (bu, bk, bv), lanes on v          (modes k < d-1)
+  * v == 1 : blocks (bu, bk),     lanes on n_k        (mode  k = d-1, matvec)
+
+The wrapper in :mod:`repro.kernels.ops` zero-pads to block multiples (exact
+for sums) and slices the result back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.mixed_precision import F32, Precision, get_policy
+
+
+def _compiler_params(n_parallel: int):
+    """dimension_semantics: parallel over output tiles, arbitrary over the
+    reduction dim (must stay sequential for accumulation)."""
+    try:
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel",) * n_parallel + ("arbitrary",)
+        )
+    except Exception:  # pragma: no cover - older/newer pallas API fallback
+        return None
+
+
+def _tvc3_body(x_ref, a_ref, y_ref, acc_ref, *, k_blocks: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(acc_ref.dtype)        # (bu, bk, bv)
+    xv = x_ref[...].astype(acc_ref.dtype)       # (1, bk)
+    acc_ref[...] += jnp.sum(a * xv[0][None, :, None], axis=1)
+
+    @pl.when(kk == k_blocks - 1)
+    def _emit():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def _tvc2_body(x_ref, a_ref, y_ref, acc_ref, *, k_blocks: int):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(acc_ref.dtype)        # (bu, bk)
+    xv = x_ref[...].astype(acc_ref.dtype)       # (1, bk)
+    acc_ref[...] += jnp.sum(a * xv, axis=1, keepdims=True)
+
+    @pl.when(kk == k_blocks - 1)
+    def _emit():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def tvc3_padded(
+    a3: jax.Array,
+    x: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    bu: int = 8,
+    bk: int = 128,
+    bv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y[u,v] = sum_k A[u,k,v] x[k]; dims must already be block multiples."""
+    prec = get_policy(prec)
+    u, nk, v = a3.shape
+    assert u % bu == 0 and nk % bk == 0 and v % bv == 0, (a3.shape, bu, bk, bv)
+    grid = (u // bu, v // bv, nk // bk)
+    kernel = functools.partial(_tvc3_body, k_blocks=grid[2])
+    params = _compiler_params(2)
+    kwargs = {"compiler_params": params} if (params and not interpret) else {}
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda i, j, kk: (0, kk)),
+            pl.BlockSpec((bu, bk, bv), lambda i, j, kk: (i, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bu, bv), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((u, v), prec.storage),
+        scratch_shapes=[pltpu.VMEM((bu, bv), prec.compute)],
+        interpret=interpret,
+        **kwargs,
+    )(x.reshape(1, nk), a3)
+
+
+def _tvc4_body(x1_ref, x2_ref, a_ref, y_ref, acc_ref, *, k1_blocks: int,
+               k2_blocks: int):
+    kk1 = pl.program_id(2)
+    kk2 = pl.program_id(3)
+
+    @pl.when((kk1 == 0) & (kk2 == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(acc_ref.dtype)          # (bu, b1, b2, bv)
+    x1 = x1_ref[...].astype(acc_ref.dtype)        # (1, b1)
+    x2 = x2_ref[...].astype(acc_ref.dtype)        # (1, b2)
+    w = x1[0][:, None] * x2[0][None, :]           # (b1, b2)
+    acc_ref[...] += jnp.einsum("uabv,ab->uv", a, w)
+
+    @pl.when((kk1 == k1_blocks - 1) & (kk2 == k2_blocks - 1))
+    def _emit():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def tvc4_padded(
+    a4: jax.Array,
+    x1: jax.Array,
+    x2: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    bu: int = 8,
+    b1: int = 8,
+    b2: int = 8,
+    bv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """BEYOND-PAPER fused pair: Y[u,v] = sum_{a,b} A[u,a,b,v] x1[a] x2[b] in
+    one streaming pass (two sequential reduction grid dims)."""
+    prec = get_policy(prec)
+    u, n1, n2, v = a4.shape
+    assert u % bu == 0 and n1 % b1 == 0 and n2 % b2 == 0 and v % bv == 0
+    grid = (u // bu, v // bv, n1 // b1, n2 // b2)
+    kernel = functools.partial(_tvc4_body, k1_blocks=grid[2], k2_blocks=grid[3])
+    params = _compiler_params(2)
+    kwargs = {}
+    if params is not None and not interpret:
+        try:
+            kwargs["compiler_params"] = pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel",
+                                     "arbitrary", "arbitrary"))
+        except Exception:  # pragma: no cover
+            pass
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, b1), lambda i, j, a, b: (0, a)),
+            pl.BlockSpec((1, b2), lambda i, j, a, b: (0, b)),
+            pl.BlockSpec((bu, b1, b2, bv), lambda i, j, a, b: (i, a, b, j)),
+        ],
+        out_specs=pl.BlockSpec((bu, bv), lambda i, j, a, b: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((u, v), prec.storage),
+        scratch_shapes=[pltpu.VMEM((bu, bv), prec.compute)],
+        interpret=interpret,
+        **kwargs,
+    )(x1.reshape(1, n1), x2.reshape(1, n2), a4)
+
+
+def tvc2_padded(
+    a2: jax.Array,
+    x: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    bu: int = 8,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y[u] = sum_k A[u,k] x[k] (the k = d-1 matvec); block-multiple dims."""
+    prec = get_policy(prec)
+    u, nk = a2.shape
+    assert u % bu == 0 and nk % bk == 0, (a2.shape, bu, bk)
+    grid = (u // bu, nk // bk)
+    kernel = functools.partial(_tvc2_body, k_blocks=grid[1])
+    params = _compiler_params(1)
+    kwargs = {"compiler_params": params} if (params and not interpret) else {}
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda i, kk: (0, kk)),
+            pl.BlockSpec((bu, bk), lambda i, kk: (i, kk)),
+        ],
+        out_specs=pl.BlockSpec((bu, 1), lambda i, kk: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u, 1), prec.storage),
+        scratch_shapes=[pltpu.VMEM((bu, 1), prec.compute)],
+        interpret=interpret,
+        **kwargs,
+    )(x.reshape(1, nk), a2)
+    return out

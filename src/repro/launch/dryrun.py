@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input-shape x
+mesh) cell on 512 placeholder devices, record memory_analysis /
+cost_analysis / collective schedule for EXPERIMENTS.md §Dry-run + §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out reports/dryrun.json]
+        [--debug-mesh]   # tiny (2,4) mesh for CI
+
+Every cell result is appended to the JSON incrementally, so a partial sweep
+is still usable.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.analysis.roofline import analyze_compiled  # noqa: E402
+from repro.configs import SHAPES, cell_is_runnable, get_config, list_archs  # noqa: E402
+from repro.dist.sharding import activation_sharding  # noqa: E402
+from repro.launch import specs as specs_mod  # noqa: E402
+from repro.launch.mesh import make_debug_mesh, make_production_mesh  # noqa: E402
+
+
+def _compile_costs(cfg, shape, mesh) -> dict:
+    """Lower+compile one config and return per-device cost numbers."""
+    from repro.analysis.roofline import collective_bytes
+    with activation_sharding(mesh):
+        fn, args = specs_mod.build_cell(cfg, shape, mesh)
+        with mesh:
+            compiled = jax.jit(fn).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0)),
+           "coll": coll}
+    del compiled
+    return out
+
+
+def _lin2(f1, f2, x1, x2, x):
+    """Linear extrapolation through (x1,f1),(x2,f2) evaluated at x."""
+    slope = (f2 - f1) / (x2 - x1)
+    return f1 + slope * (x - x1)
+
+
+def shadow_costs(cfg, shape, mesh) -> dict:
+    """Corrected per-device HLO flops/bytes/collective-bytes.
+
+    XLA cost_analysis counts while-loop bodies ONCE, so the scanned
+    production module undercounts by ~n_layers (and by the attention chunk
+    counts).  The shadow configs unroll the layer stack (at reduced L, full
+    width), use single-chunk attention, and extrapolate linearly in L (and in
+    S for the linear-time rwkv family whose time scan can only be unrolled at
+    small S).  Every number still comes from a compiled artifact.
+    """
+    import dataclasses as dc
+    fam = cfg.family
+    seq_extrap = fam == "rwkv" and shape.kind in ("train", "prefill")
+
+    def shadow(L, S):
+        c = dc.replace(
+            cfg, n_layers=L, unroll_layers=True,
+            time_scan_unroll=seq_extrap,
+            q_chunk=max(S, 16), kv_chunk=max(S, 16))
+        if cfg.moe is not None:
+            c = dc.replace(c, moe=dc.replace(
+                cfg.moe, group_tokens=max(shape.global_batch * S, 16)))
+        sh = dc.replace(shape, seq_len=S) if S != shape.seq_len else shape
+        return _compile_costs(c, sh, mesh)
+
+    def merge(vals, fn):
+        """Apply fn across the scalar fields incl. collective breakdown."""
+        out = {"flops": fn([v["flops"] for v in vals]),
+               "bytes": fn([v["bytes"] for v in vals])}
+        keys = vals[0]["coll"].keys()
+        out["coll"] = {k: max(0.0, fn([v["coll"][k] for v in vals]))
+                       for k in keys}
+        return out
+
+    S = shape.seq_len
+    if fam == "griffin":
+        pat = len(cfg.griffin.pattern)
+        n_super, tail = cfg.n_layers // pat, cfg.n_layers % pat
+        f1, f2 = shadow(pat, S), shadow(2 * pat, S)
+        parts = [f1, f2]
+        ftail = shadow(pat + tail, S) if tail else None
+
+        def combine(vs):
+            v1, v2 = vs[0], vs[1]
+            total = v1 + (n_super - 1) * (v2 - v1)
+            if ftail is not None:
+                total += vs[2] - vs[0]
+            return total
+
+        vals = [f1, f2] + ([ftail] if ftail else [])
+        return merge(vals, combine)
+
+    if seq_extrap:
+        S1, S2 = 8, 16
+        f11, f21 = shadow(1, S1), shadow(2, S1)
+        f12, f22 = shadow(1, S2), shadow(2, S2)
+
+        def combine(vs):
+            v11, v21, v12, v22 = vs
+            d = (v22 - v21 - v12 + v11) / ((2 - 1) * (S2 - S1))
+            b = (v21 - v11) / (2 - 1) - d * S1
+            c0 = (v12 - v11) / (S2 - S1) - d * 1
+            a = v11 - b * 1 - c0 * S1 - d * 1 * S1
+            return a + b * cfg.n_layers + c0 * S + d * cfg.n_layers * S
+
+        return merge([f11, f21, f12, f22], combine)
+
+    f1, f2 = shadow(1, S), shadow(2, S)
+    return merge([f1, f2], lambda vs: _lin2(vs[0], vs[1], 1, 2, cfg.n_layers))
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_tag: str,
+             smoke: bool = False, costs: bool = True,
+             cfg_overrides: dict | None = None) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch, smoke=smoke)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    runnable, why = cell_is_runnable(cfg, shape)
+    if not runnable:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "status": "skipped", "reason": why}
+    t0 = time.time()
+    try:
+        with activation_sharding(mesh):
+            fn, args = specs_mod.build_cell(cfg, shape, mesh)
+            with mesh:
+                lowered = jax.jit(fn).lower(*args)
+                compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        report = analyze_compiled(compiled, arch=arch, shape=shape,
+                                  mesh=mesh, cfg=cfg)
+        raw = {"flops": report.hlo_flops, "bytes": report.hlo_bytes,
+               "coll_bytes": report.coll_bytes}
+        del compiled, lowered
+        if costs:
+            corr = shadow_costs(cfg, shape, mesh)
+            report.hlo_flops = corr["flops"]
+            report.hlo_bytes = corr["bytes"]
+            report.coll_bytes = corr["coll"]["total"]
+            report.coll_breakdown = {k: v for k, v in corr["coll"].items()
+                                     if k != "total"}
+        out = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "status": "ok", "compile_s": round(time.time() - t0, 1),
+               "memory_analysis": {
+                   "argument_bytes": int(mem.argument_size_in_bytes),
+                   "output_bytes": int(mem.output_size_in_bytes),
+                   "temp_bytes": int(mem.temp_size_in_bytes),
+                   "code_bytes": int(mem.generated_code_size_in_bytes),
+               },
+               "raw_scanned_costs": raw,
+               "roofline": report.to_dict()}
+        return out
+    except Exception as e:  # noqa: BLE001 — cell failures are data
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "status": "error", "compile_s": round(time.time() - t0, 1),
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun.json")
+    ap.add_argument("--debug-mesh", action="store_true")
+    ap.add_argument("--smoke-configs", action="store_true")
+    ap.add_argument("--no-costs", action="store_true",
+                    help="skip the shadow cost compiles (proof-only pass)")
+    ap.add_argument("--opts", default="",
+                    help="comma list of perf toggles (see dist.sharding.KNOWN_OPTS)")
+    ap.add_argument("--remat-policy", default=None, choices=[None, "full", "dots"])
+    args = ap.parse_args()
+    cfg_overrides = {"remat_policy": args.remat_policy} if args.remat_policy else None
+    if args.opts:
+        from repro.dist.sharding import set_opts
+        set_opts(set(args.opts.split(",")))
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = []
+    if args.debug_mesh:
+        meshes.append(("debug2x4", make_debug_mesh()))
+    else:
+        if args.mesh in ("single", "both"):
+            meshes.append(("16x16", make_production_mesh(multi_pod=False)))
+        if args.mesh in ("multi", "both"):
+            meshes.append(("2x16x16", make_production_mesh(multi_pod=True)))
+
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = []
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "ok"}
+
+    for mesh_tag, mesh in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                if (arch, shape_name, mesh_tag) in done:
+                    continue
+                print(f"[dryrun] {arch} x {shape_name} x {mesh_tag} ...",
+                      flush=True)
+                # roofline costs are a single-pod deliverable; multi-pod pass
+                # is the sharding proof (§Dry-run)
+                want_costs = not args.no_costs and mesh_tag != "2x16x16"
+                res = run_cell(arch, shape_name, mesh, mesh_tag,
+                               smoke=args.smoke_configs, costs=want_costs,
+                               cfg_overrides=cfg_overrides)
+                print(f"  -> {res['status']}"
+                      + (f" ({res.get('compile_s')}s)"
+                         if "compile_s" in res else "")
+                      + (f" {res.get('reason', res.get('error', ''))}"
+                         if res["status"] != "ok" else ""), flush=True)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"])
+                           != (arch, shape_name, mesh_tag)]
+                results.append(res)
+                out_path.write_text(json.dumps(results, indent=1))
+
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {ok} ok, {sk} skipped, {err} errors -> {out_path}")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

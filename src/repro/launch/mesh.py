@@ -1,0 +1,29 @@
+"""Production meshes.  A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()[:need]
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for {shape}, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(
+        shape, axes, devices=devices,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CI-scale dry-run tests (8 virtual devices)."""
+    need = math.prod(shape)
+    return jax.make_mesh(
+        shape, axes, devices=jax.devices()[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))

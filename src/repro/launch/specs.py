@@ -1,0 +1,145 @@
+"""Abstract (ShapeDtypeStruct) inputs + step functions for every
+(architecture x input-shape x mesh) dry-run cell.  Nothing here allocates
+device memory: params/optimizer/cache are sharded ShapeDtypeStructs and the
+step functions are lowered with .lower(...) only."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.dist.sharding import cache_specs, named_shardings, param_specs
+from repro.models import extra_input_key, registry
+from repro.train import optimizer as opt_mod
+from repro.train.train_loop import TrainConfig
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _batch_entry(mesh: Mesh, b: int):
+    dp = _dp_axes(mesh)
+    sz = math.prod(mesh.shape[a] for a in dp)
+    if dp and b % sz == 0:
+        return dp if len(dp) > 1 else dp[0]
+    return None
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True):
+    mod = registry.get(cfg.family)
+    shapes = jax.eval_shape(lambda k: mod.init(cfg, k), jax.random.PRNGKey(0))
+    shardings = named_shardings(cfg, shapes, mesh, fsdp=fsdp)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def _opt_spec_from_param(pspec: P, pshape, sshape) -> P:
+    """Optimizer leaves mirror the param spec; factored stats drop dims."""
+    if len(sshape) == len(pshape):
+        return pspec
+    if len(sshape) == len(pshape) - 1:
+        # vr drops the last dim; vc drops the second-to-last
+        if tuple(sshape) == tuple(pshape[:-1]):
+            return P(*pspec[:-1]) if len(pspec) else P()
+        if tuple(sshape) == tuple(pshape[:-2] + pshape[-1:]):
+            ent = list(pspec[:-2]) + list(pspec[-1:]) if len(pspec) >= 2 else []
+            return P(*ent)
+    return P()
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh: Mesh, params_abs, ocfg):
+    pspecs = param_specs(cfg, params_abs, mesh)
+    shapes = jax.eval_shape(lambda: opt_mod.init(ocfg, params_abs))
+
+    def build(ps, pa, leaf_states):
+        out = {}
+        for name, s in leaf_states.items():
+            spec = _opt_spec_from_param(ps, pa.shape, s.shape)
+            out[name] = _sds(s.shape, s.dtype, mesh, spec)
+        return out
+
+    leaves = jax.tree.map(build, pspecs, params_abs, shapes["leaves"],
+                          is_leaf=lambda x: isinstance(x, P))
+    return {"step": _sds((), jnp.int32, mesh, P()), "leaves": leaves}
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                   seq_len: int | None = None):
+    b = shape.global_batch
+    s = seq_len if seq_len is not None else shape.seq_len
+    dpe = _batch_entry(mesh, b)
+    batch = {"tokens": _sds((b, s), jnp.int32, mesh, P(dpe))}
+    extra = extra_input_key(cfg)
+    if extra == "img_embeds":
+        d = cfg.vlm.img_embed_dim or cfg.d_model
+        batch[extra] = _sds((b, cfg.vlm.n_img_tokens, d), jnp.bfloat16, mesh, P(dpe))
+    elif extra == "audio_embeds":
+        batch[extra] = _sds((b, cfg.encdec.n_audio_ctx, cfg.d_model),
+                            jnp.bfloat16, mesh, P(dpe))
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int):
+    mod = registry.get(cfg.family)
+    shapes = jax.eval_shape(lambda: mod.init_cache(cfg, batch, max_seq))
+    specs = cache_specs(cfg, shapes, mesh)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    """Returns (fn, abstract_args) for the cell's step function:
+    train -> train_step; prefill -> prefill; decode -> one decode_step with a
+    full-length cache."""
+    mod = registry.get(cfg.family)
+    ocfg = opt_mod.OptConfig(kind=cfg.optimizer)
+    tcfg = TrainConfig(opt=ocfg, mode="gspmd")
+
+    if shape.kind == "train":
+        from repro.train.train_loop import make_train_step
+        step, _ = make_train_step(cfg, mesh, tcfg)
+        params = abstract_params(cfg, mesh)
+        opt_state = abstract_opt_state(cfg, mesh, params, ocfg)
+        batch = abstract_batch(cfg, shape, mesh)
+        return step, (params, opt_state, {}, batch)
+
+    # serving cells: optionally drop FSDP weight sharding (training layout
+    # != serving layout — no optimizer state to shard at inference)
+    from repro.dist.sharding import opt_enabled
+    serve_fsdp = not opt_enabled("serving_replicated_params")
+    params = abstract_params(cfg, mesh, fsdp=serve_fsdp)
+    if shape.kind == "prefill":
+        batch = abstract_batch(cfg, shape, mesh)
+        total_seq = shape.seq_len + (
+            cfg.vlm.n_img_tokens if cfg.family == "vlm" else 0)
+        cache = abstract_cache(cfg, mesh, shape.global_batch, total_seq)
+        extra = extra_input_key(cfg)
+
+        if extra:
+            def fn(p, tokens, cache, extra_in):
+                return mod.prefill(cfg, p, tokens, cache, extra_in)
+            return fn, (params, batch["tokens"], cache, batch[extra])
+
+        def fn(p, tokens, cache):
+            return mod.prefill(cfg, p, tokens, cache)
+        return fn, (params, batch["tokens"], cache)
+
+    # decode: one new token against a seq_len cache
+    b = shape.global_batch
+    cache = abstract_cache(cfg, mesh, b, shape.seq_len)
+    tokens1 = _sds((b, 1), jnp.int32, mesh, P(_batch_entry(mesh, b)))
+
+    def fn(p, cache, toks):
+        return mod.decode_step(cfg, p, cache, toks)
+    return fn, (params, cache, tokens1)

@@ -1,0 +1,85 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+        --steps 200 --batch 8 --seq 64 --mesh 1x1 [--mode dp_explicit]
+        [--compress] [--mp-wire bf16] [--ckpt-dir ckpts/run1]
+
+On the real cluster the same entry point runs under a (16,16) or (2,16,16)
+mesh; on this container use --mesh 1x1 (or a virtual-device XLA flag).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLMData
+from repro.dist.sharding import activation_sharding
+from repro.models import extra_input_key
+from repro.train import optimizer as opt_mod
+from repro.train.grad_compress import CompressorCfg
+from repro.train.train_loop import TrainConfig, train
+
+
+def parse_mesh(s: str):
+    dims = tuple(int(x) for x in s.split("x"))
+    axes = {1: ("data",), 2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
+    return jax.make_mesh(dims, axes,
+                         devices=jax.devices()[: int(__import__("math").prod(dims))],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--mode", default="gspmd", choices=["gspmd", "dp_explicit"])
+    ap.add_argument("--compress", action="store_true",
+                    help="dHOPM_3 gradient compression (dp_explicit mode)")
+    ap.add_argument("--compress-rank", type=int, default=4)
+    ap.add_argument("--compress-sweeps", type=int, default=2)
+    ap.add_argument("--mp-wire", default=None,
+                    help="mixed-precision gradient collectives, e.g. bf16")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = parse_mesh(args.mesh)
+    comp = None
+    if args.compress:
+        args.mode = "dp_explicit"
+        comp = CompressorCfg(rank=args.compress_rank, sweeps=args.compress_sweeps)
+    tcfg = TrainConfig(
+        opt=opt_mod.OptConfig(kind=cfg.optimizer, lr=args.lr,
+                              warmup_steps=max(2, args.steps // 20),
+                              total_steps=args.steps),
+        mode=args.mode, compression=comp, mp_wire=args.mp_wire,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+
+    extra = extra_input_key(cfg)
+    extra_shape = None
+    if extra == "img_embeds":
+        extra_shape = (cfg.vlm.n_img_tokens, cfg.vlm.img_embed_dim or cfg.d_model)
+    elif extra == "audio_embeds":
+        extra_shape = (cfg.encdec.n_audio_ctx, cfg.d_model)
+    data = SyntheticLMData(
+        DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0,
+                   extra_key=extra, extra_shape=extra_shape), mesh)
+
+    with activation_sharding(mesh):
+        params, opt_state, hist = train(
+            cfg, mesh, tcfg, data.iterate(0), args.steps,
+            log_every=args.log_every)
+    print(f"final loss: {hist[-1]['loss']:.4f} (first {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

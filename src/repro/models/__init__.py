@@ -1,0 +1,36 @@
+"""Model zoo: family -> module registry.  Every module implements
+init, forward, loss_fn, init_cache, prefill, decode_step,
+param_count, active_param_count (uniform API, pure functions over pytrees)."""
+from __future__ import annotations
+
+from . import encdec, griffin, rwkv, transformer
+
+
+class _Registry:
+    _map = {
+        "dense": transformer,
+        "moe": transformer,
+        "vlm": transformer,
+        "rwkv": rwkv,
+        "griffin": griffin,
+        "encdec": encdec,
+    }
+
+    def get(self, family: str):
+        try:
+            return self._map[family]
+        except KeyError:
+            raise KeyError(f"unknown model family {family!r}; "
+                           f"have {sorted(self._map)}") from None
+
+
+registry = _Registry()
+
+
+def extra_input_key(cfg) -> str | None:
+    """The stubbed-frontend input each family expects in its batch."""
+    if cfg.family == "vlm":
+        return "img_embeds"
+    if cfg.family == "encdec":
+        return "audio_embeds"
+    return None

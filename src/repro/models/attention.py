@@ -1,0 +1,141 @@
+"""Attention: memory-safe chunked (online-softmax / flash-style) attention
+for train & prefill, plus single-token decode against a KV cache.
+
+Layouts: q (B, KV, G, S, hd), k/v (B, KV, S, hd) — GQA groups G = H/KV kept
+as an explicit dim so kv is never materialized H-wide.  Scores and the
+softmax run in f32 (storage stays bf16), per the mixed-precision discipline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _ceil_to(n, m):
+    return -(-n // m) * m
+
+
+def chunked_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 2048,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Skv, hd).  Returns (B, H, Sq, hd).
+
+    Outer lax.map over q chunks, inner lax.scan over kv chunks with online
+    softmax — peak score memory is (B, H, Cq, Ck) regardless of sequence
+    length.  ``q_offset`` positions q tokens at ``q_offset + i`` within the
+    kv timeline (used by prefill-with-prefix and tests).
+    """
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    Skv = k.shape[2]
+    hdv = v.shape[-1]           # may differ from q/k head dim (MLA)
+    cq = min(q_chunk, Sq)
+    ck = min(kv_chunk, Skv)
+    # pad to chunk multiples (padded kv masked out; padded q rows sliced off)
+    Sq_p, Skv_p = _ceil_to(Sq, cq), _ceil_to(Skv, ck)
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sq_p - Sq), (0, 0)))
+    if Skv_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Skv_p - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Skv_p - Skv), (0, 0)))
+    nq, nk = Sq_p // cq, Skv_p // ck
+    qg = q.reshape(B, KV, G, Sq_p, hd)
+    scale = hd ** -0.5
+
+    kc = k.reshape(B, KV, nk, ck, hd)
+    vc = v.reshape(B, KV, nk, ck, hdv)
+
+    def do_q_chunk(iq):
+        qi = lax.dynamic_slice_in_dim(qg, iq * cq, cq, axis=3)  # (B,KV,G,cq,hd)
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ik, k_i, v_i = inputs
+            k_pos = ik * ck + jnp.arange(ck)
+            s = jnp.einsum("bkgqh,bkch->bkgqc", qi.astype(F32), k_i.astype(F32))
+            s = s * scale
+            mask = k_pos[None, :] < Skv  # mask kv padding
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bkch->bkgqh", p, v_i.astype(F32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, cq), NEG, F32)
+        l0 = jnp.zeros((B, KV, G, cq), F32)
+        a0 = jnp.zeros((B, KV, G, cq, hdv), F32)
+        ks = jnp.moveaxis(kc, 2, 0)  # (nk, B, KV, ck, hd)
+        vs = jnp.moveaxis(vc, 2, 0)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # cast INSIDE the chunk: the stacked (nq, B, KV, G, cq, hdv) buffer
+        # then lives in the storage dtype, halving its footprint (§Perf C4)
+        return out.astype(q.dtype)
+
+    outs = lax.map(do_q_chunk, jnp.arange(nq))      # (nq,B,KV,G,cq,hdv)
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, KV, G, Sq_p, hdv)
+    out = out.reshape(B, H, Sq_p, hdv)[:, :, :Sq]
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int | None = None):
+    """q: (B, H, 1, hd); caches: (B, KV, S, hd); cache_len: scalar number of
+    valid positions (the new token's kv must already be written).
+    Padded/unwritten positions are masked.  Returns (B, H, 1, hd)."""
+    B, H, _, hd = q.shape
+    KV = k_cache.shape[1]
+    G = H // KV
+    S = k_cache.shape[2]
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg.astype(F32), k_cache.astype(F32))
+    s = s * (hd ** -0.5)
+    pos = jnp.arange(S)
+    mask = pos[None, :] < cache_len
+    if window is not None:
+        mask &= pos[None, :] > cache_len - 1 - window
+    s = jnp.where(mask[None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", p, v_cache.astype(F32))
+    return out.reshape(B, H, 1, hd).astype(q.dtype)
+
+
+def reference_attention(q, k, v, *, causal=True, window=None, q_offset: int = 0):
+    """Dense oracle for tests (no chunking)."""
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    Skv = k.shape[2]
+    qg = q.reshape(B, KV, G, Sq, hd)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg.astype(F32), k.astype(F32)) * hd ** -0.5
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", p, v.astype(F32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)

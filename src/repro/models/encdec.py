@@ -1,0 +1,252 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, n_audio_ctx, d_model).  Encoder blocks are
+non-causal self-attention; decoder blocks are causal self-attention +
+cross-attention to the encoder output.  LayerNorm + GELU MLP + biases, learned
+positions replaced by fixed sinusoidal tables (backbone-equivalent compute).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain
+from .attention import chunked_attention, decode_attention
+from .layers import (
+    apply_mlp, apply_norm, cross_entropy, dense_init, embed_init, init_mlp,
+    init_norm, logits_from_hidden, scan_layers,
+)
+
+F32 = jnp.float32
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _sinusoid(length: int, channels: int):
+    pos = np.arange(length)[:, None]
+    dim = np.arange(channels // 2)[None]
+    inv = np.exp(-np.log(10000.0) * dim / max(1, channels // 2 - 1))
+    ang = pos * inv
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=1),
+                       jnp.float32)
+
+
+def _init_attn(key, cfg, dtype):
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (D, H * hd), dtype),
+        "bq": jnp.zeros((H * hd,), dtype),
+        "wk": dense_init(ks[1], (D, H * hd), dtype),
+        "wv": dense_init(ks[2], (D, H * hd), dtype),
+        "bv": jnp.zeros((H * hd,), dtype),
+        "wo": dense_init(ks[3], (H * hd, D), dtype),
+        "bo": jnp.zeros((D,), dtype),
+    }
+
+
+def _qkv(cfg, p, xq, xkv):
+    B, Sq, D = xq.shape
+    Skv = xkv.shape[1]
+    H, hd = cfg.n_heads, cfg.hd
+    q = (xq @ p["wq"] + p["bq"]).reshape(B, Sq, H, hd).transpose(0, 2, 1, 3)
+    k = (xkv @ p["wk"]).reshape(B, Skv, H, hd).transpose(0, 2, 1, 3)
+    v = (xkv @ p["wv"] + p["bv"]).reshape(B, Skv, H, hd).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _attn_out(cfg, p, out, B, S):
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ p["wo"] + p["bo"]
+
+
+def _init_enc_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_norm(cfg, dtype),
+        "attn": _init_attn(ks[0], cfg, dtype),
+        "ln2": init_norm(cfg, dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg, dtype),
+        "self": _init_attn(ks[0], cfg, dtype),
+        "ln_x": init_norm(cfg, dtype),
+        "cross": _init_attn(ks[1], cfg, dtype),
+        "ln2": init_norm(cfg, dtype),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def init(cfg, key):
+    dtype = _dtype(cfg)
+    e = cfg.encdec
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": {"tok": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dtype)},
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+            jax.random.split(ks[1], e.n_enc_layers)),
+        "enc_ln": init_norm(cfg, dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+            jax.random.split(ks[2], cfg.n_layers)),
+        "dec_ln": init_norm(cfg, dtype),
+    }
+
+
+def encode(cfg, params, audio_embeds):
+    """audio_embeds: (B, n_audio_ctx, D) — the stubbed conv frontend output."""
+    x = audio_embeds.astype(_dtype(cfg))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(h, lp):
+        u = apply_norm(cfg, lp["ln1"], h)
+        q, k, v = _qkv(cfg, lp["attn"], u, u)
+        out = chunked_attention(q, k, v, causal=False,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        h = h + _attn_out(cfg, lp["attn"], out, h.shape[0], h.shape[1])
+        h = h + apply_mlp(lp["mlp"], apply_norm(cfg, lp["ln2"], h), "gelu")
+        return h, None
+
+    x, _ = scan_layers(body, x, params["enc_layers"],
+                       unroll=cfg.unroll_layers, remat=cfg.remat)
+    return apply_norm(cfg, params["enc_ln"], x)
+
+
+def _dec_block(cfg, lp, h, enc_out, positions):
+    h = constrain(h, "dp", None, None)
+    u = apply_norm(cfg, lp["ln1"], h)
+    q, k, v = _qkv(cfg, lp["self"], u, u)
+    out = chunked_attention(q, k, v, causal=True,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    h = h + _attn_out(cfg, lp["self"], out, h.shape[0], h.shape[1])
+    u = apply_norm(cfg, lp["ln_x"], h)
+    q2, k2, v2 = _qkv(cfg, lp["cross"], u, enc_out)
+    out2 = chunked_attention(q2, k2, v2, causal=False,
+                             q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    h = h + _attn_out(cfg, lp["cross"], out2, h.shape[0], h.shape[1])
+    h = h + apply_mlp(lp["mlp"], apply_norm(cfg, lp["ln2"], h), "gelu")
+    return h, (k, v)
+
+
+def forward(cfg, params, tokens, audio_embeds=None):
+    """Teacher-forced training forward.  tokens: (B, S_dec)."""
+    enc_out = encode(cfg, params, audio_embeds)
+    B, S = tokens.shape
+    x = params["embed"]["tok"][tokens] + _sinusoid(S, cfg.d_model).astype(_dtype(cfg))
+    positions = jnp.arange(S)
+
+    def body(h, lp):
+        h, _ = _dec_block(cfg, lp, h, enc_out, positions)
+        return h, None
+
+    x, _ = scan_layers(body, x, params["dec_layers"],
+                       unroll=cfg.unroll_layers, remat=cfg.remat)
+    x = apply_norm(cfg, params["dec_ln"], x)
+    return logits_from_hidden(params["embed"], x, cfg.vocab_size), {"moe_aux": jnp.zeros((), F32)}
+
+
+def loss_fn(cfg, params, batch):
+    tokens = batch["tokens"]
+    logits, _ = forward(cfg, params, tokens, batch["audio_embeds"])
+    ce = cross_entropy(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
+    return ce, {"ce": ce}
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or _dtype(cfg)
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+    e = cfg.encdec
+    return {
+        "k": jnp.zeros((L, batch, H, max_seq, hd), dtype),
+        "v": jnp.zeros((L, batch, H, max_seq, hd), dtype),
+        "xk": jnp.zeros((L, batch, H, e.n_audio_ctx, hd), dtype),
+        "xv": jnp.zeros((L, batch, H, e.n_audio_ctx, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg, params, tokens, cache, audio_embeds=None):
+    """Encode audio, precompute cross-attention K/V, run the prompt."""
+    enc_out = encode(cfg, params, audio_embeds)
+    B, S = tokens.shape
+    x = params["embed"]["tok"][tokens] + _sinusoid(S, cfg.d_model).astype(_dtype(cfg))
+    positions = jnp.arange(S)
+
+    def body(h, lp):
+        h, kv = _dec_block(cfg, lp, h, enc_out, positions)
+        # cross K/V are prompt-independent; compute once
+        xk = (enc_out @ lp["cross"]["wk"]).reshape(
+            B, -1, cfg.n_heads, cfg.hd).transpose(0, 2, 1, 3)
+        xv = (enc_out @ lp["cross"]["wv"] + lp["cross"]["bv"]).reshape(
+            B, -1, cfg.n_heads, cfg.hd).transpose(0, 2, 1, 3)
+        return h, (kv[0], kv[1], xk, xv)
+
+    x, (k, v, xk, xv) = scan_layers(body, x, params["dec_layers"],
+                                    unroll=cfg.unroll_layers)
+    k = constrain(k, None, "dp", None, "sp", None)
+    v = constrain(v, None, "dp", None, "sp", None)
+    x = apply_norm(cfg, params["dec_ln"], x[:, -1:])
+    cache = dict(cache)
+    cache["k"] = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=3)
+    cache["v"] = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=3)
+    cache["xk"] = xk.astype(cache["xk"].dtype)
+    cache["xv"] = xv.astype(cache["xv"].dtype)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return cache, logits_from_hidden(params["embed"], x, cfg.vocab_size)
+
+
+def decode_step(cfg, params, cache, tokens_1):
+    B = tokens_1.shape[0]
+    pos = cache["pos"]
+    H, hd = cfg.n_heads, cfg.hd
+    x = params["embed"]["tok"][tokens_1]
+    x = x + lax.dynamic_slice_in_dim(
+        _sinusoid(cache["k"].shape[3], cfg.d_model), pos, 1, axis=0
+    ).astype(x.dtype)
+
+    def body(h, inputs):
+        lp, kc, vc, xk, xv = inputs
+        u = apply_norm(cfg, lp["ln1"], h)
+        q, k, v = _qkv(cfg, lp["self"], u, u)
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=2)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=2)
+        out = decode_attention(q, kc, vc, pos + 1)
+        h = h + _attn_out(cfg, lp["self"], out, B, 1)
+        u = apply_norm(cfg, lp["ln_x"], h)
+        q2 = (u @ lp["cross"]["wq"] + lp["cross"]["bq"]).reshape(
+            B, 1, H, hd).transpose(0, 2, 1, 3)
+        out2 = decode_attention(q2, xk, xv, xk.shape[2])
+        h = h + _attn_out(cfg, lp["cross"], out2, B, 1)
+        h = h + apply_mlp(lp["mlp"], apply_norm(cfg, lp["ln2"], h), "gelu")
+        return h, (kc, vc)
+
+    x, (kc, vc) = scan_layers(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]), unroll=cfg.unroll_layers)
+    x = apply_norm(cfg, params["dec_ln"], x)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = kc, vc
+    new_cache["pos"] = pos + 1
+    return new_cache, logits_from_hidden(params["embed"], x, cfg.vocab_size)
+
+
+def param_count(cfg) -> int:
+    D, H, hd, F = cfg.d_model, cfg.n_heads, cfg.hd, cfg.d_ff
+    attn = 4 * D * H * hd
+    mlp = 2 * D * F
+    enc = cfg.encdec.n_enc_layers * (attn + mlp)
+    dec = cfg.n_layers * (2 * attn + mlp)
+    return cfg.padded_vocab * D + enc + dec
+
+
+def active_param_count(cfg) -> int:
+    return param_count(cfg)

@@ -1,0 +1,358 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks
+interleaved 2:1 with local (windowed, MQA) attention.
+
+RG-LRU:  r_t = σ(W_a x_t + b_a),  i_t = σ(W_i x_t + b_i)
+         log a_t = -c · softplus(Λ) · r_t          (per channel)
+         h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The diagonal linear recurrence is evaluated with lax.associative_scan
+(log-depth parallel prefix) for train/prefill — the TPU-native alternative to
+the paper-family's sequential CUDA scan — and as a single fused step at
+decode.  Local attention uses a ring-buffer KV cache of one window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain, opt_enabled
+from .attention import chunked_attention
+from .layers import (
+    apply_norm, apply_rope, cross_entropy, dense_init, embed_init,
+    init_mlp, apply_mlp, init_norm, logits_from_hidden, scan_layers,
+)
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _counts(cfg):
+    """(n_super, n_tail): super-blocks follow cfg.griffin.pattern; the tail
+    layers (n_layers % len(pattern)) are recurrent blocks."""
+    pat = len(cfg.griffin.pattern)
+    return cfg.n_layers // pat, cfg.n_layers % pat
+
+
+# ---------------- blocks ----------------
+
+def _init_rec(key, cfg, dtype):
+    g = cfg.griffin
+    D, W = cfg.d_model, g.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": init_norm(cfg, dtype),
+        "w_gate": dense_init(ks[0], (D, W), dtype),
+        "w_x": dense_init(ks[1], (D, W), dtype),
+        "conv_w": dense_init(ks[2], (g.conv_width, W), dtype, scale=0.3),
+        "conv_b": jnp.zeros((W,), dtype),
+        "w_a": dense_init(ks[3], (W, W), dtype),
+        "b_a": jnp.zeros((W,), dtype),
+        "w_i": dense_init(ks[4], (W, W), dtype),
+        "b_i": jnp.zeros((W,), dtype),
+        "lam": jnp.full((W,), 1.0, F32),     # softplus(Λ) init ~ 1.3
+        "w_out": dense_init(ks[5], (W, D), dtype),
+        "mlp_ln": init_norm(cfg, dtype),
+        "mlp": init_mlp(jax.random.fold_in(key, 7), D, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def _init_attn_block(key, cfg, dtype):
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    KV = cfg.n_kv_heads  # 1 (MQA)
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": init_norm(cfg, dtype),
+        "wq": dense_init(ks[0], (D, H * hd), dtype),
+        "wk": dense_init(ks[1], (D, KV * hd), dtype),
+        "wv": dense_init(ks[2], (D, KV * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, D), dtype),
+        "mlp_ln": init_norm(cfg, dtype),
+        "mlp": init_mlp(ks[4], D, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def _conv1d(p, x, conv_state=None):
+    """Depthwise causal conv, width cw.  x: (B,S,W).  conv_state: (B,cw-1,W)
+    carry-in from the previous segment.  Returns (y, new_state)."""
+    cw = p["conv_w"].shape[0]
+    B, S, W = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, cw - 1, W), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)           # (B, S+cw-1, W)
+    y = sum(xp[:, i:i + S] * p["conv_w"][i] for i in range(cw)) + p["conv_b"]
+    return y.astype(x.dtype), xp[:, -(cw - 1):]
+
+
+def _rg_lru(p, x, h0, c: float):
+    """x: (B,S,W) f32; h0: (B,W) carry.  Parallel prefix over time."""
+    r = jax.nn.sigmoid((x @ p["w_a"].astype(F32)) + p["b_a"].astype(F32))
+    i = jax.nn.sigmoid((x @ p["w_i"].astype(F32)) + p["b_i"].astype(F32))
+    log_a = -c * jax.nn.softplus(p["lam"]) * r              # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x)
+    # fold the initial state into the first step: h_1 = a_1 h_0 + b_1
+    b = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = lax.associative_scan(combine, (a, b), axis=1)
+    return Bc, Bc[:, -1]                                     # (B,S,W), (B,W)
+
+
+def _rec_block(cfg, p, x, state):
+    """state: {"conv": (B,cw-1,W), "h": (B,W)}."""
+    g = cfg.griffin
+    u = apply_norm(cfg, p["ln"], x)
+    gate = jax.nn.gelu((u @ p["w_gate"]).astype(F32))
+    xb = u @ p["w_x"]
+    xb, conv_state = _conv1d(p, xb, state["conv"])
+    h, h_last = _rg_lru(p, xb.astype(F32), state["h"], g.lru_c)
+    y = ((gate * h).astype(x.dtype)) @ p["w_out"]
+    x = x + y
+    x = x + apply_mlp(p["mlp"], apply_norm(cfg, p["mlp_ln"], x), cfg.mlp)
+    return x, {"conv": conv_state, "h": h_last}
+
+
+def _attn_block(cfg, p, x, positions):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    u = apply_norm(cfg, p["ln"], x)
+    q = (u @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (u @ p["wk"]).reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    v = (u @ p["wv"]).reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=True, window=cfg.griffin.window,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    x = x + out @ p["wo"]
+    x = x + apply_mlp(p["mlp"], apply_norm(cfg, p["mlp_ln"], x), cfg.mlp)
+    return x, (k, v)
+
+
+# ---------------- model ----------------
+
+def init(cfg, key):
+    dtype = _dtype(cfg)
+    n_super, n_tail = _counts(cfg)
+    ks = jax.random.split(key, 4)
+
+    def init_super(k):
+        kk = jax.random.split(k, len(cfg.griffin.pattern))
+        return {
+            "rec": jax.vmap(lambda kx: _init_rec(kx, cfg, dtype))(
+                kk[: len(cfg.griffin.pattern) - 1]),
+            "attn": _init_attn_block(kk[-1], cfg, dtype),
+        }
+
+    params = {
+        "embed": {"tok": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dtype)},
+        "supers": jax.vmap(init_super)(jax.random.split(ks[1], n_super)),
+        "ln_f": init_norm(cfg, dtype),
+    }
+    if n_tail:
+        params["tail"] = jax.vmap(lambda kx: _init_rec(kx, cfg, dtype))(
+            jax.random.split(ks[2], n_tail))
+    return params
+
+
+def _zero_states(cfg, batch, dtype):
+    g = cfg.griffin
+    n_super, n_tail = _counts(cfg)
+    n_rec_per = len(g.pattern) - 1
+    W = g.lru_width
+    states = {
+        "conv": jnp.zeros((n_super, n_rec_per, batch, g.conv_width - 1, W), dtype),
+        "h": jnp.zeros((n_super, n_rec_per, batch, W), F32),
+    }
+    if n_tail:
+        states["tail_conv"] = jnp.zeros((n_tail, batch, g.conv_width - 1, W), dtype)
+        states["tail_h"] = jnp.zeros((n_tail, batch, W), F32)
+    return states
+
+
+def _run_layers(cfg, params, x, states, positions, collect_kv: bool):
+    n_super, n_tail = _counts(cfg)
+    n_rec_per = len(cfg.griffin.pattern) - 1
+
+    def super_body(carry, inputs):
+        h = carry
+        seq_role = "sp" if opt_enabled("seq_shard_activations") else None
+        h = constrain(h, "dp", seq_role, None)
+        sp, conv, hs = inputs
+
+        def rec_body(hh, rin):
+            rp, st_conv, st_h = rin
+            hh, new_st = _rec_block(cfg, rp, hh, {"conv": st_conv, "h": st_h})
+            return hh, (new_st["conv"], new_st["h"])
+
+        h, (new_conv, new_h) = scan_layers(rec_body, h, (sp["rec"], conv, hs),
+                                           unroll=cfg.unroll_layers)
+        h, kv = _attn_block(cfg, sp["attn"], h, positions)
+        outs = (new_conv, new_h) + ((kv,) if collect_kv else ())
+        return h, outs
+
+    x, outs = scan_layers(super_body, x,
+                          (params["supers"], states["conv"], states["h"]),
+                          unroll=cfg.unroll_layers, remat=cfg.remat,
+                          remat_policy=cfg.remat_policy)
+    new_states = {"conv": outs[0], "h": outs[1]}
+    kvs = outs[2] if collect_kv else None
+
+    if n_tail:
+        def tail_body(hh, rin):
+            rp, st_conv, st_h = rin
+            hh, new_st = _rec_block(cfg, rp, hh, {"conv": st_conv, "h": st_h})
+            return hh, (new_st["conv"], new_st["h"])
+
+        x, (tc, th) = scan_layers(
+            tail_body, x, (params["tail"], states["tail_conv"], states["tail_h"]),
+            unroll=cfg.unroll_layers)
+        new_states["tail_conv"] = tc
+        new_states["tail_h"] = th
+    return x, new_states, kvs
+
+
+def forward(cfg, params, tokens, img_embeds=None):
+    x = params["embed"]["tok"][tokens]
+    states = _zero_states(cfg, tokens.shape[0], _dtype(cfg))
+    x, _, _ = _run_layers(cfg, params, x, states, jnp.arange(x.shape[1]), False)
+    x = apply_norm(cfg, params["ln_f"], x)
+    return logits_from_hidden(params["embed"], x, cfg.vocab_size), {"moe_aux": jnp.zeros((), F32)}
+
+
+def loss_fn(cfg, params, batch):
+    tokens = batch["tokens"]
+    logits, _ = forward(cfg, params, tokens)
+    ce = cross_entropy(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
+    return ce, {"ce": ce}
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    """Recurrent states + one-window ring KV per attention layer + slot
+    position table (shared across layers)."""
+    dtype = dtype or _dtype(cfg)
+    g = cfg.griffin
+    n_super, _ = _counts(cfg)
+    W = min(g.window, max_seq)
+    cache = _zero_states(cfg, batch, dtype)
+    cache["k"] = jnp.zeros((n_super, batch, cfg.n_kv_heads, W, cfg.hd), dtype)
+    cache["v"] = jnp.zeros((n_super, batch, cfg.n_kv_heads, W, cfg.hd), dtype)
+    cache["slot_pos"] = jnp.full((W,), -1, jnp.int32)
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def prefill(cfg, params, tokens, cache, img_embeds=None):
+    x = params["embed"]["tok"][tokens]
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, new_states, kvs = _run_layers(cfg, params, x, cache, positions, True)
+    k_full, v_full = kvs                     # (n_super, B, KV, S, hd)
+    W = cache["k"].shape[3]
+    # last W positions into the ring buffer, slot = pos % W
+    take = min(W, S)
+    last_pos = positions[-take:]
+    slots = last_pos % W
+    cache = dict(cache)
+    cache.update(new_states)
+    cache["k"] = cache["k"].at[:, :, :, slots].set(k_full[:, :, :, -take:])
+    cache["v"] = cache["v"].at[:, :, :, slots].set(v_full[:, :, :, -take:])
+    cache["slot_pos"] = cache["slot_pos"].at[slots].set(last_pos)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    x = apply_norm(cfg, params["ln_f"], x[:, -1:])
+    return cache, logits_from_hidden(params["embed"], x, cfg.vocab_size)
+
+
+def _attn_decode(cfg, p, x_t, k_ring, v_ring, slot_pos, pos):
+    """Ring-buffer windowed MQA decode.  x_t: (B,1,D)."""
+    B = x_t.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    Wr = k_ring.shape[2]      # (B,KV,W,hd)
+    u = apply_norm(cfg, p["ln"], x_t)
+    q = (u @ p["wq"]).reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+    k = (u @ p["wk"]).reshape(B, 1, KV, hd).transpose(0, 2, 1, 3)
+    v = (u @ p["wv"]).reshape(B, 1, KV, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k = apply_rope(k, pos[None], cfg.rope_theta)
+    slot = pos % Wr
+    k_ring = lax.dynamic_update_slice_in_dim(k_ring, k.astype(k_ring.dtype), slot, axis=2)
+    v_ring = lax.dynamic_update_slice_in_dim(v_ring, v.astype(v_ring.dtype), slot, axis=2)
+    slot_pos = lax.dynamic_update_slice_in_dim(slot_pos, pos[None], slot, axis=0)
+    # positions define validity (window + written)
+    valid = (slot_pos >= 0) & (slot_pos > pos - Wr) & (slot_pos <= pos)
+    qg = q.reshape(B, KV, H // KV, hd)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg.astype(F32), k_ring.astype(F32)) * hd ** -0.5
+    s = jnp.where(valid[None, None, None], s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", w, v_ring.astype(F32))
+    out = out.reshape(B, 1, H * hd).astype(x_t.dtype) @ p["wo"]
+    x_t = x_t + out
+    x_t = x_t + apply_mlp(p["mlp"], apply_norm(cfg, p["mlp_ln"], x_t), cfg.mlp)
+    return x_t, k_ring, v_ring, slot_pos
+
+
+def decode_step(cfg, params, cache, tokens_1):
+    x = params["embed"]["tok"][tokens_1]
+    pos = cache["pos"]
+    n_super, n_tail = _counts(cfg)
+    slot_pos = cache["slot_pos"]
+
+    # single-token path reuses the segment machinery for rec blocks (S = 1)
+    def super_body(carry, inputs):
+        h, sp_state = carry
+        sp, conv, hs, k_ring, v_ring = inputs
+
+        def rec_body(hh, rin):
+            rp, st_conv, st_h = rin
+            hh, new_st = _rec_block(cfg, rp, hh, {"conv": st_conv, "h": st_h})
+            return hh, (new_st["conv"], new_st["h"])
+
+        h, (new_conv, new_h) = scan_layers(rec_body, h, (sp["rec"], conv, hs),
+                                           unroll=cfg.unroll_layers)
+        h, k_ring, v_ring, new_slot = _attn_decode(
+            cfg, sp["attn"], h, k_ring, v_ring, sp_state, pos)
+        return (h, new_slot), (new_conv, new_h, k_ring, v_ring)
+
+    (x, slot_pos), (conv, hs, kr, vr) = scan_layers(
+        super_body, (x, slot_pos),
+        (params["supers"], cache["conv"], cache["h"], cache["k"], cache["v"]),
+        unroll=cfg.unroll_layers)
+    new_cache = dict(cache)
+    new_cache.update({"conv": conv, "h": hs, "k": kr, "v": vr,
+                      "slot_pos": slot_pos, "pos": pos + 1})
+    if n_tail:
+        def tail_body(hh, rin):
+            rp, st_conv, st_h = rin
+            hh, new_st = _rec_block(cfg, rp, hh, {"conv": st_conv, "h": st_h})
+            return hh, (new_st["conv"], new_st["h"])
+        x, (tc, th) = scan_layers(
+            tail_body, x, (params["tail"], cache["tail_conv"], cache["tail_h"]),
+            unroll=cfg.unroll_layers)
+        new_cache["tail_conv"] = tc
+        new_cache["tail_h"] = th
+    x = apply_norm(cfg, params["ln_f"], x)
+    return new_cache, logits_from_hidden(params["embed"], x, cfg.vocab_size)
+
+
+def param_count(cfg) -> int:
+    g = cfg.griffin
+    D, W, F, hd = cfg.d_model, g.lru_width, cfg.d_ff, cfg.hd
+    n_super, n_tail = _counts(cfg)
+    n_rec = n_super * (len(g.pattern) - 1) + n_tail
+    mlp = (3 if cfg.mlp in ("swiglu", "geglu") else 2) * D * F
+    rec = 2 * D * W + g.conv_width * W + 2 * W * W + W * D + mlp
+    attn = D * cfg.n_heads * hd + 2 * D * cfg.n_kv_heads * hd + cfg.n_heads * hd * D + mlp
+    return cfg.padded_vocab * D + n_rec * rec + n_super * attn
+
+
+def active_param_count(cfg) -> int:
+    return param_count(cfg)

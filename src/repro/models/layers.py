@@ -1,0 +1,168 @@
+"""Shared model building blocks: norms, RoPE, MLPs, embeddings.
+
+Conventions:
+* params are nested dicts of jnp arrays; a parallel tree of PartitionSpecs is
+  produced by each model's ``param_specs``.
+* compute happens in f32 (norms, softmax, rotary) with bf16 storage, matching
+  the paper's storage-low/compute-high mixed-precision discipline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+def scan_layers(body, carry, xs_tree, *, unroll: bool = False,
+                remat: bool = False, remat_policy: str = "full"):
+    """lax.scan over stacked layer params, or a python loop when ``unroll``
+    (used by the dry-run cost shadows: XLA cost_analysis counts while-loop
+    bodies once, unrolled modules are counted correctly — and unroll-vs-scan
+    is itself a lowering trade-off knob)."""
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+    if not unroll:
+        return jax.lax.scan(body, carry, xs_tree)
+    L = jax.tree.leaves(xs_tree)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda a: a[i], xs_tree)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys_st = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys_st = None
+    return carry, ys_st
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, F32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, F32)).astype(dtype)
+
+
+# ---------------- norms ----------------
+
+def init_norm(cfg, dtype):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(cfg, p, x, eps: float = 1e-6):
+    xf = x.astype(F32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(F32) + p["bias"].astype(F32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(F32)
+    return out.astype(x.dtype)
+
+
+def rms_norm_simple(x, scale, eps: float = 1e-6):
+    xf = x.astype(F32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(F32)).astype(x.dtype)
+
+
+# ---------------- RoPE ----------------
+
+def rope_freqs(dim: int, theta: float):
+    return theta ** (-jnp.arange(0, dim, 2, dtype=F32) / dim)
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (..., S, hd); positions: (S,) or broadcastable.  Rotates the first
+    ``fraction`` of the head dim (partial rotary, stablelm-style)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    freqs = rope_freqs(rot, theta)                      # (rot/2,)
+    ang = positions.astype(F32)[..., None] * freqs       # (..., S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., 0::2].astype(F32), xr[..., 1::2].astype(F32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+# ---------------- MLPs ----------------
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = _split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {  # plain gelu (whisper)
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def apply_mlp(p, x, kind: str):
+    if kind in ("swiglu", "geglu"):
+        g = x @ p["w_gate"]
+        act = jax.nn.silu(g.astype(F32)) if kind == "swiglu" else jax.nn.gelu(g.astype(F32))
+        h = act.astype(x.dtype) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu((x @ p["w_up"] + p["b_up"]).astype(F32)).astype(x.dtype)
+    return h @ p["w_down"] + p["b_down"]
+
+
+def mlp_specs(kind: str, P, tp, fsdp):
+    if kind in ("swiglu", "geglu"):
+        return {"w_gate": P(fsdp, tp), "w_up": P(fsdp, tp), "w_down": P(tp, fsdp)}
+    return {"w_up": P(fsdp, tp), "b_up": P(tp), "w_down": P(tp, fsdp), "b_down": P(None)}
+
+
+# ---------------- embeddings / logits ----------------
+
+def init_embed(key, cfg, dtype):
+    return {"tok": embed_init(key, (cfg.padded_vocab, cfg.d_model), dtype)}
+
+
+def embed_tokens(p, tokens, d_model: int):
+    return p["tok"][tokens] * (d_model ** -0.5)
+
+
+def logits_from_hidden(p_embed, x, vocab_size: int, w_unembed=None):
+    w = p_embed["tok"] if w_unembed is None else w_unembed
+    logits = x @ w.T if w_unembed is None else x @ w
+    return logits  # padded vocab; mask in the loss
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Mean CE over tokens; padded vocab columns masked out."""
+    V = logits.shape[-1]
+    logits = logits.astype(F32)
+    if V > vocab_size:
+        neg = jnp.full((V - vocab_size,), -1e30, F32)
+        logits = logits.at[..., vocab_size:].add(neg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

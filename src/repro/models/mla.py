@@ -1,0 +1,119 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — compressed KV cache.
+
+Train/prefill: decompress the latent per kv-chunk and run standard MHA
+(chunked).  Decode: the *absorbed* formulation — W_uk folds into the query
+and W_uv into the output so attention runs entirely in the latent space; the
+cache holds only (kv_lora_rank + qk_rope_dim) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import chunked_attention
+from .layers import apply_rope, dense_init, rms_norm_simple
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_q": dense_init(ks[0], (D, H * qd), dtype),
+        "w_dkv": dense_init(ks[1], (D, m.kv_lora_rank + m.qk_rope_dim), dtype),
+        "ckv_scale": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_uk": dense_init(ks[2], (m.kv_lora_rank, H, m.qk_nope_dim), dtype),
+        "w_uv": dense_init(ks[3], (m.kv_lora_rank, H, m.v_head_dim), dtype),
+        "w_o": dense_init(ks[4], (H * m.v_head_dim, D), dtype),
+    }
+    return p
+
+
+def mla_specs(cfg, P, tp, fsdp):
+    return {
+        "w_q": P(fsdp, tp),
+        "w_dkv": P(fsdp, None),
+        "ckv_scale": P(None),
+        "w_uk": P(None, tp, None),
+        "w_uv": P(None, tp, None),
+        "w_o": P(tp, fsdp),
+    }
+
+
+def _project_latent(cfg, p, x, positions):
+    """x: (B,S,D) -> (c, k_rope): c (B,S,R) normalized latent,
+    k_rope (B,S,rope) position-encoded shared key."""
+    m = cfg.mla
+    ckv = x @ p["w_dkv"]                                   # (B,S,R+rope)
+    c = rms_norm_simple(ckv[..., : m.kv_lora_rank], p["ckv_scale"])
+    k_pe = ckv[..., m.kv_lora_rank:]
+    k_pe = apply_rope(k_pe, positions, cfg.rope_theta)
+    return c, k_pe
+
+
+def _queries(cfg, p, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = (x @ p["w_q"]).reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope = q[..., : m.qk_nope_dim]
+    # layout (B,S,H,rope): S is not second-to-last; give positions an H axis
+    q_pe = apply_rope(q[..., m.qk_nope_dim:], positions[:, None], cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_forward(cfg, p, x, positions):
+    """Full-sequence MLA (train / prefill compute).  Returns (out, (c, k_pe))
+    so prefill can store the compressed cache."""
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    c, k_pe = _project_latent(cfg, p, x, positions)
+    q_nope, q_pe = _queries(cfg, p, x, positions)
+    # Decompress keys/values (sharded over H under TP).
+    k_nope = jnp.einsum("bsr,rhn->bshn", c, p["w_uk"].astype(c.dtype))
+    v = jnp.einsum("bsr,rhv->bshv", c, p["w_uv"].astype(c.dtype))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None], (B, S, H, m.qk_rope_dim))], -1
+    )
+    q = jnp.concatenate([q_nope, q_pe], -1)
+    # MHA layout: (B, H, S, hd); KV == H (no GQA after decompression).
+    out = chunked_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+    )  # (B,H,S,v?) — note: v_head_dim == qk dims handled by attention shapes
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * m.v_head_dim)
+    return out @ p["w_o"], (c, k_pe)
+
+
+def mla_decode(cfg, p, x_t, cache_c, cache_pe, pos):
+    """Absorbed decode step.  x_t: (B,1,D); cache_c: (B,Smax,R);
+    cache_pe: (B,Smax,rope); pos: int32 scalar (index of the new token).
+    Returns (out (B,1,D), new_c (B,1,R), new_pe (B,1,rope))."""
+    m = cfg.mla
+    B = x_t.shape[0]
+    H = cfg.n_heads
+    positions = pos[None] if pos.ndim == 0 else pos
+    c_t, pe_t = _project_latent(cfg, p, x_t, positions)
+    q_nope, q_pe = _queries(cfg, p, x_t, positions)        # (B,1,H,*)
+    cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, c_t.astype(cache_c.dtype), pos, axis=1)
+    cache_pe = jax.lax.dynamic_update_slice_in_dim(cache_pe, pe_t.astype(cache_pe.dtype), pos, axis=1)
+
+    # absorb W_uk into q: (B,1,H,nope) x (R,H,nope) -> (B,H,R)
+    q_lat = jnp.einsum("bqhn,rhn->bhr", q_nope.astype(F32), p["w_uk"].astype(F32))
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat, cache_c.astype(F32))
+    s_pe = jnp.einsum("bqhp,bsp->bhs", q_pe.astype(F32), cache_pe.astype(F32))
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    s = (s_lat + s_pe) * scale
+    valid = jnp.arange(cache_c.shape[1])[None, :] <= pos
+    s = jnp.where(valid[:, None], s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, cache_c.astype(F32))          # latent ctx
+    out_h = jnp.einsum("bhr,rhv->bhv", ctx, p["w_uv"].astype(F32))    # absorb W_uv
+    out = out_h.reshape(B, 1, H * m.v_head_dim).astype(x_t.dtype) @ p["w_o"]
+    return out, cache_c, cache_pe

@@ -1,0 +1,159 @@
+"""Mixture-of-Experts with capacity-slot dispatch (EP over the TP axis).
+
+Design (see DESIGN.md §4): under tensor parallelism the token activations are
+replicated across the `model` axis, so experts sharded over `model` (EP) need
+NO all-to-all — each shard gathers the tokens routed to its local experts and
+the per-token combine ends in the same single psum a row-parallel dense MLP
+needs.  Dispatch is sort-based (argsort + capacity slots), never
+materializing the (T, E, C) one-hot of GShard — at 384 experts that tensor is
+intractable.  Token groups of ``group_tokens`` bound the (E, C, d) gather.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense_init
+
+F32 = jnp.float32
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), F32),  # router kept in f32
+        "w_gate": dense_init(ks[1], (E, D, F), dtype),
+        "w_up": dense_init(ks[2], (E, D, F), dtype),
+        "w_down": dense_init(ks[3], (E, F, D), dtype),
+    }
+    if m.n_shared:
+        from .layers import init_mlp
+        p["shared"] = init_mlp(ks[4], D, F * m.n_shared, "swiglu", dtype)
+    return p
+
+
+def moe_specs(cfg, P, tp, fsdp):
+    m = cfg.moe
+    specs = {
+        "router": P(fsdp, None),
+        "w_gate": P(tp, fsdp, None),
+        "w_up": P(tp, fsdp, None),
+        "w_down": P(tp, None, fsdp),
+    }
+    if m.n_shared:
+        from .layers import mlp_specs
+        specs["shared"] = mlp_specs("swiglu", P, tp, fsdp)
+    return specs
+
+
+def _capacity(g: int, k: int, E: int, factor: float) -> int:
+    c = int(g * k / E * factor) + 1
+    return max(8, -(-c // 8) * 8)
+
+
+def _dispatch_group(xg, idx, w, E: int, C: int):
+    """xg: (g, D); idx/w: (g, K) routing.  Returns (xe, tbl, wtbl):
+    xe (E, C, D) gathered tokens, tbl (E, C) token ids (g = padding row),
+    wtbl (E, C) combine weights."""
+    g, K = idx.shape
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e)                     # stable
+    se = flat_e[order]
+    # rank within each expert's run of sorted entries
+    pos = jnp.arange(g * K) - jnp.searchsorted(se, se, side="left")
+    tok = order // K
+    wflat = w.reshape(-1)[order]
+    tbl = jnp.full((E, C), g, jnp.int32)
+    wtbl = jnp.zeros((E, C), F32)
+    # capacity overflow (pos >= C) handled by scatter mode="drop"
+    tbl = tbl.at[se, pos].set(tok.astype(jnp.int32), mode="drop")
+    wtbl = wtbl.at[se, pos].set(wflat, mode="drop")
+    xg_pad = jnp.concatenate([xg, jnp.zeros((1, xg.shape[1]), xg.dtype)], 0)
+    xe = xg_pad[tbl]                                # (E, C, D)
+    return xe, tbl, wtbl
+
+
+def _expert_ffn(p, xe):
+    """xe: (E, C, D) -> (E, C, D), batched SwiGLU over the expert dim."""
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = jax.nn.silu(gate.astype(F32)).astype(xe.dtype) * up
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def apply_moe(cfg, p, x):
+    """x: (T, D) -> (T, D), plus the load-balance aux loss."""
+    m = cfg.moe
+    T, D = x.shape
+    E, K = m.n_experts, m.top_k
+    logits = (x.astype(F32) @ p["router"]).astype(F32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, K)                             # (T, K)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)      # renormalize top-k
+
+    # load-balance aux (Switch-style): E * sum_e f_e * p_e
+    counts = jnp.zeros((E,), F32).at[idx.reshape(-1)].add(1.0)
+    f = counts / (T * K)
+    pbar = probs.mean(0)
+    aux = E * jnp.sum(f * pbar)
+
+    g = min(m.group_tokens, T)
+    n_groups = -(-T // g)
+    Tp = n_groups * g
+    if Tp != T:
+        x_p = jnp.pad(x, ((0, Tp - T), (0, 0)))
+        idx_p = jnp.pad(idx, ((0, Tp - T), (0, 0)))
+        w_p = jnp.pad(w, ((0, Tp - T), (0, 0)))  # zero weight: no contribution
+    else:
+        x_p, idx_p, w_p = x, idx, w
+    C = _capacity(g, K, E, m.capacity_factor)
+
+    # combine dtype: f32 by default; bf16 when the moe_bf16_combine toggle is
+    # on — the cross-shard EP psum then rides the wire at half the bytes
+    # (per-token accumulation depth is only top_k, so bf16 is safe)
+    from repro.dist.sharding import opt_enabled
+    comb_dt = x.dtype if opt_enabled("moe_bf16_combine") else F32
+
+    def per_group(args):
+        xg, ig, wg = args
+        xe, tbl, wtbl = _dispatch_group(xg, ig, wg, E, C)
+        ye = _expert_ffn(p, xe)                              # (E, C, D)
+        out = jnp.zeros((g + 1, D), comb_dt)
+        out = out.at[tbl].add((ye.astype(F32) * wtbl[..., None]).astype(comb_dt))
+        return out[:g]
+
+    xs = (x_p.reshape(n_groups, g, D),
+          idx_p.reshape(n_groups, g, K),
+          w_p.reshape(n_groups, g, K))
+    if n_groups == 1:
+        routed = per_group((xs[0][0], xs[1][0], xs[2][0]))
+    else:
+        routed = lax.map(per_group, xs).reshape(Tp, D)[:T]
+    routed = routed.astype(x.dtype)
+
+    if m.n_shared:
+        from .layers import apply_mlp
+        routed = routed + apply_mlp(p["shared"], x, "swiglu")
+    return routed, aux
+
+
+def moe_ref(cfg, p, x):
+    """Dense oracle: run every expert on every token, combine by routing
+    weights.  O(T*E) — tests only."""
+    m = cfg.moe
+    T, D = x.shape
+    logits = (x.astype(F32) @ p["router"]).astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, m.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    ye = _expert_ffn(p, jnp.broadcast_to(x[None], (m.n_experts, T, D)))  # (E,T,D)
+    full_w = jnp.zeros((T, m.n_experts), F32)
+    full_w = full_w.at[jnp.arange(T)[:, None], idx].set(w)
+    out = jnp.einsum("te,etd->td", full_w, ye.astype(F32)).astype(x.dtype)
+    if m.n_shared:
+        from .layers import apply_mlp
+        out = out + apply_mlp(p["shared"], x, "swiglu")
+    return out

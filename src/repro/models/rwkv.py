@@ -1,0 +1,238 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay (arXiv:2404.05892).
+
+Time-mix: token-shift with data-dependent (LoRA) interpolation across the
+five streams (w,k,v,r,g), per-channel data-dependent decay w̄ = exp(-exp(w)),
+and the WKV6 state recurrence
+
+    o_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ);   S_t = diag(w̄_t) S_{t-1} + k_t v_tᵀ
+
+implemented as a lax.scan over time (the state (B,H,hd,hd) is the "KV cache":
+O(1) in sequence length, which is why this arch runs the long_500k shape).
+Channel-mix: token-shift + squared-ReLU FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain, opt_enabled
+from .layers import cross_entropy, dense_init, embed_init, logits_from_hidden, scan_layers
+
+F32 = jnp.float32
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _heads(cfg):
+    hd = cfg.rwkv.head_dim
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def init(cfg, key):
+    dtype = _dtype(cfg)
+    D = cfg.d_model
+    H, hd = _heads(cfg)
+    r = cfg.rwkv
+    ks = jax.random.split(key, 4)
+
+    def init_layer(k):
+        kk = jax.random.split(k, 12)
+        return {
+            "ln1": {"scale": jnp.ones((D,), dtype), "bias": jnp.zeros((D,), dtype)},
+            "ln2": {"scale": jnp.ones((D,), dtype), "bias": jnp.zeros((D,), dtype)},
+            "att": {
+                # data-dependent token-shift mixing (5 streams via LoRA)
+                "maa_x": jnp.zeros((D,), dtype),
+                "maa_base": jnp.zeros((5, D), dtype),
+                "maa_w1": dense_init(kk[0], (D, 5 * r.mix_lora), dtype),
+                "maa_w2": dense_init(kk[1], (5, r.mix_lora, D), dtype, scale=0.01),
+                # decay LoRA
+                "decay_base": jnp.full((D,), -6.0, dtype),
+                "decay_w1": dense_init(kk[2], (D, r.decay_lora), dtype),
+                "decay_w2": dense_init(kk[3], (r.decay_lora, D), dtype, scale=0.01),
+                "bonus_u": jnp.zeros((H, hd), dtype),
+                "wr": dense_init(kk[4], (D, D), dtype),
+                "wk": dense_init(kk[5], (D, D), dtype),
+                "wv": dense_init(kk[6], (D, D), dtype),
+                "wg": dense_init(kk[7], (D, D), dtype),
+                "wo": dense_init(kk[8], (D, D), dtype),
+                "ln_x_scale": jnp.ones((D,), dtype),
+                "ln_x_bias": jnp.zeros((D,), dtype),
+            },
+            "ffn": {
+                "mu_k": jnp.full((D,), 0.5, dtype),
+                "mu_r": jnp.full((D,), 0.5, dtype),
+                "wk": dense_init(kk[9], (D, cfg.d_ff), dtype),
+                "wv": dense_init(kk[10], (cfg.d_ff, D), dtype),
+                "wr": dense_init(kk[11], (D, D), dtype),
+            },
+        }
+
+    layers = jax.vmap(init_layer)(jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "embed": {"tok": embed_init(ks[0], (cfg.padded_vocab, D), dtype)},
+        "ln0": {"scale": jnp.ones((D,), dtype), "bias": jnp.zeros((D,), dtype)},
+        "layers": layers,
+        "ln_f": {"scale": jnp.ones((D,), dtype), "bias": jnp.zeros((D,), dtype)},
+    }
+
+
+def _ln(x, p, eps=1e-5):
+    xf = x.astype(F32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * lax.rsqrt(var + eps) * p["scale"].astype(F32)
+            + p["bias"].astype(F32)).astype(x.dtype)
+
+
+def _group_norm_heads(x, scale, bias, H, eps=1e-5):
+    """Per-head layernorm of (..., H*hd) features (RWKV's GroupNorm(H))."""
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (H, shp[-1] // H)).astype(F32)
+    mu = xh.mean(-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * lax.rsqrt(var + eps)
+    out = xh.reshape(shp) * scale.astype(F32) + bias.astype(F32)
+    return out.astype(x.dtype)
+
+
+def _time_mix_streams(p, x, sx):
+    """x, sx: (B, S, D) current and previous tokens.  Returns the five
+    mixed streams (w, k, v, r, g), each (B, S, D)."""
+    dx = sx - x
+    xxx = x + dx * p["maa_x"]
+    lora = jnp.tanh(xxx @ p["maa_w1"])                     # (B,S,5*ml)
+    B, S, _ = lora.shape
+    ml = p["maa_w2"].shape[1]
+    lora = lora.reshape(B, S, 5, ml).transpose(2, 0, 1, 3)  # (5,B,S,ml)
+    deltas = jnp.einsum("nbsm,nmd->nbsd", lora, p["maa_w2"])
+    mixed = [x + dx * (p["maa_base"][i] + deltas[i]) for i in range(5)]
+    return mixed  # [xw, xk, xv, xr, xg]
+
+
+def _decay(p, xw):
+    w = p["decay_base"].astype(F32) + jnp.tanh(xw @ p["decay_w1"]).astype(F32) @ p["decay_w2"].astype(F32)
+    return jnp.exp(-jnp.exp(w))          # in (0,1), per channel
+
+
+def _wkv_scan(r, k, v, wbar, u, state, unroll=False):
+    """r,k,v,wbar: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) carry.
+    Returns (out (B,S,H,hd), final_state)."""
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp           # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]            # (B,H,hd,hd)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S_ + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S_ + kv
+        return S_new, o
+
+    seq = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+           v.transpose(1, 0, 2, 3), wbar.transpose(1, 0, 2, 3))
+    state, out = lax.scan(step, state, seq, unroll=r.shape[1] if unroll else 1)
+    return out.transpose(1, 0, 2, 3), state
+
+
+def _time_mix(cfg, p, x, sx_last, state):
+    """x: (B,S,D); sx_last: (B,D) last token of the previous segment;
+    state: (B,H,hd,hd).  Returns (out, new_sx_last, new_state)."""
+    B, S, D = x.shape
+    H, hd = _heads(cfg)
+    sx = jnp.concatenate([sx_last[:, None], x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _time_mix_streams(p, x, sx)
+    wbar = _decay(p, xw).reshape(B, S, H, hd)
+    r = (xr @ p["wr"]).reshape(B, S, H, hd).astype(F32)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd).astype(F32)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd).astype(F32)
+    g = jax.nn.silu((xg @ p["wg"]).astype(F32))
+    out, state = _wkv_scan(r, k, v, wbar, p["bonus_u"].astype(F32), state,
+                           unroll=cfg.time_scan_unroll)
+    out = out.reshape(B, S, D)
+    out = _group_norm_heads(out, p["ln_x_scale"], p["ln_x_bias"], H)
+    out = (out.astype(F32) * g).astype(x.dtype) @ p["wo"]
+    return out, x[:, -1], state
+
+
+def _channel_mix(p, x, sx_last):
+    sx = jnp.concatenate([sx_last[:, None], x[:, :-1]], axis=1)
+    xk = x + (sx - x) * p["mu_k"]
+    xr = x + (sx - x) * p["mu_r"]
+    h = jnp.square(jax.nn.relu((xk @ p["wk"]).astype(F32))).astype(x.dtype)
+    return jax.nn.sigmoid((xr @ p["wr"]).astype(F32)).astype(x.dtype) * (h @ p["wv"]), x[:, -1]
+
+
+def _segment(cfg, params, x, cache):
+    """Run all layers over a segment x (B,S,D), threading recurrent caches.
+    cache: {"att_x": (L,B,D), "ffn_x": (L,B,D), "wkv": (L,B,H,hd,hd)}."""
+    def body(h, inputs):
+        lp, att_x, ffn_x, wkv = inputs
+        seq_role = "sp" if opt_enabled("seq_shard_activations") else None
+        h = constrain(h, "dp", seq_role, None)
+        a, att_x, wkv = _time_mix(cfg, lp["att"], _ln(h, lp["ln1"]), att_x, wkv)
+        h = h + a
+        f, ffn_x = _channel_mix(lp["ffn"], _ln(h, lp["ln2"]), ffn_x)
+        return h + f, (att_x, ffn_x, wkv)
+
+    x, (att_x, ffn_x, wkv) = scan_layers(
+        body, x, (params["layers"], cache["att_x"], cache["ffn_x"], cache["wkv"]),
+        unroll=cfg.unroll_layers, remat=cfg.remat,
+        remat_policy=cfg.remat_policy)
+    return x, {"att_x": att_x, "ffn_x": ffn_x, "wkv": wkv, "pos": cache["pos"] + x.shape[1]}
+
+
+def _zero_cache(cfg, batch, dtype):
+    H, hd = _heads(cfg)
+    L, D = cfg.n_layers, cfg.d_model
+    return {
+        "att_x": jnp.zeros((L, batch, D), dtype),
+        "ffn_x": jnp.zeros((L, batch, D), dtype),
+        "wkv": jnp.zeros((L, batch, H, hd, hd), F32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def forward(cfg, params, tokens, img_embeds=None):
+    x = _ln(params["embed"]["tok"][tokens], params["ln0"])
+    cache = _zero_cache(cfg, tokens.shape[0], _dtype(cfg))
+    x, _ = _segment(cfg, params, x, cache)
+    x = _ln(x, params["ln_f"])
+    return logits_from_hidden(params["embed"], x, cfg.vocab_size), {"moe_aux": jnp.zeros((), F32)}
+
+
+def loss_fn(cfg, params, batch):
+    tokens = batch["tokens"]
+    logits, _ = forward(cfg, params, tokens)
+    ce = cross_entropy(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
+    return ce, {"ce": ce}
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    # state-space cache: O(1) in max_seq (that's the point of this family)
+    return _zero_cache(cfg, batch, dtype or _dtype(cfg))
+
+
+def prefill(cfg, params, tokens, cache, img_embeds=None):
+    x = _ln(params["embed"]["tok"][tokens], params["ln0"])
+    x, cache = _segment(cfg, params, x, cache)
+    x = _ln(x[:, -1:], params["ln_f"])
+    return cache, logits_from_hidden(params["embed"], x, cfg.vocab_size)
+
+
+def decode_step(cfg, params, cache, tokens_1):
+    cache, logits = prefill(cfg, params, tokens_1, cache)
+    return cache, logits
+
+
+def param_count(cfg) -> int:
+    D, L, F = cfg.d_model, cfg.n_layers, cfg.d_ff
+    r = cfg.rwkv
+    att = 5 * D * D + D * 5 * r.mix_lora + 5 * r.mix_lora * D + D * r.decay_lora + r.decay_lora * D
+    ffn = D * F + F * D + D * D
+    return cfg.padded_vocab * D + L * (att + ffn)
+
+
+def active_param_count(cfg) -> int:
+    return param_count(cfg)

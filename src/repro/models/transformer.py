@@ -1,0 +1,302 @@
+"""Decoder-only transformer LM covering the dense / GQA / MoE / MLA / VLM
+families (kimi-k2, deepseek-v2-lite, stablelm, qwen2, llama3, granite,
+internvl2).  Layers run under lax.scan with stacked per-layer params
+(small HLO, fast 512-device compiles) and optional remat.
+
+Caches: GQA -> (L, B, KV, S, hd) k/v; MLA -> (L, B, S, R) + (L, B, S, rope).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain, opt_enabled
+from . import mla as mla_mod
+from . import moe as moe_mod
+from .attention import chunked_attention, decode_attention
+from .layers import (
+    apply_mlp, apply_norm, apply_rope, cross_entropy, dense_init, embed_init,
+    init_mlp, init_norm, logits_from_hidden, scan_layers,
+)
+
+F32 = jnp.float32
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# -------------------- init --------------------
+
+def _init_attn(key, cfg, dtype):
+    if cfg.mla is not None:
+        return {"mla": mla_mod.init_mla(key, cfg, dtype)}
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), dtype),
+        "wk": dense_init(ks[1], (D, KV * hd), dtype),
+        "wv": dense_init(ks[2], (D, KV * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, D), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _init_ffn(key, cfg, dtype):
+    if cfg.moe is not None:
+        return moe_mod.init_moe(key, cfg, dtype)
+    return init_mlp(key, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+
+
+def _init_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_norm(cfg, dtype),
+        "ln2": init_norm(cfg, dtype),
+        "attn": _init_attn(ks[0], cfg, dtype),
+        "ffn": _init_ffn(ks[1], cfg, dtype),
+    }
+
+
+def init(cfg, key):
+    dtype = _dtype(cfg)
+    k_embed, k_layers, k_extra = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": {"tok": embed_init(k_embed, (cfg.padded_vocab, cfg.d_model), dtype)},
+        "layers": layers,
+        "ln_f": init_norm(cfg, dtype),
+    }
+    if cfg.vlm is not None:
+        img_d = cfg.vlm.img_embed_dim or cfg.d_model
+        params["img_proj"] = dense_init(k_extra, (img_d, cfg.d_model), dtype)
+    return params
+
+
+# -------------------- forward --------------------
+
+def _attn_full(cfg, lp, x, positions):
+    """Full-sequence attention (train/prefill). Returns (out, kv_for_cache)."""
+    if cfg.mla is not None:
+        return mla_mod.mla_forward(cfg, lp["mla"], x, positions)
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ lp["wq"]
+    k = x @ lp["wk"]
+    v = x @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    out = chunked_attention(q, k, v, causal=True, window=cfg.window,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return out @ lp["wo"], (k, v)
+
+
+def _ffn(cfg, lp, x):
+    """Returns (out, aux)."""
+    if cfg.moe is not None:
+        B, S, D = x.shape
+        out, aux = moe_mod.apply_moe(cfg, lp, x.reshape(B * S, D))
+        return out.reshape(B, S, D), aux
+    return apply_mlp(lp, x, cfg.mlp), jnp.zeros((), F32)
+
+
+def _block(cfg, lp, x, positions):
+    # SP: seq-shard the residual stream between blocks when enabled
+    seq_role = "sp" if opt_enabled("seq_shard_activations") else None
+    x = constrain(x, "dp", seq_role, None)
+    a, kv = _attn_full(cfg, lp["attn"], apply_norm(cfg, lp["ln1"], x), positions)
+    x = x + a
+    f, aux = _ffn(cfg, lp["ffn"], apply_norm(cfg, lp["ln2"], x))
+    return x + f, aux, kv
+
+
+def _embed_inputs(cfg, params, tokens, img_embeds=None):
+    x = params["embed"]["tok"][tokens]
+    if cfg.vlm is not None and img_embeds is not None:
+        img = img_embeds.astype(x.dtype) @ params["img_proj"]
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def forward(cfg, params, tokens, img_embeds=None):
+    """tokens: (B, S) -> logits (B, S_total, Vpad), aux dict."""
+    x = _embed_inputs(cfg, params, tokens, img_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(carry, lp):
+        h, aux = carry
+        h2, a, _ = _block(cfg, lp, h, positions)
+        return (h2, aux + a), None
+
+    (x, aux), _ = scan_layers(body, (x, jnp.zeros((), F32)), params["layers"],
+                              unroll=cfg.unroll_layers, remat=cfg.remat,
+                              remat_policy=cfg.remat_policy)
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = logits_from_hidden(params["embed"], x, cfg.vocab_size)
+    logits = constrain(logits, "dp", None, "tp")
+    return logits, {"moe_aux": aux / max(1, cfg.n_layers)}
+
+
+def loss_fn(cfg, params, batch):
+    """batch: {"tokens": (B,S) int32, ["img_embeds"]}.  Next-token CE over
+    the text positions."""
+    tokens = batch["tokens"]
+    logits, aux = forward(cfg, params, tokens, batch.get("img_embeds"))
+    if cfg.vlm is not None and "img_embeds" in batch:
+        n_img = batch["img_embeds"].shape[1]
+        logits = logits[:, n_img:]
+    ce = cross_entropy(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    return ce + aux_w * aux["moe_aux"], {"ce": ce, **aux}
+
+
+# -------------------- caches / decode --------------------
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or _dtype(cfg)
+    L = cfg.n_layers
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c": jnp.zeros((L, batch, max_seq, m.kv_lora_rank), dtype),
+            "pe": jnp.zeros((L, batch, max_seq, m.qk_rope_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((L, batch, cfg.n_kv_heads, max_seq, cfg.hd), dtype),
+        "v": jnp.zeros((L, batch, cfg.n_kv_heads, max_seq, cfg.hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg, params, tokens, cache, img_embeds=None):
+    """Run the full prompt, write the cache, return (cache, last_logits)."""
+    x = _embed_inputs(cfg, params, tokens, img_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(carry, lp):
+        h = carry
+        h2, _, kv = _block(cfg, lp, h, positions)
+        # cache layout: sequence-shard the KV timeline over the model axis (SP)
+        if cfg.mla is not None:
+            kv = (constrain(kv[0], "dp", "sp", None),
+                  constrain(kv[1], "dp", "sp", None))
+        else:
+            kv = (constrain(kv[0], "dp", None, "sp", None),
+                  constrain(kv[1], "dp", None, "sp", None))
+        return h2, kv
+
+    x, kvs = scan_layers(body, x, params["layers"], unroll=cfg.unroll_layers)
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = logits_from_hidden(params["embed"], x[:, -1:], cfg.vocab_size)
+
+    if cfg.mla is not None:
+        c, pe = kvs  # (L,B,S,R), (L,B,S,rope)
+        cache = dict(cache)
+        cache["c"] = lax.dynamic_update_slice_in_dim(
+            cache["c"], c.astype(cache["c"].dtype), 0, axis=2)
+        cache["pe"] = lax.dynamic_update_slice_in_dim(
+            cache["pe"], pe.astype(cache["pe"].dtype), 0, axis=2)
+    else:
+        k, v = kvs  # (L,B,KV,S,hd)
+        cache = dict(cache)
+        cache["k"] = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=3)
+        cache["v"] = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=3)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return cache, logits
+
+
+def _attn_decode(cfg, lp, x_t, layer_cache, pos):
+    if cfg.mla is not None:
+        out, c_new, pe_new = mla_mod.mla_decode(
+            cfg, lp["mla"], x_t, layer_cache["c"], layer_cache["pe"], pos)
+        return out, {"c": c_new, "pe": pe_new}
+    B = x_t.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x_t @ lp["wq"]
+    k = x_t @ lp["wk"]
+    v = x_t @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    positions = pos[None]
+    q = apply_rope(q.reshape(B, 1, H, hd).transpose(0, 2, 1, 3),
+                   positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k.reshape(B, 1, KV, hd).transpose(0, 2, 1, 3),
+                   positions, cfg.rope_theta, cfg.rope_fraction)
+    v = v.reshape(B, 1, KV, hd).transpose(0, 2, 1, 3)
+    kc = lax.dynamic_update_slice_in_dim(
+        layer_cache["k"], k.astype(layer_cache["k"].dtype), pos, axis=2)
+    vc = lax.dynamic_update_slice_in_dim(
+        layer_cache["v"], v.astype(layer_cache["v"].dtype), pos, axis=2)
+    out = decode_attention(q, kc, vc, pos + 1, window=cfg.window)
+    out = out.reshape(B, H * hd) @ lp["wo"]
+    return out[:, None], {"k": kc, "v": vc}
+
+
+def decode_step(cfg, params, cache, tokens_1):
+    """tokens_1: (B, 1).  One token for every sequence in the batch."""
+    x = params["embed"]["tok"][tokens_1]          # (B,1,D)
+    pos = cache["pos"]
+
+    cache_layers = {k: v for k, v in cache.items() if k != "pos"}
+
+    def body(h, inputs):
+        lp, lc = inputs
+        a, new_lc = _attn_decode(cfg, lp["attn"], apply_norm(cfg, lp["ln1"], h), lc, pos)
+        h = h + a
+        f, _ = _ffn(cfg, lp["ffn"], apply_norm(cfg, lp["ln2"], h))
+        return h + f, new_lc
+
+    x, new_layers = scan_layers(body, x, (params["layers"], cache_layers),
+                                unroll=cfg.unroll_layers)
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = logits_from_hidden(params["embed"], x, cfg.vocab_size)
+    new_cache = dict(new_layers)
+    new_cache["pos"] = pos + 1
+    return new_cache, logits
+
+
+# -------------------- bookkeeping --------------------
+
+def param_count(cfg) -> int:
+    D, H, KV, hd, L = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    if cfg.mla is not None:
+        m = cfg.mla
+        attn = (D * H * (m.qk_nope_dim + m.qk_rope_dim)
+                + D * (m.kv_lora_rank + m.qk_rope_dim)
+                + m.kv_lora_rank * H * (m.qk_nope_dim + m.v_head_dim)
+                + H * m.v_head_dim * D)
+    else:
+        attn = D * H * hd + 2 * D * KV * hd + H * hd * D
+    if cfg.moe is not None:
+        mo = cfg.moe
+        ffn = D * mo.n_experts + 3 * D * mo.d_expert * mo.n_experts
+        ffn += 3 * D * mo.d_expert * mo.n_shared
+    else:
+        ffn = (3 if cfg.mlp in ("swiglu", "geglu") else 2) * D * cfg.d_ff
+    return cfg.padded_vocab * D + L * (attn + ffn)
+
+
+def active_param_count(cfg) -> int:
+    if cfg.moe is None:
+        return param_count(cfg)
+    D, L = cfg.d_model, cfg.n_layers
+    mo = cfg.moe
+    dense = param_count(cfg) - L * 3 * D * mo.d_expert * mo.n_experts
+    return dense + L * 3 * D * mo.d_expert * mo.top_k

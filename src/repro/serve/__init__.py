@@ -1,0 +1,2 @@
+"""Serving substrate: batched decode engine + sampling."""
+from .engine import DecodeEngine  # noqa: F401

@@ -1,0 +1,27 @@
+"""Token sampling: greedy / temperature / top-k, vocab-padding aware."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def sample(logits, rng, *, vocab_size: int, temperature: float = 0.0,
+           top_k: int | None = None):
+    """logits: (B, 1, Vpad) or (B, Vpad) -> tokens (B, 1) int32."""
+    if logits.ndim == 3:
+        logits = logits[:, -1]
+    logits = logits.astype(F32)
+    V = logits.shape[-1]
+    if V > vocab_size:  # never sample padding columns
+        mask = jnp.arange(V) >= vocab_size
+        logits = jnp.where(mask[None], -1e30, logits)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    logits = logits / temperature
+    if top_k is not None and top_k < V:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        kth = vals[:, -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)[:, None]

@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, dHOPM_3 gradient compression, data
+pipeline, checkpoint/restart, and the train-step builders."""

@@ -1,0 +1,116 @@
+"""Optimizers (built here, no optax): AdamW with fp32 state, and an
+Adafactor-style factored-second-moment mode so the 405B/1T configs' optimizer
+state fits in 16 GB/chip (see DESIGN.md §6).  Pure functions over pytrees;
+state shards like the params (GSPMD propagates the param specs)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    min_lr_frac: float = 0.1
+    # adafactor specifics
+    factored_min_dim: int = 128
+    clip_rms: float = 1.0
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(F32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def _is_factored(shape, cfg: OptConfig) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= cfg.factored_min_dim
+            and shape[-2] >= cfg.factored_min_dim)
+
+
+def init(cfg: OptConfig, params) -> dict:
+    def leaf_state(p):
+        if cfg.kind == "adamw":
+            return {"m": jnp.zeros(p.shape, F32), "v": jnp.zeros(p.shape, F32)}
+        if _is_factored(p.shape, cfg):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], F32),          # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32),  # col stats
+            }
+        return {"v": jnp.zeros(p.shape, F32)}
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "leaves": jax.tree.map(leaf_state, params),
+    }
+
+
+def global_norm(tree):
+    sq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(F32))), tree, jnp.zeros((), F32))
+    return jnp.sqrt(sq)
+
+
+def update(cfg: OptConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"]
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.ones((), F32)
+    t = (step + 1).astype(F32)
+
+    def upd(p, g, s):
+        g = g.astype(F32) * scale
+        if cfg.kind == "adamw":
+            m = cfg.b1 * s["m"] + (1 - cfg.b1) * g
+            v = cfg.b2 * s["v"] + (1 - cfg.b2) * g * g
+            mhat = m / (1 - cfg.b1 ** t)
+            vhat = v / (1 - cfg.b2 ** t)
+            step_dir = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            new_s = {"m": m, "v": v}
+        else:  # adafactor (factored RMS, momentum-free)
+            b2 = 1.0 - t ** -0.8
+            g2 = g * g + 1e-30
+            if "vr" in s:
+                vr = b2 * s["vr"] + (1 - b2) * g2.mean(axis=-1)
+                vc = b2 * s["vc"] + (1 - b2) * g2.mean(axis=-2)
+                denom = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30))[..., None] * vc[..., None, :]
+                step_dir = g * jax.lax.rsqrt(jnp.maximum(denom, 1e-30))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = b2 * s["v"] + (1 - b2) * g2
+                step_dir = g * jax.lax.rsqrt(jnp.maximum(v, 1e-30))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(step_dir * step_dir) + 1e-30)
+            step_dir = step_dir / jnp.maximum(1.0, rms / cfg.clip_rms)
+        new_p = p.astype(F32) - lr * step_dir
+        if cfg.weight_decay and p.ndim >= 2:
+            new_p = new_p - lr * cfg.weight_decay * p.astype(F32)
+        return new_p.astype(p.dtype), new_s
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["leaves"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_leaves = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_state = {"step": step + 1, "leaves": new_leaves}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

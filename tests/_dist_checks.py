@@ -1,0 +1,277 @@
+"""Multi-device distributed checks. Run as:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python tests/_dist_checks.py
+
+Prints "OK <name>" per passing check; the pytest wrapper asserts the full set.
+Kept out-of-process so the main test session keeps a single CPU device.
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    )
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import dtvc as dtvc_mod  # noqa: E402
+from repro.core import dhopm as dh  # noqa: E402
+from repro.core.mixed_precision import BF16_F32, F32  # noqa: E402
+from repro.dist import collectives as coll  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+
+PASS = []
+
+
+def ok(name):
+    PASS.append(name)
+    print(f"OK {name}", flush=True)
+
+
+def main():
+    assert jax.device_count() == 8, jax.devices()
+    mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(7)
+
+    # ---- dTVC, k != s and k == s, all (k, s) pairs on an order-3 tensor ----
+    shape = (16, 24, 8)
+    A = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    for k in range(3):
+        x = jnp.asarray(rng.normal(size=(shape[k],)).astype(np.float32))
+        want = ref.tvc_ref(A, x, k)
+        for s in range(3):
+            got = dtvc_mod.dtvc(A, x, k, s, mesh, "x", assemble=True)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=2e-5, atol=2e-5)
+    ok("dtvc_all_k_s")
+
+    # distributed (non-assembled) output keeps the split and matches on gather
+    got = dtvc_mod.dtvc(A, jnp.ones((24,), jnp.float32), 1, 0, mesh, "x",
+                        assemble=False)
+    want = ref.tvc_ref(A, jnp.ones((24,), jnp.float32), 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5)
+    ok("dtvc_unassembled")
+
+    # alpha/beta update, k == s (Eq. 2 with BLAS scalars)
+    x1 = jnp.asarray(rng.normal(size=(24,)).astype(np.float32))
+    y0 = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    got = dtvc_mod.dtvc(A, x1, 1, 1, mesh, "x", alpha=2.0, beta=-0.5, y=y0)
+    want = 2.0 * ref.tvc_ref(A, x1, 1) - 0.5 * y0
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+    ok("dtvc_eq2_alphabeta")
+
+    # ---- mixed-precision collectives --------------------------------------
+    def run_coll(fn, v):
+        f = jax.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+                          check_vma=False)
+        return jax.jit(f)(v)
+
+    v = jnp.asarray(rng.normal(size=(8, 1000)).astype(np.float32))
+    want = np.asarray(v).sum(0)
+
+    got = run_coll(lambda t: coll.mp_allreduce_doubling(t[0], "x", F32)[None], v)
+    np.testing.assert_allclose(np.asarray(got[0]), want, rtol=1e-5, atol=1e-5)
+    ok("mp_doubling_f32_exact")
+
+    got = run_coll(lambda t: coll.mp_allreduce_ring(t[0], "x", F32)[None], v)
+    np.testing.assert_allclose(np.asarray(got[0]), want, rtol=1e-5, atol=1e-5)
+    ok("mp_ring_f32_exact")
+
+    got = run_coll(lambda t: coll.mp_allreduce_ring(t[0], "x", BF16_F32)[None], v)
+    err = np.abs(np.asarray(got[0]) - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 0.05, f"bf16 ring wire error too large: {err}"
+    ok("mp_ring_bf16_bounded")
+
+    got = run_coll(lambda t: coll.mp_allreduce_doubling(t[0], "x", BF16_F32)[None], v)
+    err = np.abs(np.asarray(got[0]) - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 0.05, f"bf16 doubling wire error too large: {err}"
+    ok("mp_doubling_bf16_bounded")
+
+    # ring with non-divisible length
+    v2 = jnp.asarray(rng.normal(size=(8, 37)).astype(np.float32))
+    got = run_coll(lambda t: coll.mp_allreduce_ring(t[0], "x", F32)[None], v2)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(v2).sum(0),
+                               rtol=1e-5, atol=1e-5)
+    ok("mp_ring_ragged")
+
+    # ---- dHOPM_3 ------------------------------------------------------------
+    shape = (8, 24, 16)
+    A = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    xs0 = [jnp.asarray(rng.normal(size=(n,)).astype(np.float32)) for n in shape]
+    xs_seq, lam_seq = dh.hopm3(A, xs0, sweeps=3)
+    xs_cls, lam_cls = dh.hopm_classic(A, xs0, sweeps=3)
+    for a, b in zip(xs_seq, xs_cls):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(lam_seq), float(lam_cls), rtol=1e-4)
+    ok("hopm3_equals_classic")
+
+    for s in range(3):
+        xs_d, lam_d = dh.dhopm3(A, xs0, mesh, "x", s=s, sweeps=3)
+        for a, b in zip(xs_d, xs_seq):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(float(lam_d), float(lam_seq), rtol=1e-3)
+    ok("dhopm3_matches_sequential_all_s")
+
+    # exact rank-1 recovery in one sweep
+    us = [rng.normal(size=(n,)).astype(np.float32) for n in shape]
+    us = [u / np.linalg.norm(u) for u in us]
+    lam_true = 5.0
+    A1 = jnp.asarray(lam_true * np.einsum("i,j,k->ijk", *us))
+    xs_r, lam_r = dh.dhopm3(A1, xs0, mesh, "x", s=2, sweeps=2)
+    assert abs(float(lam_r) - lam_true) / lam_true < 1e-3
+    res = float(dh.rank1_residual(A1, xs_r, lam_r))
+    assert res < 1e-3, res
+    ok("dhopm3_rank1_recovery")
+
+    # ---- hopm3_partial: implicit-sum decomposition (gradient-compression core)
+    addends = jnp.asarray(rng.normal(size=(8,) + shape).astype(np.float32))
+    A_sum = jnp.sum(addends, axis=0)
+    xs_ref, lam_ref = dh.hopm3(A_sum, xs0, sweeps=2)
+
+    def body(a_loc, *xs_in):
+        out, lam = dh.hopm3_partial(a_loc[0], list(xs_in), axis_name="x", sweeps=2)
+        return tuple(out), lam
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(P("x"),) + tuple(P() for _ in xs0),
+                       out_specs=(tuple(P() for _ in xs0), P()),
+                       check_vma=False)
+    xs_p, lam_p = jax.jit(fn)(addends, *xs0)
+    for a, b in zip(xs_p, xs_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(float(lam_p), float(lam_ref), rtol=1e-3)
+    ok("hopm3_partial_implicit_sum")
+
+    # bf16 storage dHOPM_3 still converges on the rank-1 tensor
+    xs_b, lam_b = dh.dhopm3(A1.astype(jnp.bfloat16),
+                            [x.astype(jnp.bfloat16) for x in xs0],
+                            mesh, "x", s=2, sweeps=2, prec=BF16_F32)
+    assert abs(float(lam_b) - lam_true) / lam_true < 0.02
+    ok("dhopm3_bf16")
+
+    # ---- training integration ----------------------------------------------
+    check_training()
+    check_grad_compression()
+    check_elastic_restore()
+
+    print(f"ALL_DIST_OK {len(PASS)}")
+
+
+def check_training():
+    """dp_explicit (manual DP shard_map + mp collectives) must match the pure
+    GSPMD step on identical params/batch; compression must still converge."""
+    from repro.configs import get_config
+    from repro.data import DataConfig, SyntheticLMData
+    from repro.train import optimizer as opt_mod
+    from repro.train.train_loop import TrainConfig, make_train_step, setup
+    from repro.train.grad_compress import CompressorCfg
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    ocfg = opt_mod.OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, 32, 8, seed=3), mesh)
+    batch = data.device_put(data.batch_at(0))
+
+    results = {}
+    for mode, extra in [("gspmd", {}), ("dp_explicit", {}),
+                        ("dp_explicit", {"mp_wire": "bf16"})]:
+        tcfg = TrainConfig(opt=ocfg, mode=mode, **extra)
+        params, opt_state, comp_state, _ = setup(cfg, mesh, tcfg)
+        step_fn, _ = make_train_step(cfg, mesh, tcfg)
+        p2, o2, c2, m = step_fn(params, opt_state, comp_state, batch)
+        key = mode + ("+mp" if extra else "")
+        results[key] = (float(m["loss"]), p2)
+    base_loss, base_p = results["gspmd"]
+    expl_loss, expl_p = results["dp_explicit"]
+    assert abs(base_loss - expl_loss) / base_loss < 1e-4, (base_loss, expl_loss)
+    # parameters after one step agree (same grads up to collective order)
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        base_p, expl_p)
+    assert max(jax.tree.leaves(diffs)) < 5e-3, max(jax.tree.leaves(diffs))
+    mp_loss, _ = results["dp_explicit+mp"]
+    assert abs(base_loss - mp_loss) / base_loss < 5e-3
+    ok("dp_explicit_matches_gspmd")
+
+
+def check_grad_compression():
+    from repro.train import grad_compress as gc
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((8,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(11)
+    ccfg = gc.CompressorCfg(rank=4, sweeps=3, min_size=64, prec="f32")
+
+    # low-rank global gradient split into 8 partial addends
+    U = rng.normal(size=(48, 3)).astype(np.float32)
+    V = rng.normal(size=(64, 3)).astype(np.float32)
+    G = U @ V.T
+    parts = rng.normal(size=(8, 48, 64)).astype(np.float32) * 0.0
+    parts[0] = G  # rank 0 holds all of it; sum is still G
+    grads_tree = {"w": jnp.asarray(parts)}
+    params_like = {"w": jnp.zeros((48, 64), jnp.float32)}
+    state = gc.init_state(params_like, ccfg)
+
+    def body(gl):
+        g_local = {"w": gl["w"][0]}
+        synced, new_state, _ = gc.compress_and_sync(g_local, state, ccfg, "x")
+        return synced["w"][None], new_state["w"]["e"][None]
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=({"w": P("x")},),
+                       out_specs=(P("x"), P("x")), check_vma=False)
+    synced, efs = jax.jit(fn)(grads_tree)
+    got_mean = np.asarray(synced)[0]          # identical on every rank
+    want_mean = G / 8.0
+    rel = np.linalg.norm(got_mean - want_mean) / np.linalg.norm(want_mean)
+    assert rel < 0.05, f"rank-4 HOPM should capture a rank-3 gradient: {rel}"
+    # error feedback conservation: sum_p e_new = G - Ghat
+    e_sum = np.asarray(efs).sum(0)
+    ghat = got_mean * 8.0
+    np.testing.assert_allclose(e_sum, G - ghat, rtol=1e-3, atol=1e-3)
+    # wire accounting says compression wins (realistic leaf size)
+    big = {"w": jnp.zeros((4096, 4096), jnp.float32)}
+    stats = gc.wire_bytes_summary(big, ccfg, 8)
+    assert stats["ratio"] > 50, stats
+    ok("grad_compression_lowrank_and_ef")
+
+
+def check_elastic_restore():
+    import tempfile
+    from repro.train import checkpoint as ck
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh_a = jax.make_mesh((4, 2), ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_b = jax.make_mesh((2, 4), ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tree = {
+        "w": jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                            NamedSharding(mesh_a, P("data", "model"))),
+        "b": jnp.arange(8.0),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 7, tree)
+        shardings = {
+            "w": NamedSharding(mesh_b, P("data", "model")),
+            "b": NamedSharding(mesh_b, P()),
+            "step": NamedSharding(mesh_b, P()),
+        }
+        restored, manifest = ck.restore(d, tree, shardings=shardings)
+        assert manifest["step"] == 7
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.arange(64.0).reshape(8, 8))
+        assert restored["w"].sharding.mesh.shape["data"] == 2
+    ok("elastic_reshard_restore")
+
+
+if __name__ == "__main__":
+    main()

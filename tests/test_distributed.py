@@ -1,0 +1,42 @@
+"""Runs the multi-device checks in a subprocess with 8 virtual CPU devices
+(the main pytest process keeps 1 device, per the project rule)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+EXPECTED = [
+    "dtvc_all_k_s",
+    "dtvc_unassembled",
+    "dtvc_eq2_alphabeta",
+    "mp_doubling_f32_exact",
+    "mp_ring_f32_exact",
+    "mp_ring_bf16_bounded",
+    "mp_doubling_bf16_bounded",
+    "mp_ring_ragged",
+    "hopm3_equals_classic",
+    "dhopm3_matches_sequential_all_s",
+    "dhopm3_rank1_recovery",
+    "hopm3_partial_implicit_sum",
+    "dhopm3_bf16",
+    "dp_explicit_matches_gspmd",
+    "grad_compression_lowrank_and_ef",
+    "elastic_reshard_restore",
+]
+
+
+def test_distributed_suite():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_dist_checks.py")],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    out = proc.stdout
+    assert proc.returncode == 0, f"stdout:\n{out}\nstderr:\n{proc.stderr[-4000:]}"
+    for name in EXPECTED:
+        assert f"OK {name}" in out, f"missing check {name}:\n{out}"
+    assert f"ALL_DIST_OK {len(EXPECTED)}" in out

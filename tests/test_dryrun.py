@@ -1,0 +1,92 @@
+"""CI-scale dry-run: lower+compile cells on a (2,4) debug mesh with smoke
+configs in a subprocess (the full 512-device sweep is reported in
+EXPERIMENTS.md).  Plus unit tests for the roofline HLO parser."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_dryrun(arch: str, shapes: str, tmp: str) -> list[dict]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = pathlib.Path(tmp) / f"dryrun_{arch}.json"
+    code = (
+        "import os;"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8';"
+        "import sys, runpy;"
+        f"sys.argv=['dryrun','--debug-mesh','--smoke-configs',"
+        f"'--arch','{arch}','--shape','{shapes}','--out',r'{out}'];"
+        "runpy.run_module('repro.launch.dryrun', run_name='__main__')"
+    )
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-3000:]
+    return json.loads(out.read_text())
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("granite-8b", "train_4k"),
+    ("kimi-k2-1t-a32b", "decode_32k"),
+    ("rwkv6-3b", "long_500k"),
+    ("whisper-tiny", "prefill_32k"),
+])
+def test_dryrun_cell_compiles(arch, shape):
+    with tempfile.TemporaryDirectory() as tmp:
+        results = _run_dryrun(arch, shape, tmp)
+    (r,) = results
+    assert r["status"] == "ok", r
+    rl = r["roofline"]
+    assert rl["hlo_flops"] > 0
+    assert rl["hlo_bytes"] > 0
+    assert rl["bottleneck"] in ("compute", "memory", "collective")
+    assert 0 < rl["roofline_fraction"] <= 1.0
+    assert r["memory_analysis"]["temp_bytes"] >= 0
+
+
+def test_dryrun_skip_rule():
+    with tempfile.TemporaryDirectory() as tmp:
+        results = _run_dryrun("qwen2-1.5b", "long_500k", tmp)
+    (r,) = results
+    assert r["status"] == "skipped"
+    assert "sub-quadratic" in r["reason"]
+
+
+# ---- roofline parser units --------------------------------------------------
+
+def test_collective_bytes_parser():
+    from repro.analysis.roofline import collective_bytes
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[16,32]{1,0} all-gather(bf16[16,8]{1,0} %y), dimensions={1}
+  %cp = f32[64]{0} collective-permute(f32[64]{0} %z), source_target_pairs={{0,1}}
+  %rs = (f32[8,4]{1,0}, f32[8,4]{1,0}) reduce-scatter(f32[64,4]{1,0} %a, f32[64,4]{1,0} %b), dimensions={0}
+  %dot = f32[128,128]{1,0} dot(f32[128,64]{1,0} %p, f32[64,128]{1,0} %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["all-gather"] == 16 * 32 * 2
+    assert out["collective-permute"] == 64 * 4
+    assert out["reduce-scatter"] == 2 * 8 * 4 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_roofline_terms_math():
+    from repro.analysis.roofline import PEAK_FLOPS, HBM_BW, LINK_BW, RooflineReport
+    r = RooflineReport(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        hlo_flops=PEAK_FLOPS, hlo_bytes=HBM_BW * 2, coll_bytes=LINK_BW / 2,
+        coll_breakdown={}, model_flops=PEAK_FLOPS / 2, bytes_per_device=1,
+        argument_bytes=1, output_bytes=1, temp_bytes=0)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.useful_flops_fraction == pytest.approx(0.5)

@@ -1,0 +1,109 @@
+"""Sequential HOPM properties: variant equivalence, contraction savings,
+rank-1 recovery, convergence."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro.core.dhopm as dh
+
+RNG = np.random.default_rng(23)
+
+
+def rand(shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", [(6, 7), (5, 6, 4), (3, 4, 3, 5), (2, 3, 2, 3, 2)])
+def test_hopm3_equals_classic(shape):
+    A = rand(shape)
+    xs0 = [rand((n,)) for n in shape]
+    xs3, lam3 = dh.hopm3(A, xs0, sweeps=3)
+    xsc, lamc = dh.hopm_classic(A, xs0, sweeps=3)
+    for a, b in zip(xs3, xsc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+    assert abs(float(lam3) - float(lamc)) / float(lamc) < 1e-4
+
+
+def _count_contractions(monkeypatch, fn):
+    calls = []
+    orig = dh.dtvc_local
+
+    def spy(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(dh, "dtvc_local", spy)
+    fn()
+    return len(calls)
+
+
+def test_hopm3_saves_contractions(monkeypatch):
+    d = 5
+    A = rand((3,) * d)
+    xs0 = [rand((3,)) for _ in range(d)]
+    n3 = _count_contractions(monkeypatch, lambda: dh.hopm3(A, xs0, sweeps=1))
+    nc = _count_contractions(monkeypatch, lambda: dh.hopm_classic(A, xs0, sweeps=1))
+    assert nc == d * (d - 1)
+    assert nc - n3 == (d - 1) * (d - 2) // 2  # the paper's saving
+
+
+def test_rank1_exact_recovery():
+    us = [RNG.normal(size=(n,)).astype(np.float32) for n in (8, 5, 7)]
+    us = [u / np.linalg.norm(u) for u in us]
+    A = jnp.asarray(3.5 * np.einsum("i,j,k->ijk", *us))
+    xs0 = [rand((n,)) for n in (8, 5, 7)]
+    xs, lam = dh.hopm3(A, xs0, sweeps=2)
+    assert abs(float(lam) - 3.5) < 1e-3
+    assert float(dh.rank1_residual(A, xs, lam)) < 1e-3
+
+
+def test_residual_decreases_with_sweeps():
+    A = rand((6, 7, 5))
+    xs0 = [rand((n,)) for n in A.shape]
+    res = []
+    for sweeps in (1, 2, 4, 8):
+        xs, lam = dh.hopm3(A, xs0, sweeps=sweeps)
+        res.append(float(dh.rank1_residual(A, xs, lam)))
+    assert res[-1] <= res[0] + 1e-5
+    # all residuals are valid fractions
+    assert all(0.0 <= r <= 1.0 + 1e-5 for r in res)
+
+
+def test_matrix_case_matches_svd():
+    """d = 2 HOPM is the power method: lambda -> sigma_max."""
+    A = rand((20, 12))
+    xs0 = [rand((20,)), rand((12,))]
+    xs, lam = dh.hopm3(A, xs0, sweeps=25)
+    smax = float(np.linalg.svd(np.asarray(A), compute_uv=False)[0])
+    assert abs(float(lam) - smax) / smax < 1e-3
+
+
+def test_rank1_reconstruction_shape():
+    xs = [rand((3,)), rand((4,)), rand((5,))]
+    R = dh.rank1(xs, 2.0)
+    assert R.shape == (3, 4, 5)
+
+
+def test_fused_pairs_equal_plain():
+    """BEYOND-PAPER: tvc2 pair fusion must not change HOPM iterates."""
+    for shape in [(6, 7), (5, 6, 4), (4, 5, 3, 4), (3, 3, 3, 3, 3)]:
+        A = rand(shape)
+        xs0 = [rand((n,)) for n in shape]
+        a, la = dh.hopm3(A, xs0, sweeps=3)
+        b, lb = dh.hopm3(A, xs0, sweeps=3, fuse_pairs=True)
+        for u, v in zip(a, b):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       rtol=1e-4, atol=1e-5)
+        assert abs(float(la) - float(lb)) / float(la) < 1e-4
+
+
+def test_fused_streamed_memory_strictly_better():
+    from repro.core import memory_model as mm
+    for d, n in [(4, 175), (6, 31), (10, 8)]:
+        h = mm.simulate_sweep(n, d, 1, d - 1, "hopm3")
+        f = mm.simulate_sweep(n, d, 1, d - 1, "hopm3_fused")
+        assert f < h
+    # d=10: fused beats the paper's own ratio (~4.7x) vs classic
+    c = mm.simulate_sweep(8, 10, 1, 9, "classic")
+    f = mm.simulate_sweep(8, 10, 1, 9, "hopm3_fused")
+    assert c / f > 5.0

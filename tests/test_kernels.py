@@ -1,0 +1,117 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property tests
+against the pure-jnp oracles, all in interpret mode (CPU)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(3)
+
+
+def rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+# explicit sweep: edge shapes incl. non-multiples of (8, 128) tiles
+UVK = [
+    (1, 8, 1),        # k = d-1 on a vector-ish tensor
+    (8, 128, 128),    # perfectly tiled
+    (5, 7, 3),        # all ragged
+    (16, 1, 256),     # nk = 1
+    (1, 513, 130),    # u = 1 (k = 0), ragged lanes
+    (64, 17, 1),      # v = 1 matvec path, ragged k
+    (3, 1000, 1),     # v = 1, large k
+]
+
+
+@pytest.mark.parametrize("u,nk,v", UVK)
+@pytest.mark.parametrize("polname", ["f32", "bf16", "f16"])
+def test_tvc_kernel_sweep(u, nk, v, polname):
+    dt = {"f32": np.float32, "bf16": None, "f16": np.float16}[polname]
+    a = rand((u, nk, v))
+    x = rand((nk,))
+    if polname == "bf16":
+        a, x = a.astype(jnp.bfloat16), x.astype(jnp.bfloat16)
+    elif dt is not np.float32:
+        a, x = a.astype(dt), x.astype(dt)
+    got = ops.tvc_pallas(a, x, prec=polname)
+    want = ref.tvc3_ref(a, x, prec=polname)
+    assert got.shape == (u, v) and got.dtype == want.dtype
+    tol = 1e-5 if polname == "f32" else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    u=st.integers(1, 33),
+    nk=st.integers(1, 160),
+    v=st.integers(1, 140),
+    seed=st.integers(0, 2**31),
+)
+def test_tvc_kernel_property(u, nk, v, seed):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.normal(size=(u, nk, v)).astype(np.float32))
+    x = jnp.asarray(r.normal(size=(nk,)).astype(np.float32))
+    got = ops.tvc_pallas(a, x)
+    want = ref.tvc3_ref(a, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tvc_kernel_linearity():
+    a = rand((4, 24, 12))
+    x1, x2 = rand((24,)), rand((24,))
+    lhs = ops.tvc_pallas(a, x1 + 2.0 * x2)
+    rhs = ops.tvc_pallas(a, x1) + 2.0 * ops.tvc_pallas(a, x2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-5)
+
+
+def test_tvc_kernel_via_mode_view():
+    A = rand((4, 6, 5, 3))
+    for k in range(4):
+        x = rand((A.shape[k],))
+        got = ops.tvc(A, x, k)
+        want = ref.tvc_ref(A, x, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1, 127, 128, 1000, 8 * 128, 5000])
+@pytest.mark.parametrize("polname", ["f32", "bf16"])
+def test_axpby_kernel(n, polname):
+    x = rand((n,))
+    y = rand((n,))
+    if polname == "bf16":
+        x, y = x.astype(jnp.bfloat16), y.astype(jnp.bfloat16)
+    got = ops.axpby_pallas(1.25, x, -0.5, y, prec=polname)
+    want = ref.axpby_ref(1.25, x, -0.5, y, prec=polname)
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2 if polname == "bf16" else 1e-6,
+                               atol=1e-2 if polname == "bf16" else 1e-6)
+
+
+def test_axpby_2d_shape_preserved():
+    x = rand((13, 9))
+    got = ops.axpby_pallas(2.0, x, 0.0, jnp.zeros_like(x))
+    np.testing.assert_allclose(np.asarray(got), 2.0 * np.asarray(x), rtol=1e-6)
+
+
+@pytest.mark.parametrize("u,n1,n2,v", [
+    (1, 8, 8, 1), (4, 5, 7, 3), (8, 16, 16, 128), (2, 9, 130, 5),
+])
+def test_tvc2_fused_kernel(u, n1, n2, v):
+    """Fused two-mode contraction kernel vs composed oracle."""
+    a = rand((u, n1, n2, v))
+    x1, x2 = rand((n1,)), rand((n2,))
+    got = ops.tvc2_pallas(a, x1, x2)
+    want = ref.tvc3_ref(
+        ref.tvc3_ref(a.reshape(u, n1, n2 * v), x1).reshape(u, n2, v), x2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,86 @@
+"""Streamed-memory model: closed forms vs exact simulator vs paper's Fig. 2."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import memory_model as mm
+
+# The paper's Table 1 hypersquare suite.
+TABLE1 = {2: 30623, 3: 979, 4: 175, 5: 63, 6: 31, 7: 19, 8: 13, 9: 10, 10: 8}
+
+
+def test_m_seq_structure():
+    # Eq. (3): n^d + 2 sum n^k + (d+3) n
+    assert mm.m_seq(10, 3) == 1000 + 2 * 100 + 6 * 10
+    assert mm.M_seq(10, 3) == 3 * mm.m_seq(10, 3)
+
+
+@pytest.mark.parametrize("d,n", sorted(TABLE1.items()))
+def test_eq6_matches_recursion(d, n):
+    for p in (2, 4, 8):
+        for s in range(d):
+            a = mm.M_par(n, d, p, s)
+            b = mm.M_par_rec(n, d, p, s)
+            assert math.isclose(a, b, rel_tol=1e-9), (d, p, s)
+
+
+@pytest.mark.parametrize("d,n", sorted(TABLE1.items()))
+def test_simulator_matches_closed_form_classic(d, n):
+    for p in (1, 4, 8):
+        for s in range(d):
+            sim = mm.simulate_sweep(n, d, p, s, "classic")
+            cf = mm.M_par(n, d, p, s)
+            # Eqs. (4)-(6) carry the paper's own ~(p-1)/p vector-term
+            # approximations; exact counts agree to well under 1%.
+            assert abs(sim - cf) / cf < 0.01, (d, p, s, sim, cf)
+
+
+def test_paper_fig2a_values():
+    # "the data movement more than doubles for s_hat = 0 and p_hat = 1"
+    assert mm.eta_inv(979, 3, 979, 0) > 2.0
+    assert mm.eta_inv(8, 10, 8, 0) > 2.0
+    # and s = d-1 keeps M_par ~ M_seq / p
+    assert mm.eta_inv(979, 3, 979, 2) < 1.05
+    assert mm.eta_inv(8, 10, 8, 9) < 1.10
+
+
+def test_paper_fig2b_values():
+    # "economizes about 1.5x of the touched memory for d = 3 and roughly a
+    #  fivefold for d = 10 (with the presence of a minimum of about 3.3x)"
+    assert 1.4 < mm.H_inv(979, 3, 8, 2) < 1.6
+    assert 4.3 < mm.H_inv(8, 10, 8, 0) < 5.3
+    grid = [mm.H_inv(8, 10, p, s) for p in range(1, 9) for s in range(10)]
+    assert 3.1 < min(grid) < 3.5
+    assert max(grid) < 5.3
+
+
+def test_hopm3_never_streams_more():
+    for d, n in TABLE1.items():
+        for p in (1, 2, 8):
+            for s in range(d):
+                assert (mm.simulate_sweep(n, d, p, s, "hopm3")
+                        <= mm.simulate_sweep(n, d, p, s, "classic") + 1e-6)
+
+
+def test_saved_contractions():
+    assert mm.saved_contractions(3) == 1
+    assert mm.saved_contractions(10) == 36
+
+
+def test_ring_term():
+    # 4n(p-1)/p; paper: worst case d=2, p_hat=1 adds ~57% over M_par_min
+    n = 30623
+    p = n
+    ring = mm.ring_allreduce_touched(n, p)
+    assert abs(ring - 4 * n * (p - 1) / p) < 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(d=st.integers(2, 10), p=st.integers(1, 16), s_frac=st.floats(0, 1))
+def test_split_last_dim_is_never_worse(d, p, s_frac):
+    """Paper's recommendation: s = d-1 minimizes streamed memory."""
+    n = TABLE1[d]
+    s = min(d - 1, int(s_frac * d))
+    assert (mm.simulate_sweep(n, d, p, d - 1, "hopm3")
+            <= mm.simulate_sweep(n, d, p, s, "hopm3") * (1 + 1e-9))

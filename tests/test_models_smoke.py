@@ -1,0 +1,146 @@
+"""Per-arch smoke tests on reduced configs: forward shapes + no NaNs, one
+train-step gradient, and the decode-vs-forward consistency oracle (decode
+logits from a KV/state cache must match the full-sequence forward)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models import extra_input_key, registry
+
+ARCHS = [
+    "kimi-k2-1t-a32b", "deepseek-v2-lite-16b", "whisper-tiny", "stablelm-1.6b",
+    "qwen2-1.5b", "llama3-405b", "granite-8b", "rwkv6-3b", "internvl2-26b",
+    "recurrentgemma-9b",
+]
+
+B, S = 2, 24
+
+
+def make_batch(cfg, rng):
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(B, S)), jnp.int32)}
+    key = extra_input_key(cfg)
+    if key == "img_embeds":
+        d = cfg.vlm.img_embed_dim or cfg.d_model
+        batch[key] = jnp.asarray(
+            rng.normal(size=(B, cfg.vlm.n_img_tokens, d)).astype(np.float32))
+    elif key == "audio_embeds":
+        batch[key] = jnp.asarray(
+            rng.normal(size=(B, cfg.encdec.n_audio_ctx, cfg.d_model)).astype(np.float32))
+    return batch
+
+
+def setup(arch):
+    cfg = get_config(arch, smoke=True)
+    mod = registry.get(cfg.family)
+    rng = np.random.default_rng(hash(arch) % 2**31)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, rng)
+    return cfg, mod, params, batch
+
+
+def test_registry_covers_assignment():
+    assert sorted(ARCHS) == list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, mod, params, batch = setup(arch)
+    extra = batch.get(extra_input_key(cfg)) if extra_input_key(cfg) else None
+    if extra is not None:
+        logits, _ = mod.forward(cfg, params, batch["tokens"], extra)
+    else:
+        logits, _ = mod.forward(cfg, params, batch["tokens"])
+    S_total = S + (cfg.vlm.n_img_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_total, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_and_grad_step(arch):
+    cfg, mod, params, batch = setup(arch)
+
+    def loss(p):
+        l, _ = mod.loss_fn(cfg, p, batch)
+        return l
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(val)) and float(val) > 0
+    gnorm = jax.tree.reduce(
+        lambda a, g: a + float(jnp.sum(jnp.square(g.astype(jnp.float32)))),
+        grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0
+    # one SGD step changes the loss
+    new_params = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params, grads)
+    val2, _ = mod.loss_fn(cfg, new_params, batch)
+    assert float(val2) != float(val)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Golden oracle: prefill(t0) + step-by-step decode must reproduce the
+    full-forward logits at every decoded position."""
+    cfg, mod, params, batch = setup(arch)
+    tokens = batch["tokens"]
+    extra_key = extra_input_key(cfg)
+    extra = batch.get(extra_key) if extra_key else None
+
+    if extra is not None:
+        full_logits, _ = mod.forward(cfg, params, tokens, extra)
+    else:
+        full_logits, _ = mod.forward(cfg, params, tokens)
+    if cfg.family == "vlm":
+        full_logits = full_logits[:, cfg.vlm.n_img_tokens:]
+
+    t0 = S // 2
+    cache = mod.init_cache(cfg, B, S + 8)
+    if cfg.family == "vlm":
+        # prefill consumes image prefix + prompt
+        cache = mod.init_cache(cfg, B, S + 8 + cfg.vlm.n_img_tokens)
+        cache, logits = mod.prefill(cfg, params, tokens[:, :t0], cache, extra)
+    elif extra is not None:
+        cache, logits = mod.prefill(cfg, params, tokens[:, :t0], cache, extra)
+    else:
+        cache, logits = mod.prefill(cfg, params, tokens[:, :t0], cache)
+
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], np.float32),
+        np.asarray(full_logits[:, t0 - 1], np.float32), rtol=2e-2, atol=2e-2)
+
+    for t in range(t0, S):
+        cache, logits = mod.decode_step(cfg, params, cache, tokens[:, t:t + 1])
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full_logits[:, t], np.float32), rtol=2e-2, atol=2e-2,
+            err_msg=f"{arch}: decode diverges at position {t}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_positive(arch):
+    cfg = get_config(arch, smoke=True)
+    full = get_config(arch)
+    mod = registry.get(cfg.family)
+    assert mod.param_count(cfg) > 0
+    assert mod.active_param_count(full) <= mod.param_count(full)
+
+
+def test_full_param_counts_match_published_scale():
+    """Full configs should land near their published parameter counts."""
+    expect = {
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "deepseek-v2-lite-16b": (13e9, 18e9),
+        "llama3-405b": (380e9, 430e9),
+        "granite-8b": (7e9, 9.5e9),
+        "qwen2-1.5b": (1.2e9, 2.0e9),
+        "stablelm-1.6b": (1.3e9, 2.0e9),
+        "rwkv6-3b": (2.5e9, 3.6e9),
+        "internvl2-26b": (18e9, 27e9),   # LM backbone share of 26B
+        "recurrentgemma-9b": (7.5e9, 11e9),
+        "whisper-tiny": (25e6, 60e6),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        n = registry.get(cfg.family).param_count(cfg)
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.2e}, {hi:.2e}]"

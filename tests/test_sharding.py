@@ -1,0 +1,125 @@
+"""Sharding rule tables + abstract-spec plumbing (1-device mesh: the rules
+are pure functions of mesh *shape*, so a (1,1) mesh exercises the divisibility
+logic with axis sizes patched in directly)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist.sharding import (
+    AxisEnv, cache_specs, param_specs, spec_for_leaf, _roles_for,
+)
+from repro.models import registry
+
+
+def env(data=16, model=16, pod=None, fsdp=True):
+    shape = {"data": data, "model": model}
+    if pod:
+        shape = {"pod": pod, **shape}
+    return AxisEnv(mesh_shape=shape,
+                   fsdp_axes=tuple(a for a in ("pod", "data") if a in shape)
+                   if fsdp else (),
+                   fsdp_min_size=(1 << 22) if fsdp else (1 << 62))
+
+
+class FakeLeaf:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+class Key:
+    def __init__(self, k):
+        self.key = k
+
+
+def spec(names, shape, cfg=None, ax=None):
+    path = tuple(Key(n) for n in names)
+    return spec_for_leaf(path, FakeLeaf(shape), cfg, ax or env())
+
+
+def test_attention_weights_tp_and_fsdp():
+    # llama wq: (L, D, H*hd) = (126, 16384, 16384): fsdp on D, tp on out
+    assert spec(["layers", "attn", "wq"], (126, 16384, 16384)) == \
+        P(None, "data", "model")
+    # wo transposed roles
+    assert spec(["layers", "attn", "wo"], (126, 16384, 16384)) == \
+        P(None, "model", "data")
+
+
+def test_small_tensor_never_fsdp():
+    # qwen wq (28, 1536, 1536): big enough? 28*1536*1536 = 66M > 2^22 but the
+    # sharded dim itself must divide: 1536 % 16 == 0 -> fsdp applies
+    assert spec(["layers", "attn", "wq"], (28, 1536, 1536)) == \
+        P(None, "data", "model")
+    # tiny norm scale: replicated
+    assert spec(["layers", "ln1", "scale"], (28, 1536)) == P(None, None)
+
+
+def test_nondivisible_dims_stay_replicated():
+    # rwkv maa LoRA: explicitly unsharded
+    assert spec(["layers", "att", "maa_w1"], (32, 2560, 160)) == \
+        P(None, None, None)
+    # vocab not multiple of 16 stays unsharded on tp (fsdp on D still applies)
+    assert spec(["embed", "tok"], (51865, 384)) == P(None, "data")
+    # padded vocab shards
+    s = spec(["embed", "tok"], (51968, 4096))
+    assert s[0] == "model"
+
+
+def test_moe_expert_sharding():
+    cfg = get_config("kimi-k2-1t-a32b")
+    s = spec(["layers", "ffn", "w_gate"], (61, 384, 7168, 2048), cfg=cfg)
+    assert s == P(None, "model", "data", None)
+    s = spec(["layers", "ffn", "w_down"], (61, 384, 2048, 7168), cfg=cfg)
+    assert s == P(None, "model", None, "data")
+
+
+def test_rwkv_ffn_qualified_rules():
+    # channel-mix out-proj (F, D) is ("tp", "fsdp")
+    assert _roles_for(["layers", "ffn", "wv"], (8960, 2560), None) == \
+        ("tp", "fsdp")
+    # attention wv is the generic in-proj rule
+    assert _roles_for(["layers", "att", "wv"], (2560, 2560), None) == \
+        ("fsdp", "tp")
+
+
+def test_serving_env_disables_fsdp():
+    ax = env(fsdp=False)
+    assert spec(["layers", "attn", "wq"], (126, 16384, 16384), ax=ax) == \
+        P(None, None, "model")
+
+
+def test_param_specs_cover_every_leaf():
+    """Every arch: spec tree aligns with the param tree, and every sharded
+    axis divides its dim."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    for arch in ("qwen2-1.5b", "kimi-k2-1t-a32b", "rwkv6-3b",
+                 "recurrentgemma-9b", "whisper-tiny", "internvl2-26b"):
+        cfg = get_config(arch, smoke=True)
+        mod = registry.get(cfg.family)
+        shapes = jax.eval_shape(lambda m=mod, c=cfg: m.init(c, jax.random.PRNGKey(0)))
+        specs = param_specs(cfg, shapes, mesh)
+        n_leaves = len(jax.tree.leaves(shapes))
+        n_specs = len(jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)))
+        assert n_leaves == n_specs, arch
+
+
+def test_cache_specs_shard_seq_over_model():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_config("granite-8b", smoke=True)
+    mod = registry.get(cfg.family)
+    cache = jax.eval_shape(lambda: mod.init_cache(cfg, 8, 64))
+    specs = cache_specs(cfg, cache, mesh)
+    # (L, B, KV, S, hd): seq dim is second-to-last
+    assert specs["k"][3] == "model"
+    assert specs["pos"] == P()
+
+
+def test_constrain_noop_outside_context():
+    from repro.dist.sharding import constrain
+    x = jnp.ones((4, 4))
+    assert constrain(x, "dp", None) is x

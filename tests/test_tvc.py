@@ -1,0 +1,124 @@
+"""Unit tests: single-device TVC (all impls), splitting, BLAS semantics."""
+import math
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import tvc, tvc_bytes, tvc_chain, tvc_shape, mode_uv
+from repro.core.splitting import (
+    best_split_dim, optimal_division, plan_split, plan_split_for_mesh,
+)
+from repro.kernels import ref
+
+RNG = np.random.default_rng(11)
+
+
+def rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+SHAPES = [(7,), (5, 9), (4, 6, 5), (3, 4, 2, 5), (2, 3, 2, 3, 2)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("impl", ["native", "looped", "unfolded", "pallas"])
+def test_tvc_matches_oracle_every_mode(shape, impl):
+    A = rand(shape)
+    for k in range(len(shape)):
+        x = rand((shape[k],))
+        got = tvc(A, x, k, impl=impl)
+        want = ref.tvc_ref(A, x, k)
+        assert got.shape == tvc_shape(shape, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_tvc_alpha_beta():
+    A = rand((6, 5, 4))
+    x = rand((5,))
+    y = rand((6, 4))
+    got = tvc(A, x, 1, alpha=3.0, beta=-2.0, y=y)
+    want = 3.0 * ref.tvc_ref(A, x, 1) - 2.0 * y
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_tvc_beta_requires_y():
+    with pytest.raises(ValueError):
+        tvc(rand((3, 3)), rand((3,)), 0, beta=1.0)
+
+
+def test_tvc_bad_mode_and_shape():
+    with pytest.raises(ValueError):
+        tvc(rand((3, 4)), rand((4,)), 2)
+    with pytest.raises(ValueError):
+        tvc(rand((3, 4)), rand((3,)), 1)
+
+
+def test_mode_uv():
+    assert mode_uv((2, 3, 4, 5), 0) == (1, 2, 60)
+    assert mode_uv((2, 3, 4, 5), 2) == (6, 4, 5)
+    assert mode_uv((2, 3, 4, 5), 3) == (24, 5, 1)
+
+
+def test_tvc_chain_matches_composition():
+    A = rand((3, 4, 5, 2))
+    xs = [rand((n,)) for n in A.shape]
+    got = tvc_chain(A, xs, [0, 2, 3])
+    want = A
+    # contract 0, then 2 (now local 1), then 3 (now local 1)
+    want = ref.tvc_ref(want, xs[0], 0)
+    want = ref.tvc_ref(want, xs[2], 1)
+    want = ref.tvc_ref(want, xs[3], 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_tvc_bytes():
+    # read A + read x + write Y (f32)
+    assert tvc_bytes((10, 20), 0, 4) == (200 + 10 + 20) * 4
+    assert tvc_bytes((10, 20), 0, 4, beta=1.0) == (200 + 10 + 40) * 4
+
+
+def test_bf16_storage_f32_accum():
+    A = rand((32, 16, 8)).astype(jnp.bfloat16)
+    x = rand((16,)).astype(jnp.bfloat16)
+    got = tvc(A, x, 1, prec="bf16")
+    assert got.dtype == jnp.bfloat16
+    want = ref.tvc_ref(A, x, 1, prec="bf16")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=3e-2, atol=3e-2)
+
+
+# ---- splitting ------------------------------------------------------------
+
+def test_optimal_division_promotes_vector_multiples():
+    assert optimal_division(979, 8, quantum=8) == 128
+    assert optimal_division(64, 8, quantum=8) == 8
+    assert optimal_division(4, 3, quantum=2) == 2  # paper Fig. 1 s=2: p -> 2
+
+
+def test_plan_split_lowers_p():
+    plan = plan_split(4, 3, quantum=2)
+    assert plan.p == 2 and plan.chunk == 2 and plan.pad == 0
+
+
+def test_plan_split_bounds_cover_everything():
+    plan = plan_split(979, 8)
+    covered = []
+    for r in range(plan.p):
+        lo, hi = plan.bounds(r)
+        covered.extend(range(lo, hi))
+    assert covered == list(range(979))
+
+
+def test_plan_split_for_mesh_uses_exactly_p():
+    plan = plan_split_for_mesh(979, 16)
+    assert plan.p == 16
+    assert plan.p * plan.chunk >= 979
+    assert plan.pad == plan.p * plan.chunk - 979
+
+
+def test_best_split_dim_prefers_last_and_avoids_k():
+    assert best_split_dim((8, 8, 8), 4) == 2
+    assert best_split_dim((8, 8, 8), 4, avoid=2) == 1
+    assert best_split_dim((8, 8, 2), 4) == 1  # last dim too small for p=4
