@@ -2,4 +2,6 @@
 distributed tensor-vector contraction algorithms of Martinez-Ferrer,
 Yzelman & Beltran (2025)."""
 
+from . import _compat  # noqa: F401  (installs jax version shims)
+
 __version__ = "1.0.0"

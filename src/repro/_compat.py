@@ -1,0 +1,109 @@
+"""Compatibility shims across the supported range of jax versions.
+
+The code base is written against the modern jax surface:
+
+* ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+* ``jax.sharding.AxisType`` and ``jax.make_mesh(..., axis_types=...)``
+* ``jax.lax.axis_size(name)`` inside manual (shard_map) regions
+
+On 0.4.x installs some of those spellings are missing (``shard_map`` lives in
+``jax.experimental`` and takes ``check_rep``; meshes have no axis types; the
+axis size must be recovered from the axis environment).  This module installs
+small forwarding shims at import time — a no-op wherever the real API already
+exists.  It is imported from the ``repro`` package ``__init__``, so any
+``import repro.*`` activates it before user code touches jax.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+from jax import lax
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  check_rep=None, **kwargs):
+        if check_rep is None:
+            check_rep = True if check_vma is None else check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        """Stand-in for jax.sharding.AxisType on versions without explicit
+        sharding modes (every mesh axis behaves as Auto there)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover — exotic builds
+        return
+    if "axis_types" in params:
+        return
+    _make_mesh = jax.make_mesh
+
+    @functools.wraps(_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        del axis_types  # pre-AxisType meshes are implicitly Auto
+        return _make_mesh(axis_shapes, axis_names, **kwargs)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_axis_size() -> None:
+    if hasattr(lax, "axis_size"):
+        return
+
+    def axis_size(axis_name) -> int:
+        # psum of a static python scalar is evaluated statically from the
+        # axis environment, so this returns a concrete int under tracing.
+        return lax.psum(1, axis_name)
+
+    lax.axis_size = axis_size
+
+
+def _install_partitionable_threefry() -> None:
+    # Newer jax defaults to partitionable threefry, whose bits do not depend
+    # on the output sharding.  The legacy generator produces *different*
+    # values under GSPMD-sharded outputs, which breaks this repo's
+    # cross-mode oracles (gspmd vs dp_explicit init must agree bitwise).
+    # NOTE: like every shim here this is process-global — on old jax,
+    # importing repro aligns the whole process with the modern default, so
+    # unrelated jax.random draws in the same process change relative to a
+    # run without the import (exactly as they would on current jax).
+    try:
+        if not jax.config.jax_threefry_partitionable:
+            jax.config.update("jax_threefry_partitionable", True)
+    except AttributeError:  # pragma: no cover — flag removed upstream
+        pass
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_axis_type()
+    _install_make_mesh()
+    _install_axis_size()
+    _install_partitionable_threefry()
+
+
+install()

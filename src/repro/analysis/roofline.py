@@ -28,6 +28,15 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+
+def cost_dict(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: newer jax returns one dict,
+    older versions a one-element list of dicts."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
 # e.g.:  %all-reduce.5 = f32[128,1024]{1,0} all-reduce(...)
 _OP_RE = re.compile(
     r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
@@ -136,7 +145,7 @@ def model_flops_for(cfg, shape, n_params_active: int) -> float:
 
 def analyze_compiled(compiled, *, arch: str, shape, mesh, cfg=None,
                      per_device_flops: bool = True) -> RooflineReport:
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)

@@ -99,8 +99,7 @@ def _hopm_sweeps(
                     f_impl = impl if impl in ("native", "pallas") else "native"
                     cur = tvc2(cur, xs[m], k_local, xs[nxt], k_local + 1,
                                impl=f_impl, prec=prec)
-                    st = st.after_contraction(k_local, False)
-                    st = st.after_contraction(k_local, False)
+                    st = st.after_pair_contraction(k_local)
                     modes = tuple(mm for mm in modes if mm not in (m, nxt))
                     idx += 2
                 else:

@@ -51,6 +51,21 @@ class ShardState:
             split = split - 1
         return ShardState(split=split, partial=self.partial)
 
+    def after_pair_contraction(self, k: int) -> "ShardState":
+        """State after a *fused* removal of adjacent local modes (k, k+1)
+        (the tvc2 path): a split dim above the pair shifts down by exactly
+        two.  The fused kernel cannot take the Eq. 2 slice path, so the
+        split mode must not be part of the pair — callers gate on that."""
+        split = self.split
+        if split is not None:
+            if split in (k, k + 1):
+                raise ValueError(
+                    f"fused pair ({k}, {k + 1}) may not include the split "
+                    f"dim {split}; use the unfused Eq. 2 slice path")
+            if split > k + 1:
+                split = split - 2
+        return ShardState(split=split, partial=self.partial)
+
 
 def dtvc_local(
     A_loc: jax.Array,

@@ -4,10 +4,16 @@ The paper stores tensors in a *low* precision and promotes to a *high*
 precision immediately before arithmetic ("every arithmetic operation, besides
 accumulations, is done in high precision"), then demotes results back to the
 storage format.  Communication stays in the storage (wire) precision while
-sums accumulate in the compute precision — this required ad-hoc MPI functions
-in the paper; here it is realized by kernels that take
+sums accumulate in the compute precision — this required ad-hoc MPI reduction
+functions in the paper; here it is realized by kernels that take
 ``preferred_element_type`` accumulators and by the ppermute-based collectives
-in :mod:`repro.dist.collectives`.
+:func:`repro.dist.collectives.mp_allreduce` /
+:func:`~repro.dist.collectives.mp_allreduce_ring` /
+:func:`~repro.dist.collectives.mp_allreduce_doubling`, which demote every
+wire hop to ``Precision.storage`` and add in ``Precision.compute`` (with a
+``lax.psum`` fast path when the two dtypes coincide).  The analytic per-hop
+byte accounting lives in
+:func:`repro.dist.collectives.wire_bytes_allreduce`.
 
 On TPU the paper's double/single pair maps to f32/bf16 (no f64 hardware);
 the f16 ("half") storage format of §5.5 is kept as well.  CPU-only tests can

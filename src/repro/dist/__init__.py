@@ -1,0 +1,65 @@
+"""Distribution layer: mixed-precision wire collectives (paper §5.5) and the
+role-based sharding rule tables that map model parameter/cache trees onto
+named mesh axes.
+
+The split of responsibilities follows the paper (and Shi et al.'s extended
+BLAS dispatch discipline): :mod:`repro.core` stays mode-oblivious and purely
+local, while this package owns every byte that crosses the wire —
+
+* :mod:`repro.dist.collectives` — ``mp_allreduce`` (Σ of Eq. 2, delayed
+  reduction of Algorithm 1) with storage-precision hops and
+  compute-precision accumulation, ``all_gather_tiled`` (⊔ of Eq. 1), and the
+  analytic ``wire_bytes_allreduce`` ring/doubling cost models.
+* :mod:`repro.dist.sharding` — ``AxisEnv`` + qualified path→role tables
+  (tp/fsdp, divisibility-gated, replicate-on-mismatch) producing
+  ``param_specs``/``cache_specs``/``named_shardings``, plus the
+  activation-sharding context (``constrain``) and perf toggles
+  (``set_opts``/``opt_enabled``).
+"""
+from . import collectives  # noqa: F401
+from . import sharding  # noqa: F401
+from .collectives import (  # noqa: F401
+    all_gather_tiled,
+    mp_allreduce,
+    mp_allreduce_doubling,
+    mp_allreduce_ring,
+    wire_bytes_allgather,
+    wire_bytes_allreduce,
+)
+from .sharding import (  # noqa: F401
+    KNOWN_OPTS,
+    AxisEnv,
+    activation_sharding,
+    axis_env_for,
+    batch_spec,
+    cache_specs,
+    constrain,
+    named_shardings,
+    opt_enabled,
+    param_specs,
+    set_opts,
+    spec_for_leaf,
+)
+
+__all__ = [
+    "collectives",
+    "sharding",
+    "mp_allreduce",
+    "mp_allreduce_ring",
+    "mp_allreduce_doubling",
+    "all_gather_tiled",
+    "wire_bytes_allreduce",
+    "wire_bytes_allgather",
+    "AxisEnv",
+    "activation_sharding",
+    "axis_env_for",
+    "batch_spec",
+    "cache_specs",
+    "constrain",
+    "named_shardings",
+    "opt_enabled",
+    "param_specs",
+    "set_opts",
+    "spec_for_leaf",
+    "KNOWN_OPTS",
+]

@@ -1,0 +1,391 @@
+"""Role-based sharding rule tables + activation-sharding context.
+
+Parameters, optimizer state, KV caches and activations are mapped onto the
+named mesh axes (``pod``/``data``/``model``) through *roles* rather than raw
+axis names, so the model code never mentions the mesh:
+
+* ``tp``   — tensor-parallel: shard over the ``model`` axis;
+* ``fsdp`` — fully-sharded data parallel: shard over the data axes
+  (``pod``+``data`` when present), gated on a minimum leaf size;
+* ``dp``   — batch dims of activations, over the data axes;
+* ``sp``   — sequence-parallel activation/KV-timeline dims, over ``model``.
+
+Every role is **divisibility-gated**: a dim that the target axes do not
+divide evenly falls back to replication (never padded, never errored) — the
+"replicate-on-mismatch" contract pinned by ``tests/test_sharding.py``.
+
+The table is *qualified by path*: rules match on the leaf name, optionally
+its parent (e.g. RWKV's channel-mix ``ffn/wv`` is an out-projection while
+attention's ``att/wv`` is an in-projection), and the model config (MoE expert
+tables carry a leading expert dim).  Leading layer-stack dims (``vmap``-ed
+layer params) are implicitly replicated by left-padding the matched rule.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AxisEnv",
+    "DEFAULT_FSDP_MIN_SIZE",
+    "KNOWN_OPTS",
+    "activation_sharding",
+    "axis_env_for",
+    "batch_spec",
+    "cache_specs",
+    "constrain",
+    "current_mesh",
+    "named_shardings",
+    "opt_enabled",
+    "param_specs",
+    "set_opts",
+    "spec_for_leaf",
+]
+
+#: data-parallel axes in slowest-to-fastest order; ``model`` is the TP axis.
+DP_AXES = ("pod", "data")
+TP_AXIS = "model"
+
+#: below this many elements a leaf is never FSDP-sharded (the all-gather
+#: latency would dominate any memory win).
+DEFAULT_FSDP_MIN_SIZE = 1 << 22
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisEnv:
+    """Mesh shape + FSDP policy, the only inputs the rule table needs.
+
+    ``mesh_shape``    — axis name → size (pure shape: the rules are mesh-
+                        geometry functions, testable on a 1-device mesh).
+    ``fsdp_axes``     — axes the ``fsdp`` role shards over (empty disables
+                        FSDP, e.g. for serving layouts).
+    ``fsdp_min_size`` — element-count threshold below which ``fsdp`` leaves
+                        replicate.
+    """
+
+    mesh_shape: Mapping[str, int]
+    fsdp_axes: tuple[str, ...] = ()
+    fsdp_min_size: int = DEFAULT_FSDP_MIN_SIZE
+
+    def axis_size(self, name: str) -> int:
+        return int(self.mesh_shape.get(name, 1))
+
+    @property
+    def fsdp_size(self) -> int:
+        return math.prod(self.axis_size(a) for a in self.fsdp_axes) \
+            if self.fsdp_axes else 1
+
+
+def axis_env_for(mesh, *, fsdp: bool = True,
+                 fsdp_min_size: int = DEFAULT_FSDP_MIN_SIZE) -> AxisEnv:
+    """AxisEnv for a concrete mesh (training default: FSDP over pod+data)."""
+    shape = dict(mesh.shape)
+    axes = tuple(a for a in DP_AXES if a in shape) if fsdp else ()
+    return AxisEnv(mesh_shape=shape, fsdp_axes=axes,
+                   fsdp_min_size=fsdp_min_size)
+
+
+# --------------------------------------------------------------------------
+# qualified path -> role tables
+# --------------------------------------------------------------------------
+
+#: sentinel: replicate every dim of the leaf, whatever its rank.
+REPLICATE = "replicate"
+
+#: rules for a leaf's own (unstacked) dims, keyed by leaf name.  Leading
+#: layer-stack dims are left-padded with None at match time.
+_NAME_RULES: dict[str, object] = {
+    # in-projections (d_model, out): FSDP the contraction dim, TP the output
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wg": ("fsdp", "tp"), "wr": ("fsdp", "tp"),
+    "w_q": ("fsdp", "tp"), "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+    "w_x": ("fsdp", "tp"), "w_a": ("fsdp", "tp"), "w_i": ("fsdp", "tp"),
+    "img_proj": ("fsdp", "tp"),
+    # out-projections (in, d_model): transposed roles
+    "wo": ("tp", "fsdp"), "w_o": ("tp", "fsdp"), "w_out": ("tp", "fsdp"),
+    "w_down": ("tp", "fsdp"),
+    # embeddings: vocab over TP (divisibility-gated: only padded vocabs
+    # shard), d_model over FSDP
+    "tok": ("tp", "fsdp"),
+    # biases ride the TP-sharded output dim of their matmul
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",), "b_up": ("tp",),
+    # norms / small per-channel vectors: replicated
+    "scale": REPLICATE, "bias": REPLICATE, "bo": REPLICATE,
+    "b_down": REPLICATE, "b_a": REPLICATE, "b_i": REPLICATE,
+    "lam": REPLICATE, "conv_w": REPLICATE, "conv_b": REPLICATE,
+    "ln_x_scale": REPLICATE, "ln_x_bias": REPLICATE,
+    "ckv_scale": REPLICATE, "bonus_u": REPLICATE,
+    # RWKV data-dependent mixing/decay LoRAs: explicitly unsharded (tiny
+    # inner rank; sharding them costs more collective latency than compute)
+    "maa_x": REPLICATE, "maa_base": REPLICATE,
+    "maa_w1": REPLICATE, "maa_w2": REPLICATE,
+    "decay_base": REPLICATE, "decay_w1": REPLICATE, "decay_w2": REPLICATE,
+    "mu_k": REPLICATE, "mu_r": REPLICATE,
+}
+
+#: (parent, name) rules — more specific than _NAME_RULES.
+_QUALIFIED_RULES: dict[tuple[str, str], object] = {
+    # RWKV channel-mix: wv is the (d_ff, d_model) out-projection while the
+    # generic wv rule is the attention in-projection
+    ("ffn", "wv"): ("tp", "fsdp"),
+    ("ffn", "wk"): ("fsdp", "tp"),
+    # MLA: latent down-projection replicates its small latent dim; the
+    # decompression tables shard over heads (TP)
+    ("mla", "w_dkv"): ("fsdp", None),
+    ("mla", "w_uk"): (None, "tp", None),
+    ("mla", "w_uv"): (None, "tp", None),
+}
+
+#: MoE expert tables (leading expert dim is the EP==TP dim); active when the
+#: config has an MoE block and the leaf lives under ``ffn``.
+_MOE_RULES: dict[str, object] = {
+    "router": ("fsdp", None),
+    "w_gate": ("tp", "fsdp", None),
+    "w_up": ("tp", "fsdp", None),
+    "w_down": ("tp", None, "fsdp"),
+}
+
+
+def _key_name(entry) -> str:
+    """Normalize a tree-path entry (DictKey / GetAttrKey / plain str)."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def _roles_for(names: Sequence, shape: Sequence[int], cfg) -> tuple:
+    """Resolve the per-dim roles for a leaf at qualified path ``names``.
+
+    Returns a tuple of len(shape) entries from {"tp", "fsdp", None}.  The
+    matched rule covers the leaf's own trailing dims; leading stack dims
+    (vmapped layers / super-blocks) get None by left-padding.
+    """
+    names = [_key_name(n) for n in names]
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    rule = None
+    if cfg is not None and getattr(cfg, "moe", None) is not None \
+            and parent == "ffn" and name in _MOE_RULES:
+        rule = _MOE_RULES[name]
+    elif (parent, name) in _QUALIFIED_RULES:
+        rule = _QUALIFIED_RULES[(parent, name)]
+    elif name in _NAME_RULES:
+        rule = _NAME_RULES[name]
+    elif len(shape) >= 2:
+        rule = ("fsdp", "tp")  # generic matmul weight: in-proj roles
+    else:
+        rule = REPLICATE
+    if rule == REPLICATE:
+        return (None,) * len(shape)
+    rule = tuple(rule)
+    if len(rule) > len(shape):
+        rule = rule[len(rule) - len(shape):]
+    return (None,) * (len(shape) - len(rule)) + rule
+
+
+def _entry_for_role(role, dim: int, n_elements: int, ax: AxisEnv):
+    """Role -> PartitionSpec entry, divisibility- and size-gated."""
+    if role == "tp":
+        if TP_AXIS in ax.mesh_shape and dim % ax.axis_size(TP_AXIS) == 0:
+            return TP_AXIS
+        return None
+    if role == "fsdp":
+        axes = ax.fsdp_axes
+        if axes and n_elements >= ax.fsdp_min_size and dim % ax.fsdp_size == 0:
+            return axes[0] if len(axes) == 1 else tuple(axes)
+        return None
+    return None
+
+
+def spec_for_leaf(path, leaf, cfg, ax: AxisEnv) -> P:
+    """PartitionSpec for one parameter leaf (path entries carry ``.key``)."""
+    shape = tuple(leaf.shape)
+    roles = _roles_for(list(path), shape, cfg)
+    n = math.prod(shape) if shape else 0
+    return P(*[_entry_for_role(r, d, n, ax) for d, r in zip(shape, roles)])
+
+
+def param_specs(cfg, tree, mesh, *, fsdp: bool = True,
+                env: Optional[AxisEnv] = None):
+    """PartitionSpec tree aligned leaf-for-leaf with the parameter tree."""
+    ax = env if env is not None else axis_env_for(mesh, fsdp=fsdp)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: spec_for_leaf(p, l, cfg, ax), tree)
+
+
+def named_shardings(cfg, tree, mesh, *, fsdp: bool = True,
+                    env: Optional[AxisEnv] = None):
+    """NamedSharding tree for jit ``in/out_shardings`` / ``device_put``."""
+    ax = env if env is not None else axis_env_for(mesh, fsdp=fsdp)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, spec_for_leaf(p, l, cfg, ax)), tree)
+
+
+# --------------------------------------------------------------------------
+# cache specs (serving layout)
+# --------------------------------------------------------------------------
+
+#: attention caches laid out (stack, B, ..., S, feat): batch over the data
+#: axes, the KV *timeline* sequence-sharded over ``model`` (SP — the paper's
+#: "keep outputs distributed" discipline applied to the cache).
+_SEQ_CACHE_KEYS = frozenset({"k", "v", "xk", "xv", "c", "pe"})
+#: recurrent states (stack, B, ...): batch-sharded only.
+_BATCH_CACHE_KEYS = frozenset({"att_x", "ffn_x", "wkv", "h", "conv",
+                               "tail_h", "tail_conv"})
+_SCALAR_CACHE_KEYS = frozenset({"pos", "slot_pos"})
+
+
+def _dp_entry(mesh_shape: Mapping[str, int], dim: int):
+    axes = tuple(a for a in DP_AXES if a in mesh_shape)
+    if not axes:
+        return None
+    total = math.prod(int(mesh_shape[a]) for a in axes)
+    if dim % total:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def cache_specs(cfg, tree, mesh):
+    """PartitionSpec tree for a decode cache (KV timeline / recurrent
+    states).  Sequence dims shard over ``model`` (SP), batch dims over the
+    data axes; positions and ragged bookkeeping replicate."""
+    shape_by_axis = dict(mesh.shape)
+    tp = int(shape_by_axis.get(TP_AXIS, 1))
+
+    def leaf(path, l):
+        name = _key_name(path[-1]) if path else ""
+        shape = tuple(l.shape)
+        if not shape or name in _SCALAR_CACHE_KEYS:
+            return P()
+        entries = [None] * len(shape)
+        if name in _SEQ_CACHE_KEYS and len(shape) >= 3:
+            entries[1] = _dp_entry(shape_by_axis, shape[1])
+            if TP_AXIS in shape_by_axis and shape[-2] % tp == 0:
+                entries[-2] = TP_AXIS
+        elif name in _BATCH_CACHE_KEYS and len(shape) >= 2:
+            # batch dim: right after the stack dims (super-block states are
+            # stacked twice)
+            b_dim = 2 if name in ("h", "conv") and len(shape) >= 4 else 1
+            entries[b_dim] = _dp_entry(shape_by_axis, shape[b_dim])
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def batch_spec(mesh, ndim: int = 2) -> P:
+    """Spec for a (B, ...) host batch: leading dim over the data axes."""
+    axes = tuple(a for a in DP_AXES if a in mesh.shape)
+    lead = (axes[0] if len(axes) == 1 else axes) if axes else None
+    return P(lead, *(None,) * max(0, ndim - 1))
+
+
+# --------------------------------------------------------------------------
+# activation sharding context + perf toggles
+# --------------------------------------------------------------------------
+
+_MESH_STACK: list = []
+
+#: perf toggles consumed across the stack (``--opts`` on the dry-run CLI):
+#:   serving_replicated_params — serving cells drop FSDP weight sharding
+#:   seq_shard_activations    — SP the residual stream between blocks
+#:   moe_bf16_combine         — half-width EP combine psum
+KNOWN_OPTS = frozenset({
+    "serving_replicated_params",
+    "seq_shard_activations",
+    "moe_bf16_combine",
+})
+_ENABLED_OPTS: set = set()
+
+
+def set_opts(names) -> None:
+    """Replace the enabled perf-toggle set (validated against KNOWN_OPTS)."""
+    names = set(names)
+    unknown = names - KNOWN_OPTS
+    if unknown:
+        raise ValueError(
+            f"unknown opts {sorted(unknown)}; choose from {sorted(KNOWN_OPTS)}")
+    _ENABLED_OPTS.clear()
+    _ENABLED_OPTS.update(names)
+
+
+def opt_enabled(name: str) -> bool:
+    if name not in KNOWN_OPTS:
+        raise ValueError(f"unknown opt {name!r}; known: {sorted(KNOWN_OPTS)}")
+    return name in _ENABLED_OPTS
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh):
+    """Make ``mesh`` the target of :func:`constrain` inside the block.
+
+    Model code calls ``constrain(x, *roles)`` unconditionally; outside this
+    context (unit tests, single-device runs) it is a literal no-op."""
+    _MESH_STACK.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def current_mesh():
+    return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+def _axis_is_manual(name: str) -> bool:
+    """True when ``name`` is currently bound as a shard_map manual axis (the
+    per-shard layout is explicit there; sharding constraints over it would be
+    meaningless and are rejected by jax)."""
+    try:
+        lax.axis_size(name)
+        return True
+    except Exception:
+        return False
+
+
+def _strip_manual(entry):
+    if entry is None:
+        return None
+    names = entry if isinstance(entry, tuple) else (entry,)
+    kept = tuple(n for n in names if not _axis_is_manual(n))
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else kept
+
+
+def constrain(x, *roles):
+    """with_sharding_constraint by role ("dp" | "sp" | "tp" | None per dim),
+    against the mesh installed by :func:`activation_sharding`.  Identity when
+    no mesh is active; every role is divisibility-gated like the rule table,
+    and roles over axes the caller has already made manual (dp_explicit's
+    shard_map region) are dropped."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(roles) != x.ndim:
+        raise ValueError(
+            f"constrain got {len(roles)} roles for a rank-{x.ndim} array")
+    shape_by_axis = dict(mesh.shape)
+    entries = []
+    for dim, role in zip(x.shape, roles):
+        if role is None:
+            entries.append(None)
+        elif role == "dp":
+            entries.append(_dp_entry(shape_by_axis, dim))
+        elif role in ("sp", "tp"):
+            tp = int(shape_by_axis.get(TP_AXIS, 1))
+            entries.append(TP_AXIS if TP_AXIS in shape_by_axis
+                           and dim % tp == 0 else None)
+        else:
+            raise ValueError(f"unknown activation role {role!r}")
+    entries = [_strip_manual(e) for e in entries]
+    if all(e is None for e in entries):
+        return x
+    return lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

@@ -31,12 +31,12 @@ from repro.launch.mesh import make_debug_mesh, make_production_mesh  # noqa: E40
 
 def _compile_costs(cfg, shape, mesh) -> dict:
     """Lower+compile one config and return per-device cost numbers."""
-    from repro.analysis.roofline import collective_bytes
+    from repro.analysis.roofline import collective_bytes, cost_dict
     with activation_sharding(mesh):
         fn, args = specs_mod.build_cell(cfg, shape, mesh)
         with mesh:
             compiled = jax.jit(fn).lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     out = {"flops": float(cost.get("flops", 0.0)),
            "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -85,20 +85,26 @@ def init_state(params, cfg: CompressorCfg, seed: int = 0,
 
 
 def wire_bytes_summary(params, cfg: CompressorCfg, p_dp: int) -> dict:
-    """Analytic wire traffic per step (per device): compressed vs dense."""
+    """Analytic wire traffic per step (per device): compressed vs dense.
+    Uses the same size-based ring/doubling dispatch as ``mp_allreduce``
+    (``coll.allreduce_algo``), so the accounting matches the runtime
+    schedule."""
     prec = get_policy(cfg.prec)
     dense = compressed = 0
     for leaf in jax.tree.leaves(params):
         n = math.prod(leaf.shape)
-        dense += coll.wire_bytes_allreduce(n, p_dp, prec.storage_bytes)
+        dense += coll.wire_bytes_allreduce(n, p_dp, prec.storage_bytes,
+                                           coll.allreduce_algo(n, p_dp))
         if _eligible(leaf.shape, cfg):
             vshape = _tensor_view(leaf.shape, cfg)
             vec = sum(vshape)
             compressed += (cfg.rank * cfg.sweeps
-                           * coll.wire_bytes_allreduce(vec, p_dp, prec.storage_bytes,
-                                                       "doubling"))
+                           * coll.wire_bytes_allreduce(
+                               vec, p_dp, prec.storage_bytes,
+                               coll.allreduce_algo(vec, p_dp)))
         else:
-            compressed += coll.wire_bytes_allreduce(n, p_dp, prec.storage_bytes)
+            compressed += coll.wire_bytes_allreduce(
+                n, p_dp, prec.storage_bytes, coll.allreduce_algo(n, p_dp))
     return {"dense_bytes": dense, "compressed_bytes": compressed,
             "ratio": dense / max(1, compressed)}
 

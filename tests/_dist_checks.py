@@ -98,6 +98,15 @@ def main():
                                rtol=1e-5, atol=1e-5)
     ok("mp_ring_ragged")
 
+    # the dispatching entry point: bf16 storage must track a f32 psum within
+    # bf16-wire tolerance (paper §5.5: sums accumulate high, wire moves low)
+    got = run_coll(lambda t: coll.mp_allreduce(t[0], "x", BF16_F32)[None], v)
+    want_psum = run_coll(lambda t: jax.lax.psum(t[0], "x")[None], v)
+    err = np.abs(np.asarray(got[0]) - np.asarray(want_psum[0])).max() \
+        / (np.abs(np.asarray(want_psum[0])).max() + 1e-9)
+    assert err < 0.02, f"mp_allreduce(bf16) vs psum(f32): {err}"
+    ok("mp_allreduce_matches_psum")
+
     # ---- dHOPM_3 ------------------------------------------------------------
     shape = (8, 24, 16)
     A = jnp.asarray(rng.normal(size=shape).astype(np.float32))
@@ -116,6 +125,17 @@ def main():
                                        rtol=1e-3, atol=1e-4)
         np.testing.assert_allclose(float(lam_d), float(lam_seq), rtol=1e-3)
     ok("dhopm3_matches_sequential_all_s")
+
+    # regression: tvc2 pair fusion with a split dim above the fused pair
+    # (s = d-1, the paper's recommended split) must not mis-track ShardState
+    for s in (0, 2):
+        xs_f, lam_f = dh.dhopm3(A, xs0, mesh, "x", s=s, sweeps=3,
+                                fuse_pairs=True)
+        for a, b in zip(xs_f, xs_seq):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(float(lam_f), float(lam_seq), rtol=1e-3)
+    ok("dhopm3_fused_matches_sequential")
 
     # exact rank-1 recovery in one sweep
     us = [rng.normal(size=(n,)).astype(np.float32) for n in shape]

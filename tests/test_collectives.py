@@ -1,0 +1,102 @@
+"""Mixed-precision wire collectives: analytic cost models + single-device
+semantics.  (The 8-device numerical checks — ring/doubling exactness in f32,
+bf16-wire error bounds, and mp_allreduce-vs-psum — run in the subprocess
+suite, tests/_dist_checks.py via tests/test_distributed.py.)"""
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.mixed_precision import BF16_F32, F32
+from repro.dist import collectives as coll
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("n,itemsize", [(1000, 4), (8192, 2), (37, 4)])
+def test_wire_bytes_ring_closed_form(p, n, itemsize):
+    got = coll.wire_bytes_allreduce(n, p, itemsize, "ring")
+    assert got == pytest.approx(2.0 * (p - 1) / p * n * itemsize)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("n,itemsize", [(1000, 4), (8192, 2)])
+def test_wire_bytes_doubling_closed_form(p, n, itemsize):
+    got = coll.wire_bytes_allreduce(n, p, itemsize, "doubling")
+    assert got == pytest.approx(math.log2(p) * n * itemsize)
+
+
+def test_allreduce_algo_dispatch():
+    """Runtime schedule and analytic accounting share one rule: doubling for
+    small payloads on power-of-two axes, ring for large tensors."""
+    small = coll.DOUBLING_MAX_ELEMENTS
+    assert coll.allreduce_algo(small, 8) == "doubling"
+    assert coll.allreduce_algo(small + 1, 8) == "ring"     # dense-leaf regime
+    assert coll.allreduce_algo(small, 6) == "ring"         # non-pow2 axis
+    # and the dispatch picks the cheaper closed form in each regime (p >= 4)
+    for p in (4, 8):
+        for n in (256, 1 << 20):
+            algo = coll.allreduce_algo(n, p)
+            other = "ring" if algo == "doubling" else "doubling"
+            if n > small:
+                assert coll.wire_bytes_allreduce(n, p, 4, algo) <= \
+                    coll.wire_bytes_allreduce(n, p, 4, other)
+
+
+def test_wire_bytes_degenerate_and_ordering():
+    # p = 1: nothing crosses the wire
+    assert coll.wire_bytes_allreduce(4096, 1, 4, "ring") == 0.0
+    assert coll.wire_bytes_allreduce(4096, 1, 4, "doubling") == 0.0
+    assert coll.wire_bytes_allgather(4096, 1, 4) == 0.0
+    # large-n regime: ring moves fewer bytes than doubling for p >= 4
+    for p in (4, 8):
+        ring = coll.wire_bytes_allreduce(1 << 20, p, 4, "ring")
+        dbl = coll.wire_bytes_allreduce(1 << 20, p, 4, "doubling")
+        assert ring < dbl
+    # gather is half the ring all-reduce (the Eq. 1 vs Eq. 2 cost split)
+    assert coll.wire_bytes_allgather(1000, 8, 4) == pytest.approx(
+        coll.wire_bytes_allreduce(1000, 8, 4, "ring") / 2)
+    with pytest.raises(ValueError):
+        coll.wire_bytes_allreduce(10, 2, 4, "bogus")
+
+
+def _run_p1(fn, x):
+    """Run a collective on a 1-device mesh (the main test session keeps a
+    single CPU device per the project rule)."""
+    mesh = jax.make_mesh((1,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    f = jax.shard_map(fn, mesh=mesh, in_specs=P(), out_specs=P(),
+                      check_vma=False)
+    return jax.jit(f)(x)
+
+
+def test_mp_allreduce_single_process_identity():
+    """p = 1 edge: every schedule degenerates to a promote-only identity."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(37,)), jnp.float32)
+    for fn in (coll.mp_allreduce, coll.mp_allreduce_ring,
+               coll.mp_allreduce_doubling):
+        got = _run_p1(lambda t, fn=fn: fn(t, "x", F32), x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x))
+        assert got.dtype == jnp.float32
+
+
+def test_mp_allreduce_bf16_promotes_to_compute():
+    """bf16-storage inputs come back in the compute dtype (f32), matching
+    the §5.5 accumulate-high contract."""
+    x = jnp.asarray([1.0, 2.0, 3.0], jnp.bfloat16)
+    got = _run_p1(lambda t: coll.mp_allreduce(t, "x", BF16_F32), x)
+    assert got.dtype == jnp.float32
+
+
+def test_mp_allreduce_rejects_unknown_algo():
+    x = jnp.ones((4,), jnp.float32)
+    with pytest.raises(ValueError):
+        _run_p1(lambda t: coll.mp_allreduce(t, "x", BF16_F32, algo="nope"), x)
+
+
+def test_all_gather_tiled_p1_identity():
+    x = jnp.arange(6.0).reshape(2, 3)
+    got = _run_p1(lambda t: coll.all_gather_tiled(t, "x", axis=1), x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))

@@ -4,7 +4,9 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="optional dep: pip install -e .[test]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_config
 from repro.models.attention import chunked_attention, decode_attention, reference_attention

@@ -16,8 +16,10 @@ EXPECTED = [
     "mp_ring_bf16_bounded",
     "mp_doubling_bf16_bounded",
     "mp_ring_ragged",
+    "mp_allreduce_matches_psum",
     "hopm3_equals_classic",
     "dhopm3_matches_sequential_all_s",
+    "dhopm3_fused_matches_sequential",
     "dhopm3_rank1_recovery",
     "hopm3_partial_implicit_sum",
     "dhopm3_bf16",

@@ -97,6 +97,36 @@ def test_fused_pairs_equal_plain():
         assert abs(float(la) - float(lb)) / float(la) < 1e-4
 
 
+def test_shard_state_pair_contraction_bookkeeping():
+    """Regression: a fused pair removal below the split dim must shift the
+    split index by exactly 2 (and leave it alone when the split is below)."""
+    from repro.core.dtvc import ShardState
+
+    # split above the pair: d-1 style split, fused pair at (0, 1)
+    st = ShardState(split=3).after_pair_contraction(0)
+    assert st.split == 1 and not st.partial
+    # split immediately above the pair
+    st = ShardState(split=2).after_pair_contraction(0)
+    assert st.split == 0
+    # split below the pair: untouched
+    st = ShardState(split=0).after_pair_contraction(1)
+    assert st.split == 0
+    # the pair transition must agree with two sequential removals
+    for split in (0, 3, 4, 5):
+        for k in (1, 2):
+            if split in (k, k + 1):
+                continue
+            seq = ShardState(split=split)
+            seq = seq.after_contraction(k, False)
+            seq = seq.after_contraction(k, False)
+            assert ShardState(split=split).after_pair_contraction(k) == seq
+    # a pair overlapping the split is a caller bug, not a silent mis-track
+    with pytest.raises(ValueError):
+        ShardState(split=2).after_pair_contraction(1)
+    with pytest.raises(ValueError):
+        ShardState(split=1).after_pair_contraction(1)
+
+
 def test_fused_streamed_memory_strictly_better():
     from repro.core import memory_model as mm
     for d, n in [(4, 175), (6, 31), (10, 8)]:

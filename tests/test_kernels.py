@@ -3,7 +3,9 @@ against the pure-jnp oracles, all in interpret mode (CPU)."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="optional dep: pip install -e .[test]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ops, ref
 

@@ -2,7 +2,9 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="optional dep: pip install -e .[test]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import memory_model as mm
 
