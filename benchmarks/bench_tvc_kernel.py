@@ -1,0 +1,132 @@
+"""Achieved-bandwidth harness for the zero-copy TVC kernel path.
+
+Measures GB/s per (order, mode, dtype, aligned|ragged) cell — streamed bytes
+per :func:`repro.core.tvc.tvc_bytes` (the paper's §2/§5 bandwidth
+denominator, which the no-copy kernels now move *exactly*) over median wall
+time — normalized against a measured STREAM-triad soak, and writes the
+trajectory file ``BENCH_TVC.json`` at the repo root so future PRs have a
+fixed schema to regress against.
+
+Engine selection: on TPU the cells time the compiled Pallas kernels
+(``impl="pallas"``); elsewhere a full run times the XLA ``native`` einsum as
+the bandwidth proxy (interpret-mode Pallas timings are meaningless), while
+``--smoke`` runs tiny shapes through interpret-mode Pallas purely to exercise
+the writer and schema on CPU CI.  The engine is recorded per run so
+trajectory comparisons stay apples-to-apples.
+
+Each cell also records ``pad_overhead`` — the streamed-traffic ratio the old
+pad-and-copy wrapper would have paid for that shape (from
+:func:`repro.core.memory_model.pad_overhead`); aligned cells sit at 1.0.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.core import tvc, tvc_bytes
+from repro.core.memory_model import pad_overhead
+from repro.core.mixed_precision import get_policy
+from repro.core.tvc import mode_uv
+from repro.kernels import autotune
+from .common import emit, rand_tensor, stream_triad_gbs, time_fn
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = ROOT / "BENCH_TVC.json"
+# smoke runs must never clobber the committed full-run trajectory artifact
+SMOKE_OUT_PATH = ROOT / "BENCH_TVC.smoke.json"
+
+SHAPES = {
+    "aligned": {3: (256, 256, 256), 4: (64, 64, 64, 64), 5: (24,) * 5},
+    "ragged": {3: (251, 257, 263), 4: (61, 67, 71, 59),
+               5: (23, 19, 29, 31, 17)},
+}
+SMOKE_SHAPES = {
+    "aligned": {3: (8, 16, 128), 4: (4, 8, 8, 16)},
+    "ragged": {3: (5, 7, 129), 4: (3, 5, 7, 9)},
+}
+DTYPES = ("f32", "bf16")
+
+
+def _engine(smoke: bool) -> str:
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "pallas-interpret" if smoke else "native-xla"
+
+
+def _cell_blocks(shape, k, prec):
+    u, nk, v = mode_uv(shape, k)
+    if v == 1:
+        bu, bk = autotune.pick_tvc2_blocks(
+            u, nk, storage=prec.storage, compute=prec.compute)
+        return u, nk, v, (bu, bk, 1)
+    return u, nk, v, autotune.pick_tvc3_blocks(
+        u, nk, v, storage=prec.storage, compute=prec.compute)
+
+
+def run(smoke: bool = False, out_path=None):
+    if out_path:
+        out_path = pathlib.Path(out_path)
+    else:
+        out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
+    shapes = SMOKE_SHAPES if smoke else SHAPES
+    engine = _engine(smoke)
+    impl = "native" if engine == "native-xla" else "pallas"
+    peak = stream_triad_gbs(2_000_000 if smoke else 30_000_000)
+    lines = [emit("stream_triad", 0.0, f"{peak:.1f}GB/s")]
+
+    cells = []
+    for layout, by_order in shapes.items():
+        for d, shape in sorted(by_order.items()):
+            modes = (0, d - 1) if smoke else range(d)
+            for polname in DTYPES:
+                prec = get_policy(polname)
+                A = rand_tensor(shape, dtype=prec.storage, seed=d)
+                itemsize = prec.storage_bytes
+                for k in modes:
+                    x = rand_tensor((shape[k],), dtype=prec.storage,
+                                    seed=100 + k)
+                    fn = jax.jit(lambda A, x, k=k: tvc(A, x, k, impl=impl,
+                                                       prec=prec))
+                    t = time_fn(fn, A, x, reps=3 if smoke else 5)
+                    nbytes = tvc_bytes(shape, k, itemsize)
+                    gbs = nbytes / t / 1e9
+                    u, nk, v, blocks = _cell_blocks(shape, k, prec)
+                    cells.append({
+                        "order": d,
+                        "mode": k,
+                        "dtype": polname,
+                        "layout": layout,
+                        "shape": list(shape),
+                        "blocks": list(blocks),
+                        "streamed_bytes": nbytes,
+                        "us": t * 1e6,
+                        "gbs": gbs,
+                        "pct_peak": gbs / peak * 100.0,
+                        "pad_overhead": pad_overhead(u, nk, v, blocks),
+                    })
+                    lines.append(emit(
+                        f"tvck_d{d}m{k}_{polname}_{layout}", t * 1e6,
+                        f"{gbs:.2f}GB/s={gbs/peak*100:.0f}%peak"))
+
+    payload = {
+        "meta": {
+            "schema": 1,
+            "engine": engine,
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "smoke": smoke,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        },
+        "stream_triad_gbs": peak,
+        "cells": cells,
+    }
+    out_path.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"# wrote {out_path} ({len(cells)} cells)", flush=True)
+    return lines, payload
+
+
+if __name__ == "__main__":
+    run()

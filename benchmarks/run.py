@@ -1,22 +1,29 @@
 """Benchmark harness — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [--only tvc,hopm,...]
+    PYTHONPATH=src python -m benchmarks.run [--only tvc,hopm,...] [--smoke]
+
+``--smoke`` runs suites that support it (currently ``tvc_kernel``) on tiny
+shapes — CI uses it to keep the BENCH_TVC.json writer and schema exercised
+on CPU without pretending the timings mean anything.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
-SUITES = ("memory_model", "tvc", "hopm", "mixed_precision", "scaling",
-          "compression")
+SUITES = ("memory_model", "tvc", "tvc_kernel", "hopm", "mixed_precision",
+          "scaling", "compression")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"comma list from {SUITES}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / schema-exercise mode")
     args = ap.parse_args()
     chosen = args.only.split(",") if args.only else list(SUITES)
 
@@ -26,8 +33,11 @@ def main() -> None:
     for name in chosen:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         print(f"# == {name} ==", flush=True)
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         try:
-            mod.run()
+            mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
             print(f"# FAILED {name}: {e}", flush=True)

@@ -63,7 +63,10 @@ def _hopm_sweeps(
     ``fuse_pairs`` (beyond-paper): contract adjacent-mode pairs in ONE
     streaming pass (tvc2), skipping the order-(d-1) intermediate — except at
     the W-cache boundary (which must materialize) and at the split mode
-    (which needs the Eq. 2 slice path)."""
+    (which needs the Eq. 2 slice path).  With ``impl="pallas"`` both the
+    single and the fused contractions run through the zero-copy ragged
+    kernels, so the ever-shrinking (and never block-multiple) chain
+    intermediates stream without padding copies."""
     d = A_loc.ndim
     xs = list(xs)
     st0 = ShardState(split=split, partial=partial_in)

@@ -85,6 +85,13 @@ def dtvc_local(
     When ``k == state.split`` (Eq. 2) the function slices ``x`` to this
     process's range and marks the output partial — the global Σ is *delayed*
     (Algorithm 1) until the caller reduces.
+
+    With ``impl="pallas"`` the shard streams through the zero-copy ragged
+    kernels: local extents are almost never block multiples after a 1-D
+    split, and the kernels handle that with in-kernel edge masking instead of
+    padded copies, so per-shard traffic stays at
+    :func:`~repro.core.tvc.tvc_bytes` of the *local* view.  The
+    ``alpha``/``beta``/``y`` update is folded into the kernel epilogue.
     """
     prec = get_policy(prec)
     hit_split = state.split is not None and k == state.split

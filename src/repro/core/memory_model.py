@@ -21,7 +21,60 @@ from typing import Literal
 __all__ = [
     "m_seq", "M_seq", "m_par_j_eq_s", "m_par_j_ne_s", "M_par", "M_par_rec",
     "eta_inv", "ring_allreduce_touched", "simulate_sweep", "H_inv",
+    "tvc_streamed_elems", "tvc_padded_copy_elems", "pad_overhead",
 ]
+
+
+# --------------------------------------------------------------------------
+# Single-kernel streamed-memory accounting (paper §2/§5 bandwidth denominator)
+# --------------------------------------------------------------------------
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def tvc_streamed_elems(u: int, nk: int, v: int, beta: float = 0.0) -> int:
+    """Elements streamed by ONE no-copy TVC on the (u, n_k, v) view: read A,
+    read x, write Y (+ one read of Y when the beta-update is fused into the
+    kernel epilogue).  This is what the ragged Pallas path actually moves —
+    multiply by the storage itemsize for bytes."""
+    y_traffic = u * v * (2 if beta else 1)
+    return u * nk * v + nk + y_traffic
+
+
+def tvc_padded_copy_elems(
+    u: int, nk: int, v: int,
+    blocks: tuple[int, int, int],
+    beta: float = 0.0,
+) -> int:
+    """Elements the legacy pad-and-copy wrapper streamed for the same TVC:
+    materializing a zero-padded copy of A (read original + write padded),
+    streaming the *padded* view through the kernel, and — for beta != 0 — a
+    separate full axpby pass (read kernel output, read Y, write Y) instead of
+    the fused epilogue.  Kept as the reference point for the bandwidth
+    harness's ``pad_overhead`` column."""
+    bu, bk, bv = blocks
+    up, kp, vp = _round_up(u, bu), _round_up(nk, bk), _round_up(v, bv)
+    total = 0
+    if (up, kp, vp) != (u, nk, v):
+        total += u * nk * v + up * kp * vp      # jnp.pad: read A, write copy
+    total += up * kp * vp + kp + up * vp        # kernel pass on the padded view
+    if beta:
+        total += 3 * u * v                      # axpby: read Y', read Y, write Y
+    if (up, vp) != (u, v):
+        total += 2 * u * v                      # slice-back copy: read + write
+    return total
+
+
+def pad_overhead(
+    u: int, nk: int, v: int,
+    blocks: tuple[int, int, int],
+    beta: float = 0.0,
+) -> float:
+    """Streamed-traffic ratio legacy pad-and-copy / no-copy (>= 1; 1 when the
+    shape is already a block multiple and beta == 0)."""
+    return (tvc_padded_copy_elems(u, nk, v, blocks, beta)
+            / tvc_streamed_elems(u, nk, v, beta))
 
 
 # --------------------------------------------------------------------------

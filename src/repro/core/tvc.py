@@ -63,7 +63,14 @@ def tvc_shape(shape: Sequence[int], k: int) -> tuple[int, ...]:
 def tvc_bytes(shape: Sequence[int], k: int, itemsize: int, beta: float = 0.0) -> int:
     """Streamed (touched) memory of one TVC: read A, read x, write Y
     (+ read Y when beta != 0).  This is the denominator of the paper's
-    bandwidth metric."""
+    bandwidth metric.
+
+    The Pallas path now streams *exactly* these bytes: ragged shapes are
+    handled with in-kernel edge masking (no padded copies of A), and the
+    ``beta != 0`` update is fused into the kernel epilogue (one extra read of
+    Y, not a second axpby pass).  See
+    :func:`repro.core.memory_model.tvc_padded_copy_elems` for what the old
+    pad-and-copy wrapper used to stream."""
     n = math.prod(shape)
     nk = shape[k]
     out = n // nk
@@ -136,9 +143,20 @@ def tvc(
     if x.shape != (nk,):
         raise ValueError(f"x shape {x.shape} incompatible with mode {k} of {shape}")
     a3 = A.reshape(u, nk, v)
+    out_dtype = A.dtype if prec.storage is None else prec.storage
 
     if impl == "pallas":
         from repro.kernels import ops as kops  # local import: optional dep cycle
+        if isinstance(alpha, (int, float)) and isinstance(beta, (int, float)):
+            # Static alpha/beta: the BLAS update runs inside the kernel
+            # epilogue (one extra read of y, no second axpby pass).
+            if float(beta) != 0.0 and y is None:
+                raise ValueError("beta != 0 requires y")
+            y_in = None if float(beta) == 0.0 else y.reshape(u, v)
+            y2 = kops.tvc_pallas(a3, x, y_in, alpha=float(alpha),
+                                 beta=float(beta), prec=prec)
+            return y2.reshape(tvc_shape(shape, k)).astype(out_dtype)
+        # Traced alpha/beta (rare): fall through to the generic epilogue.
         y2 = kops.tvc_pallas(a3, x, prec=prec)
     elif impl == "native":
         y2 = _native(a3, x, prec)
@@ -156,7 +174,6 @@ def tvc(
         if y is None:
             raise ValueError("beta != 0 requires y")
         y2 = y2 + jnp.asarray(beta, prec.compute) * y.reshape(u, v).astype(prec.compute)
-    out_dtype = A.dtype if prec.storage is None else prec.storage
     return y2.reshape(tvc_shape(shape, k)).astype(out_dtype)
 
 

@@ -1,9 +1,12 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
 * :mod:`tvc_kernel` — the paper's native mode-oblivious TVC (HBM->VMEM
-  streaming, mixed-precision accumulator).
-* :mod:`axpby`      — the paper's §5.5 mixed-precision axpby.
-* :mod:`ops`        — jit'd wrappers (padding, dispatch, views).
+  streaming, mixed-precision accumulator, ragged ``pl.cdiv`` grids with
+  in-kernel edge masking, fused alpha/beta epilogue).
+* :mod:`axpby`      — the paper's §5.5 mixed-precision axpby (zero-copy).
+* :mod:`autotune`   — VMEM-aware block-size selection (dtype tiling quantum,
+  byte budget, view aspect ratio).
+* :mod:`ops`        — jit'd wrappers (autotuned dispatch, views; no padding).
 * :mod:`ref`        — pure-jnp oracles.
 """
-from . import ops, ref  # noqa: F401
+from . import autotune, ops, ref  # noqa: F401

@@ -1,0 +1,236 @@
+"""VMEM-aware block-size autotuning for the ragged TVC kernels.
+
+The kernels in :mod:`repro.kernels.tvc_kernel` stream arbitrary (u, n_k, v)
+views with ``pl.cdiv`` grids and in-kernel edge masking, so block sizes are a
+pure performance knob — any choice is correct.  This module picks them from
+three inputs, mirroring the paper's cache-blocking discussion (§3, §5):
+
+* the dtype's native tiling quantum — TPU tiles the two minor dims of a VMEM
+  block as (sublane, lane) = (8, 128) for f32, (16, 128) for bf16/f16 and
+  (32, 128) for int8/fp8, so sublane-dim blocks are rounded to 8/16/32 and
+  lane-dim blocks to 128;
+* a VMEM byte budget — operand blocks are double-buffered by the Mosaic
+  pipeline, so ``2 * inputs + accumulator + output`` must fit comfortably
+  inside the ~16 MiB of VMEM (default budget: 8 MiB, override with the
+  ``REPRO_TVC_VMEM_BUDGET`` env var or the ``budget`` argument);
+* the view's aspect ratio — leftover budget is spent minor-dim first
+  (v, then n_k, then u): v-blocks give the longest contiguous HBM runs in the
+  last-order layout, and k-blocks amortize accumulator init/emit across the
+  sequential reduction dim.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+__all__ = [
+    "LANE",
+    "sublane_quantum",
+    "vmem_budget",
+    "pick_tvc3_blocks",
+    "pick_tvc2_blocks",
+    "pick_tvc4_blocks",
+    "pick_axpby_blocks",
+]
+
+#: lane (minormost-dim) tiling quantum — fixed across dtypes.
+LANE = 128
+
+_DEFAULT_BUDGET = 8 * 1024 * 1024
+
+
+def sublane_quantum(dtype) -> int:
+    """Native sublane (second-minor dim) tile for ``dtype``: 32 bytes of
+    lanes-worth per sublane — 8 for f32, 16 for bf16/f16, 32 for int8."""
+    return max(8, 32 // max(1, jnp.dtype(dtype).itemsize))
+
+
+def vmem_budget(budget: int | None = None) -> int:
+    """Resolve the VMEM byte budget (arg > env > 8 MiB default)."""
+    if budget is not None:
+        return int(budget)
+    return int(os.environ.get("REPRO_TVC_VMEM_BUDGET", _DEFAULT_BUDGET))
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _clamp(block: int, dim: int, quantum: int) -> int:
+    """Never exceed the dim rounded up to its quantum (a bigger block only
+    adds masked lanes)."""
+    return max(quantum, min(block, _round_up(dim, quantum)))
+
+
+def pick_tvc3_blocks(
+    u: int,
+    nk: int,
+    v: int,
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    has_y: bool = False,
+    budget: int | None = None,
+) -> tuple[int, int, int]:
+    """(bu, bk, bv) for the (u, n_k, v)-view kernel (lanes on v, sublanes on
+    n_k)."""
+    budget = vmem_budget(budget)
+    ssz = jnp.dtype(storage).itemsize
+    csz = jnp.dtype(compute).itemsize
+    q = sublane_quantum(storage)
+
+    def cost(bu: int, bk: int, bv: int) -> int:
+        a_blk = 2 * bu * bk * bv * ssz          # double-buffered A stream
+        x_blk = 2 * bk * ssz
+        acc = bu * bv * csz
+        out = bu * bv * ssz * (3 if has_y else 1)  # + double-buffered y-in
+        return a_blk + x_blk + acc + out
+
+    bu = _clamp(64, u, 8)
+    bk = _clamp(512, nk, q)
+    bv = _clamp(512, v, LANE)
+    # shrink to budget: u first (pure parallel), then k, then v
+    while cost(bu, bk, bv) > budget:
+        if bu > 8:
+            bu = _clamp(bu // 2, u, 8)
+        elif bk > q:
+            bk = _clamp(_round_up(bk // 2, q), nk, q)
+        elif bv > LANE:
+            bv = _clamp(_round_up(bv // 2, LANE), v, LANE)
+        else:
+            break
+    # spend leftover budget minor-dim first (aspect ratio: cover v, then k)
+    for grow in ("v", "k", "u"):
+        while True:
+            nbu, nbk, nbv = bu, bk, bv
+            if grow == "v" and bv < _round_up(v, LANE):
+                nbv = _clamp(bv * 2, v, LANE)
+            elif grow == "k" and bk < _round_up(nk, q):
+                nbk = _clamp(bk * 2, nk, q)
+            elif grow == "u" and bu < min(_round_up(u, 8), 256):
+                nbu = _clamp(bu * 2, u, 8)
+            else:
+                break
+            if (nbu, nbk, nbv) == (bu, bk, bv) or cost(nbu, nbk, nbv) > budget:
+                break
+            bu, bk, bv = nbu, nbk, nbv
+    return bu, bk, bv
+
+
+def pick_tvc2_blocks(
+    u: int,
+    nk: int,
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    has_y: bool = False,
+    budget: int | None = None,
+) -> tuple[int, int]:
+    """(bu, bk) for the k = d-1 matvec kernel (lanes on n_k, sublanes on u) —
+    note the quantum roles flip vs. the 3-D view: bu takes the dtype sublane
+    quantum, bk the 128-lane quantum."""
+    budget = vmem_budget(budget)
+    ssz = jnp.dtype(storage).itemsize
+    csz = jnp.dtype(compute).itemsize
+    q = sublane_quantum(storage)
+
+    def cost(bu: int, bk: int) -> int:
+        return (2 * bu * bk * ssz + 2 * bk * ssz + bu * csz
+                + bu * ssz * (3 if has_y else 1))
+
+    bu = _clamp(8 * q, u, q)
+    bk = _clamp(1024, nk, LANE)
+    while cost(bu, bk) > budget:
+        if bu > q:
+            bu = _clamp(_round_up(bu // 2, q), u, q)
+        elif bk > LANE:
+            bk = _clamp(_round_up(bk // 2, LANE), nk, LANE)
+        else:
+            break
+    for grow in ("k", "u"):
+        while True:
+            nbu, nbk = bu, bk
+            if grow == "k" and bk < min(_round_up(nk, LANE), 4096):
+                nbk = _clamp(bk * 2, nk, LANE)
+            elif grow == "u" and bu < min(_round_up(u, q), 64 * q):
+                nbu = _clamp(bu * 2, u, q)
+            else:
+                break
+            if (nbu, nbk) == (bu, bk) or cost(nbu, nbk) > budget:
+                break
+            bu, bk = nbu, nbk
+    return bu, bk
+
+
+def pick_tvc4_blocks(
+    u: int,
+    n1: int,
+    n2: int,
+    v: int,
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    budget: int | None = None,
+) -> tuple[int, int, int, int]:
+    """(bu, b1, b2, bv) for the fused-pair kernel: lanes on v, sublanes on
+    n_2; n_1 and u are leading dims kept small so the 4-D block fits."""
+    budget = vmem_budget(budget)
+    ssz = jnp.dtype(storage).itemsize
+    csz = jnp.dtype(compute).itemsize
+    q = sublane_quantum(storage)
+
+    def cost(bu: int, b1: int, b2: int, bv: int) -> int:
+        return (2 * bu * b1 * b2 * bv * ssz + 2 * (b1 + b2) * ssz
+                + bu * bv * csz + bu * bv * ssz)
+
+    bu = _clamp(8, u, 8)
+    b1 = _clamp(8, n1, 8)
+    b2 = _clamp(8, n2, q)
+    bv = _clamp(128, v, LANE)
+    while cost(bu, b1, b2, bv) > budget and bv > LANE:
+        bv = _clamp(_round_up(bv // 2, LANE), v, LANE)
+    for grow in ("v", "2", "1"):
+        while True:
+            nbu, nb1, nb2, nbv = bu, b1, b2, bv
+            if grow == "v" and bv < min(_round_up(v, LANE), 512):
+                nbv = _clamp(bv * 2, v, LANE)
+            elif grow == "2" and b2 < min(_round_up(n2, q), 8 * q):
+                nb2 = _clamp(b2 * 2, n2, q)
+            elif grow == "1" and b1 < min(_round_up(n1, 8), 64):
+                nb1 = _clamp(b1 * 2, n1, 8)
+            else:
+                break
+            if (nbu, nb1, nb2, nbv) == (bu, b1, b2, bv) \
+                    or cost(nbu, nb1, nb2, nbv) > budget:
+                break
+            bu, b1, b2, bv = nbu, nb1, nb2, nbv
+    return bu, b1, b2, bv
+
+
+def pick_axpby_blocks(
+    rows: int,
+    cols: int,
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    budget: int | None = None,
+) -> tuple[int, int]:
+    """(br, bc) for the elementwise axpby kernel over a (rows, cols) view."""
+    budget = vmem_budget(budget)
+    ssz = jnp.dtype(storage).itemsize
+    q = sublane_quantum(storage)
+
+    def cost(br: int, bc: int) -> int:
+        return (2 + 2 + 1) * br * bc * ssz      # x, y double-buffered + out
+
+    br = _clamp(8 * q, rows, q)
+    bc = _clamp(1024, cols, LANE)
+    while cost(br, bc) > budget:
+        if br > q:
+            br = _clamp(_round_up(br // 2, q), rows, q)
+        elif bc > LANE:
+            bc = _clamp(_round_up(bc // 2, LANE), cols, LANE)
+        else:
+            break
+    return br, bc

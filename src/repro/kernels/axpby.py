@@ -6,6 +6,14 @@ because software half-float conversion defeats vectorization; on TPU the
 promote/compute/demote pipeline is native vector work, and the VMEM block IS
 the cache-resident work array.  The kernel keeps the same contract: HBM
 traffic in the storage dtype, arithmetic in the compute dtype.
+
+Ragged sizes stream with zero copies: the grid uses ``pl.cdiv`` and partial
+edge blocks need no in-kernel masking at all — the op is elementwise, so
+garbage in out-of-bounds input lanes only ever lands in out-of-bounds output
+lanes, which are discarded.  (Contrast the TVC kernels, whose *reduction*
+edge blocks must be masked.)  Standalone axpby passes over TVC outputs are
+mostly gone anyway: the ``beta != 0`` update is fused into the TVC kernel
+epilogue (see :mod:`repro.kernels.tvc_kernel`).
 """
 from __future__ import annotations
 
@@ -14,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.mixed_precision import F32, Precision, get_policy
+
+_cdiv = pl.cdiv
 
 
 def _axpby_body(ab_ref, x_ref, y_ref, o_ref):
@@ -25,7 +35,7 @@ def _axpby_body(ab_ref, x_ref, y_ref, o_ref):
     ).astype(o_ref.dtype)
 
 
-def axpby_padded(
+def axpby_2d(
     alpha,
     x: jax.Array,
     beta,
@@ -35,15 +45,14 @@ def axpby_padded(
     block: tuple[int, int] = (8, 128),
     interpret: bool = False,
 ) -> jax.Array:
-    """x, y: 2-D arrays with block-multiple dims (wrapper pads/reshapes)."""
+    """x, y: 2-D arrays of identical, arbitrary (possibly ragged) shape."""
     prec = get_policy(prec)
     r, c = x.shape
     br, bc = block
-    assert r % br == 0 and c % bc == 0, (x.shape, block)
     ab = jnp.asarray([alpha, beta], prec.compute).reshape(1, 2)
     return pl.pallas_call(
         _axpby_body,
-        grid=(r // br, c // bc),
+        grid=(_cdiv(r, br), _cdiv(c, bc)),
         in_specs=[
             pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
             pl.BlockSpec((br, bc), lambda i, j: (i, j)),

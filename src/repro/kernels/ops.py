@@ -1,15 +1,23 @@
-"""Jit-ready wrappers around the Pallas kernels: zero-padding to block
-multiples (exact for contractions/sums), backend dispatch (compiled on TPU,
-interpret elsewhere), and view plumbing from arbitrary-order tensors."""
+"""Jit-ready wrappers around the Pallas kernels: zero-copy ragged dispatch
+(``pl.cdiv`` grids + in-kernel edge masking — nothing is ever padded),
+VMEM-aware block autotuning, backend dispatch (compiled on TPU, interpret
+elsewhere), and view plumbing from arbitrary-order tensors.
+
+The BLAS-style update ``Y = alpha * (A x_k x) + beta * Y`` is fused into the
+kernel epilogue: ``alpha``/``beta`` are static (trace-time) arguments baked
+into the kernel, and ``y`` rides along as one extra input ref, so a
+``beta != 0`` update reads Y exactly once instead of spending a second full
+axpby pass over it.
+"""
 from __future__ import annotations
 
 import math
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.mixed_precision import F32, Precision, get_policy
+from . import autotune as _at
 from . import axpby as _axpby
 from . import tvc_kernel as _tvc
 
@@ -18,62 +26,54 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _round_up(n: int, m: int) -> int:
-    return -(-n // m) * m
-
-
-def _pad_axis(a: jax.Array, axis: int, to: int) -> jax.Array:
-    pad = to - a.shape[axis]
-    if pad == 0:
-        return a
-    widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(a, widths)
-
-
-def _pick(block: int, dim: int, quantum: int) -> int:
-    """Shrink the block to the padded dim when the dim is small."""
-    return min(block, _round_up(dim, quantum))
-
-
-@partial(jax.jit, static_argnames=("prec", "bu", "bk", "bv", "interpret"))
+@partial(jax.jit,
+         static_argnames=("alpha", "beta", "prec", "bu", "bk", "bv",
+                          "interpret"))
 def tvc_pallas(
     a3: jax.Array,
     x: jax.Array,
+    y: jax.Array | None = None,
     *,
+    alpha: float = 1.0,
+    beta: float = 0.0,
     prec: Precision | str = F32,
-    bu: int = 8,
-    bk: int = 128,
-    bv: int = 128,
+    bu: int | None = None,
+    bk: int | None = None,
+    bv: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Mode-oblivious TVC on the (u, n_k, v) view.  Zero-pads every dim to a
-    block multiple (exact: padded rows/cols contribute zero), dispatches to
-    the matvec kernel when v == 1."""
+    """Mode-oblivious TVC on the (u, n_k, v) view with the fused
+    ``alpha``/``beta`` epilogue.  Arbitrary (ragged) dims stream exactly once
+    — no padding copies; block sizes default to the VMEM-aware autotuner
+    (pass ``bu``/``bk``/``bv`` to override).  Dispatches to the matvec kernel
+    when v == 1."""
     prec = get_policy(prec)
     if interpret is None:
         interpret = _interpret_default()
+    alpha, beta = float(alpha), float(beta)
     u, nk, v = a3.shape
+    if beta != 0.0 and y is None:
+        raise ValueError("beta != 0 requires y")
+    has_y = y is not None and beta != 0.0
 
     if v == 1:
-        a2 = a3.reshape(u, nk)
-        bu2 = _pick(8, u, 8)
-        bk2 = _pick(512, nk, 128)
-        a2 = _pad_axis(_pad_axis(a2, 0, _round_up(u, bu2)), 1, _round_up(nk, bk2))
-        xp = _pad_axis(x, 0, _round_up(nk, bk2))
-        y = _tvc.tvc2_padded(a2, xp, prec=prec, bu=bu2, bk=bk2, interpret=interpret)
-        return y[:u].reshape(u, 1)
+        bu2, bk2 = _at.pick_tvc2_blocks(
+            u, nk, storage=prec.storage, compute=prec.compute, has_y=has_y)
+        if bu is not None:
+            bu2 = bu
+        if bk is not None:
+            bk2 = bk
+        y_in = y.reshape(u, 1) if has_y else None
+        return _tvc.tvc2(a3.reshape(u, nk), x, prec=prec, bu=bu2, bk=bk2,
+                         alpha=alpha, beta=beta, y_in=y_in,
+                         interpret=interpret).reshape(u, 1)
 
-    bu_ = _pick(bu, u, 8)
-    bk_ = _pick(bk, nk, 8)
-    bv_ = _pick(bv, v, 128)
-    ap = a3
-    ap = _pad_axis(ap, 0, _round_up(u, bu_))
-    ap = _pad_axis(ap, 1, _round_up(nk, bk_))
-    ap = _pad_axis(ap, 2, _round_up(v, bv_))
-    xp = _pad_axis(x, 0, _round_up(nk, bk_))
-    y = _tvc.tvc3_padded(ap, xp, prec=prec, bu=bu_, bk=bk_, bv=bv_, interpret=interpret)
-    return y[:u, :v]
+    bu_, bk_, bv_ = _at.pick_tvc3_blocks(
+        u, nk, v, storage=prec.storage, compute=prec.compute, has_y=has_y)
+    bu_, bk_, bv_ = bu or bu_, bk or bk_, bv or bv_
+    y_in = y.reshape(u, v) if has_y else None
+    return _tvc.tvc3(a3, x, prec=prec, bu=bu_, bk=bk_, bv=bv_,
+                     alpha=alpha, beta=beta, y_in=y_in, interpret=interpret)
 
 
 def tvc(
@@ -81,15 +81,22 @@ def tvc(
     x: jax.Array,
     k: int,
     *,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    y: jax.Array | None = None,
     prec: Precision | str = F32,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Arbitrary-order mode-k TVC through the Pallas kernel."""
+    """Arbitrary-order mode-k TVC through the Pallas kernel, honouring the
+    full BLAS update ``Y = alpha * (A x_k x) + beta * Y`` (drop-in for
+    ``repro.core.tvc.tvc(impl="pallas")``)."""
     u = math.prod(A.shape[:k])
     v = math.prod(A.shape[k + 1:])
-    y = tvc_pallas(A.reshape(u, A.shape[k], v), x, prec=get_policy(prec),
-                   interpret=interpret)
-    return y.reshape(A.shape[:k] + A.shape[k + 1:])
+    out_shape = A.shape[:k] + A.shape[k + 1:]
+    y_in = None if y is None else y.reshape(u, v)
+    out = tvc_pallas(A.reshape(u, A.shape[k], v), x, y_in, alpha=alpha,
+                     beta=beta, prec=get_policy(prec), interpret=interpret)
+    return out.reshape(out_shape)
 
 
 @partial(jax.jit, static_argnames=("prec", "interpret"))
@@ -101,25 +108,16 @@ def tvc2_pallas(
     prec: Precision | str = F32,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused two-mode contraction on the (u, n1, n2, v) view (zero-padded)."""
+    """Fused two-mode contraction on the (u, n1, n2, v) view — ragged-safe,
+    zero-copy, autotuned blocks."""
     prec = get_policy(prec)
     if interpret is None:
         interpret = _interpret_default()
     u, n1, n2, v = a4.shape
-    bu = _pick(8, u, 8)
-    b1 = _pick(8, n1, 8)
-    b2 = _pick(8, n2, 8)
-    bv = _pick(128, v, 128)
-    ap = a4
-    ap = _pad_axis(ap, 0, _round_up(u, bu))
-    ap = _pad_axis(ap, 1, _round_up(n1, b1))
-    ap = _pad_axis(ap, 2, _round_up(n2, b2))
-    ap = _pad_axis(ap, 3, _round_up(v, bv))
-    x1p = _pad_axis(x1, 0, _round_up(n1, b1))
-    x2p = _pad_axis(x2, 0, _round_up(n2, b2))
-    y = _tvc.tvc4_padded(ap, x1p, x2p, prec=prec, bu=bu, b1=b1, b2=b2, bv=bv,
-                         interpret=interpret)
-    return y[:u, :v]
+    bu, b1, b2, bv = _at.pick_tvc4_blocks(
+        u, n1, n2, v, storage=prec.storage, compute=prec.compute)
+    return _tvc.tvc4(a4, x1, x2, prec=prec, bu=bu, b1=b1, b2=b2, bv=bv,
+                     interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("prec", "interpret"))
@@ -132,17 +130,24 @@ def axpby_pallas(
     prec: Precision | str = F32,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Mixed-precision ``alpha*x + beta*y`` over arbitrary-shape arrays."""
+    """Mixed-precision ``alpha*x + beta*y`` over arbitrary-shape arrays.
+
+    Zero-copy: the flat view is reinterpreted as (n/128, 128) when the size
+    is lane-aligned (full VPU sublane utilization), else as (1, n); both are
+    free reshapes, and ragged edges ride on out-of-bounds-safe blocks."""
     prec = get_policy(prec)
     if interpret is None:
         interpret = _interpret_default()
     shape = x.shape
     n = math.prod(shape) if shape else 1
-    cols = 128
-    rows = _round_up(max(1, -(-n // cols)), 8)
-    flat = _pad_axis(x.reshape(-1), 0, rows * cols).reshape(rows, cols)
-    flaty = _pad_axis(y.reshape(-1), 0, rows * cols).reshape(rows, cols)
-    out = _axpby.axpby_padded(
-        alpha, flat, beta, flaty, prec=prec, block=(8, 128), interpret=interpret
+    if n % _at.LANE == 0:
+        rows, cols = n // _at.LANE, _at.LANE
+    else:
+        rows, cols = 1, n
+    block = _at.pick_axpby_blocks(
+        rows, cols, storage=prec.storage, compute=prec.compute)
+    out = _axpby.axpby_2d(
+        alpha, x.reshape(rows, cols), beta, y.reshape(rows, cols),
+        prec=prec, block=block, interpret=interpret,
     )
-    return out.reshape(-1)[:n].reshape(shape)
+    return out.reshape(shape)

@@ -9,12 +9,27 @@ blocks and reduces n_k over the minor (sequential) grid dimension,
 accumulating in a high-precision VMEM scratch (mixed precision §5.5: storage
 dtype on HBM, compute dtype in the accumulator).
 
+Ragged shapes stream with **zero copies**: grids use ``pl.cdiv`` so arbitrary
+(u, n_k, v) extents map straight onto block multiples, and the partial edge
+blocks are handled in-kernel — ``broadcasted_iota`` masks zero the garbage
+lanes of the trailing reduction block (both the A block and the x block must
+be masked: out-of-bounds lanes are undefined, and ``0 * garbage`` is only
+zero when *both* factors are zeroed), while partial u/v *output* blocks need
+no masking at all because out-of-bounds stores are discarded.  Nothing is
+ever ``jnp.pad``-ed, so streamed HBM traffic equals
+:func:`repro.core.tvc.tvc_bytes` exactly.
+
 Two kernel bodies cover every mode with one streaming pass each:
   * v > 1  : blocks (bu, bk, bv), lanes on v          (modes k < d-1)
   * v == 1 : blocks (bu, bk),     lanes on n_k        (mode  k = d-1, matvec)
 
-The wrapper in :mod:`repro.kernels.ops` zero-pads to block multiples (exact
-for sums) and slices the result back.
+All bodies fold the BLAS-style update ``Y = alpha * (A x_k x) + beta * Y``
+into the emit epilogue: ``alpha``/``beta`` are trace-time constants and the
+optional y operand rides in as one extra input ref, so ``beta != 0`` costs a
+single extra read of Y instead of a second full axpby pass.
+
+Block sizes come from :mod:`repro.kernels.autotune` (dtype tiling quantum,
+VMEM budget, aspect ratio); the wrappers live in :mod:`repro.kernels.ops`.
 """
 from __future__ import annotations
 
@@ -22,56 +37,166 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.mixed_precision import F32, Precision, get_policy
 
+_cdiv = pl.cdiv
 
-def _compiler_params(n_parallel: int):
+
+def _compiler_params(n_parallel: int, n_arbitrary: int = 1):
     """dimension_semantics: parallel over output tiles, arbitrary over the
-    reduction dim (must stay sequential for accumulation)."""
+    reduction dims (must stay sequential for accumulation)."""
     try:
         return pltpu.CompilerParams(
-            dimension_semantics=("parallel",) * n_parallel + ("arbitrary",)
+            dimension_semantics=("parallel",) * n_parallel
+            + ("arbitrary",) * n_arbitrary
         )
     except Exception:  # pragma: no cover - older/newer pallas API fallback
         return None
 
 
-def _tvc3_body(x_ref, a_ref, y_ref, acc_ref, *, k_blocks: int):
+def _edge_mask(shape: tuple[int, ...], dim: int, limit) -> jax.Array:
+    """Boolean mask over a broadcastable block view: True where the global
+    index along ``dim`` is < ``limit`` (>= 2-D iota, as TPU requires)."""
+    return lax.broadcasted_iota(jnp.int32, shape, dim) < limit
+
+
+def _emit_update(acc, y_ref, yin_ref, alpha: float, beta: float):
+    """Fused epilogue: y = alpha * acc + beta * y_in, demoted to storage.
+    alpha/beta are Python floats folded into the kernel at trace time."""
+    out = acc
+    if alpha != 1.0:
+        out = out * alpha
+    if yin_ref is not None:
+        out = out + beta * yin_ref[...].astype(out.dtype)
+    y_ref[...] = out.astype(y_ref.dtype)
+
+
+def _tvc3_body(x_ref, a_ref, *rest, nk: int, bk: int, k_blocks: int,
+               mask_k: bool, alpha: float, beta: float, has_y: bool):
+    yin_ref = rest[0] if has_y else None
+    y_ref, acc_ref = rest[-2], rest[-1]
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...].astype(acc_ref.dtype)        # (bu, bk, bv)
-    xv = x_ref[...].astype(acc_ref.dtype)       # (1, bk)
-    acc_ref[...] += jnp.sum(a * xv[0][None, :, None], axis=1)
+    def _accum(masked: bool):
+        a = a_ref[...].astype(acc_ref.dtype)        # (bu, bk, bv)
+        xv = x_ref[...].astype(acc_ref.dtype)       # (1, bk)
+        if masked:                                  # trailing partial k-block
+            lim = nk - kk * bk
+            a = jnp.where(_edge_mask((1, bk, 1), 1, lim), a, 0)
+            xv = jnp.where(_edge_mask((1, bk), 1, lim), xv, 0)
+        acc_ref[...] += jnp.sum(a * xv[0][None, :, None], axis=1)
+
+    if mask_k:
+        # only the last k-block has garbage lanes — interior blocks skip the
+        # iota/select work entirely
+        last = kk == k_blocks - 1
+        pl.when(last)(lambda: _accum(True))
+        pl.when(jnp.logical_not(last))(lambda: _accum(False))
+    else:
+        _accum(False)
 
     @pl.when(kk == k_blocks - 1)
     def _emit():
-        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta)
 
 
-def _tvc2_body(x_ref, a_ref, y_ref, acc_ref, *, k_blocks: int):
+def _tvc2_body(x_ref, a_ref, *rest, nk: int, bk: int, k_blocks: int,
+               mask_k: bool, alpha: float, beta: float, has_y: bool):
+    yin_ref = rest[0] if has_y else None
+    y_ref, acc_ref = rest[-2], rest[-1]
     kk = pl.program_id(1)
 
     @pl.when(kk == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...].astype(acc_ref.dtype)        # (bu, bk)
-    xv = x_ref[...].astype(acc_ref.dtype)       # (1, bk)
-    acc_ref[...] += jnp.sum(a * xv, axis=1, keepdims=True)
+    def _accum(masked: bool):
+        a = a_ref[...].astype(acc_ref.dtype)        # (bu, bk)
+        xv = x_ref[...].astype(acc_ref.dtype)       # (1, bk)
+        if masked:
+            lim = nk - kk * bk
+            a = jnp.where(_edge_mask((1, bk), 1, lim), a, 0)
+            xv = jnp.where(_edge_mask((1, bk), 1, lim), xv, 0)
+        acc_ref[...] += jnp.sum(a * xv, axis=1, keepdims=True)
+
+    if mask_k:
+        last = kk == k_blocks - 1
+        pl.when(last)(lambda: _accum(True))
+        pl.when(jnp.logical_not(last))(lambda: _accum(False))
+    else:
+        _accum(False)
 
     @pl.when(kk == k_blocks - 1)
     def _emit():
-        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta)
 
 
-def tvc3_padded(
+def _tvc4_body(x1_ref, x2_ref, a_ref, *rest, n1: int, b1: int, n2: int,
+               b2: int, k1_blocks: int, k2_blocks: int, mask_1: bool,
+               mask_2: bool, alpha: float, beta: float, has_y: bool):
+    yin_ref = rest[0] if has_y else None
+    y_ref, acc_ref = rest[-2], rest[-1]
+    kk1 = pl.program_id(2)
+    kk2 = pl.program_id(3)
+
+    @pl.when((kk1 == 0) & (kk2 == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _accum(m1: bool, m2: bool):
+        a = a_ref[...].astype(acc_ref.dtype)          # (bu, b1, b2, bv)
+        x1 = x1_ref[...].astype(acc_ref.dtype)        # (1, b1)
+        x2 = x2_ref[...].astype(acc_ref.dtype)        # (1, b2)
+        if m1:
+            lim1 = n1 - kk1 * b1
+            a = jnp.where(_edge_mask((1, b1, 1, 1), 1, lim1), a, 0)
+            x1 = jnp.where(_edge_mask((1, b1), 1, lim1), x1, 0)
+        if m2:
+            lim2 = n2 - kk2 * b2
+            a = jnp.where(_edge_mask((1, 1, b2, 1), 2, lim2), a, 0)
+            x2 = jnp.where(_edge_mask((1, b2), 1, lim2), x2, 0)
+        w = x1[0][:, None] * x2[0][None, :]           # (b1, b2)
+        acc_ref[...] += jnp.einsum("uabv,ab->uv", a, w)
+
+    if mask_1 or mask_2:
+        # edge blocks (any trailing partial reduction block) take the masked
+        # path; interior blocks skip the iota/select work.  Masking a dim
+        # whose block happens to be full is harmless (lim >= b -> all-True).
+        conds = []
+        if mask_1:
+            conds.append(kk1 == k1_blocks - 1)
+        if mask_2:
+            conds.append(kk2 == k2_blocks - 1)
+        edge = conds[0] if len(conds) == 1 else conds[0] | conds[1]
+        pl.when(edge)(lambda: _accum(mask_1, mask_2))
+        pl.when(jnp.logical_not(edge))(lambda: _accum(False, False))
+    else:
+        _accum(False, False)
+
+    @pl.when((kk1 == k1_blocks - 1) & (kk2 == k2_blocks - 1))
+    def _emit():
+        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta)
+
+
+def _update_operands(y_in, alpha: float, beta: float, out_spec):
+    """(extra_inputs, extra_specs, has_y) for the fused epilogue; the y input
+    shares the output BlockSpec so partial edge blocks line up."""
+    if beta != 0.0 and y_in is None:
+        raise ValueError("beta != 0 requires a y operand")
+    if y_in is None or beta == 0.0:
+        return (), (), False
+    return (y_in,), (out_spec,), True
+
+
+def tvc3(
     a3: jax.Array,
     x: jax.Array,
     *,
@@ -79,14 +204,22 @@ def tvc3_padded(
     bu: int = 8,
     bk: int = 128,
     bv: int = 128,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    y_in: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Y[u,v] = sum_k A[u,k,v] x[k]; dims must already be block multiples."""
+    """Y[u,v] = alpha * sum_k A[u,k,v] x[k] + beta * y_in[u,v]; arbitrary
+    (possibly ragged) dims, streamed once with no padding copies."""
     prec = get_policy(prec)
     u, nk, v = a3.shape
-    assert u % bu == 0 and nk % bk == 0 and v % bv == 0, (a3.shape, bu, bk, bv)
-    grid = (u // bu, v // bv, nk // bk)
-    kernel = functools.partial(_tvc3_body, k_blocks=grid[2])
+    grid = (_cdiv(u, bu), _cdiv(v, bv), _cdiv(nk, bk))
+    out_spec = pl.BlockSpec((bu, bv), lambda i, j, kk: (i, j))
+    extra_in, extra_specs, has_y = _update_operands(y_in, alpha, beta, out_spec)
+    kernel = functools.partial(
+        _tvc3_body, nk=nk, bk=bk, k_blocks=grid[2], mask_k=nk % bk != 0,
+        alpha=alpha, beta=beta, has_y=has_y,
+    )
     params = _compiler_params(2)
     kwargs = {"compiler_params": params} if (params and not interpret) else {}
     return pl.pallas_call(
@@ -95,36 +228,17 @@ def tvc3_padded(
         in_specs=[
             pl.BlockSpec((1, bk), lambda i, j, kk: (0, kk)),
             pl.BlockSpec((bu, bk, bv), lambda i, j, kk: (i, kk, j)),
+            *extra_specs,
         ],
-        out_specs=pl.BlockSpec((bu, bv), lambda i, j, kk: (i, j)),
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((u, v), prec.storage),
         scratch_shapes=[pltpu.VMEM((bu, bv), prec.compute)],
         interpret=interpret,
         **kwargs,
-    )(x.reshape(1, nk), a3)
+    )(x.reshape(1, nk), a3, *extra_in)
 
 
-def _tvc4_body(x1_ref, x2_ref, a_ref, y_ref, acc_ref, *, k1_blocks: int,
-               k2_blocks: int):
-    kk1 = pl.program_id(2)
-    kk2 = pl.program_id(3)
-
-    @pl.when((kk1 == 0) & (kk2 == 0))
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    a = a_ref[...].astype(acc_ref.dtype)          # (bu, b1, b2, bv)
-    x1 = x1_ref[...].astype(acc_ref.dtype)        # (1, b1)
-    x2 = x2_ref[...].astype(acc_ref.dtype)        # (1, b2)
-    w = x1[0][:, None] * x2[0][None, :]           # (b1, b2)
-    acc_ref[...] += jnp.einsum("uabv,ab->uv", a, w)
-
-    @pl.when((kk1 == k1_blocks - 1) & (kk2 == k2_blocks - 1))
-    def _emit():
-        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
-
-
-def tvc4_padded(
+def tvc4(
     a4: jax.Array,
     x1: jax.Array,
     x2: jax.Array,
@@ -134,24 +248,26 @@ def tvc4_padded(
     b1: int = 8,
     b2: int = 8,
     bv: int = 128,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    y_in: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """BEYOND-PAPER fused pair: Y[u,v] = sum_{a,b} A[u,a,b,v] x1[a] x2[b] in
-    one streaming pass (two sequential reduction grid dims)."""
+    one streaming pass (two sequential reduction grid dims), ragged-safe."""
     prec = get_policy(prec)
     u, n1, n2, v = a4.shape
-    assert u % bu == 0 and n1 % b1 == 0 and n2 % b2 == 0 and v % bv == 0
-    grid = (u // bu, v // bv, n1 // b1, n2 // b2)
-    kernel = functools.partial(_tvc4_body, k1_blocks=grid[2], k2_blocks=grid[3])
-    params = _compiler_params(2)
-    kwargs = {}
-    if params is not None and not interpret:
-        try:
-            kwargs["compiler_params"] = pltpu.CompilerParams(
-                dimension_semantics=("parallel", "parallel",
-                                     "arbitrary", "arbitrary"))
-        except Exception:  # pragma: no cover
-            pass
+    grid = (_cdiv(u, bu), _cdiv(v, bv), _cdiv(n1, b1), _cdiv(n2, b2))
+    out_spec = pl.BlockSpec((bu, bv), lambda i, j, a, b: (i, j))
+    extra_in, extra_specs, has_y = _update_operands(y_in, alpha, beta, out_spec)
+    kernel = functools.partial(
+        _tvc4_body, n1=n1, b1=b1, n2=n2, b2=b2,
+        k1_blocks=grid[2], k2_blocks=grid[3],
+        mask_1=n1 % b1 != 0, mask_2=n2 % b2 != 0,
+        alpha=alpha, beta=beta, has_y=has_y,
+    )
+    params = _compiler_params(2, 2)
+    kwargs = {"compiler_params": params} if (params and not interpret) else {}
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -159,43 +275,52 @@ def tvc4_padded(
             pl.BlockSpec((1, b1), lambda i, j, a, b: (0, a)),
             pl.BlockSpec((1, b2), lambda i, j, a, b: (0, b)),
             pl.BlockSpec((bu, b1, b2, bv), lambda i, j, a, b: (i, a, b, j)),
+            *extra_specs,
         ],
-        out_specs=pl.BlockSpec((bu, bv), lambda i, j, a, b: (i, j)),
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((u, v), prec.storage),
         scratch_shapes=[pltpu.VMEM((bu, bv), prec.compute)],
         interpret=interpret,
         **kwargs,
-    )(x1.reshape(1, n1), x2.reshape(1, n2), a4)
+    )(x1.reshape(1, n1), x2.reshape(1, n2), a4, *extra_in)
 
 
-def tvc2_padded(
+def tvc2(
     a2: jax.Array,
     x: jax.Array,
     *,
     prec: Precision | str = F32,
     bu: int = 8,
     bk: int = 512,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    y_in: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Y[u] = sum_k A[u,k] x[k] (the k = d-1 matvec); block-multiple dims."""
+    """Y[u] = alpha * sum_k A[u,k] x[k] + beta * y_in[u] (the k = d-1
+    matvec); arbitrary dims, no padding copies."""
     prec = get_policy(prec)
     u, nk = a2.shape
-    assert u % bu == 0 and nk % bk == 0, (a2.shape, bu, bk)
-    grid = (u // bu, nk // bk)
-    kernel = functools.partial(_tvc2_body, k_blocks=grid[1])
+    grid = (_cdiv(u, bu), _cdiv(nk, bk))
+    out_spec = pl.BlockSpec((bu, 1), lambda i, kk: (i, 0))
+    extra_in, extra_specs, has_y = _update_operands(y_in, alpha, beta, out_spec)
+    kernel = functools.partial(
+        _tvc2_body, nk=nk, bk=bk, k_blocks=grid[1], mask_k=nk % bk != 0,
+        alpha=alpha, beta=beta, has_y=has_y,
+    )
     params = _compiler_params(1)
     kwargs = {"compiler_params": params} if (params and not interpret) else {}
-    out = pl.pallas_call(
+    return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bk), lambda i, kk: (0, kk)),
             pl.BlockSpec((bu, bk), lambda i, kk: (i, kk)),
+            *extra_specs,
         ],
-        out_specs=pl.BlockSpec((bu, 1), lambda i, kk: (i, 0)),
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((u, 1), prec.storage),
         scratch_shapes=[pltpu.VMEM((bu, 1), prec.compute)],
         interpret=interpret,
         **kwargs,
-    )(x.reshape(1, nk), a2)
-    return out
+    )(x.reshape(1, nk), a2, *extra_in)

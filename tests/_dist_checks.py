@@ -64,6 +64,25 @@ def main():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
     ok("dtvc_eq2_alphabeta")
 
+    # ragged local shards through the zero-copy Pallas path.  k != s with
+    # assemble=False routes alpha/beta/y into dtvc_local -> tvc(impl=
+    # "pallas"), so the update really runs in the fused kernel epilogue
+    # inside the shard_map body (per-shard view (1, 16, 5): nothing is a
+    # block multiple); k == s applies beta after the collective reduction.
+    A_r = jnp.asarray(rng.normal(size=(8, 16, 5)).astype(np.float32))
+    x_r = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    y_r = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    want = 2.0 * ref.tvc_ref(A_r, x_r, 1) - 0.5 * y_r
+    got = dtvc_mod.dtvc(A_r, x_r, 1, 0, mesh, "x", impl="pallas",
+                        alpha=2.0, beta=-0.5, y=y_r, assemble=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    got = dtvc_mod.dtvc(A_r, x_r, 1, 1, mesh, "x", impl="pallas",
+                        alpha=2.0, beta=-0.5, y=y_r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    ok("dtvc_pallas_ragged")
+
     # ---- mixed-precision collectives --------------------------------------
     def run_coll(fn, v):
         f = jax.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
@@ -136,6 +155,16 @@ def main():
                                        rtol=1e-3, atol=1e-4)
         np.testing.assert_allclose(float(lam_f), float(lam_seq), rtol=1e-3)
     ok("dhopm3_fused_matches_sequential")
+
+    # same schedule through the ragged Pallas kernels: local shards of the
+    # s=2 split are (8, 24, 2) — nothing is block-multiple, nothing is padded
+    xs_kp, lam_kp = dh.dhopm3(A, xs0, mesh, "x", s=2, sweeps=3,
+                              impl="pallas", fuse_pairs=True)
+    for a, b in zip(xs_kp, xs_seq):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(float(lam_kp), float(lam_seq), rtol=1e-3)
+    ok("dhopm3_pallas_ragged")
 
     # exact rank-1 recovery in one sweep
     us = [rng.normal(size=(n,)).astype(np.float32) for n in shape]

@@ -11,6 +11,7 @@ EXPECTED = [
     "dtvc_all_k_s",
     "dtvc_unassembled",
     "dtvc_eq2_alphabeta",
+    "dtvc_pallas_ragged",
     "mp_doubling_f32_exact",
     "mp_ring_f32_exact",
     "mp_ring_bf16_bounded",
@@ -20,6 +21,7 @@ EXPECTED = [
     "hopm3_equals_classic",
     "dhopm3_matches_sequential_all_s",
     "dhopm3_fused_matches_sequential",
+    "dhopm3_pallas_ragged",
     "dhopm3_rank1_recovery",
     "hopm3_partial_implicit_sum",
     "dhopm3_bf16",

@@ -1,12 +1,19 @@
 """Pallas kernel validation: shape/dtype sweeps + hypothesis property tests
-against the pure-jnp oracles, all in interpret mode (CPU)."""
+against the pure-jnp oracles, all in interpret mode (CPU).  Ragged
+(non-block-multiple) dims go through the zero-copy path: ``pl.cdiv`` grids
+with in-kernel edge masking, never a padded copy (asserted on the jaxpr in
+:mod:`tests.test_kernels_ragged`)."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
 
-pytest.importorskip("hypothesis", reason="optional dep: pip install -e .[test]")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:  # optional dep: pip install -e .[test] — only gates the property test
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
+from repro.core import tvc as core_tvc
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(3)
@@ -14,6 +21,14 @@ RNG = np.random.default_rng(3)
 
 def rand(shape, dtype=np.float32):
     return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+def cast_policy(arrs, polname):
+    if polname == "bf16":
+        return [a.astype(jnp.bfloat16) for a in arrs]
+    if polname == "f16":
+        return [a.astype(jnp.float16) for a in arrs]
+    return list(arrs)
 
 
 # explicit sweep: edge shapes incl. non-multiples of (8, 128) tiles
@@ -25,19 +40,15 @@ UVK = [
     (1, 513, 130),    # u = 1 (k = 0), ragged lanes
     (64, 17, 1),      # v = 1 matvec path, ragged k
     (3, 1000, 1),     # v = 1, large k
+    (7, 13, 129),     # all-prime view, ragged in every dim
+    (129, 255, 7),    # ragged sublane/lane split across u and nk
 ]
 
 
 @pytest.mark.parametrize("u,nk,v", UVK)
 @pytest.mark.parametrize("polname", ["f32", "bf16", "f16"])
 def test_tvc_kernel_sweep(u, nk, v, polname):
-    dt = {"f32": np.float32, "bf16": None, "f16": np.float16}[polname]
-    a = rand((u, nk, v))
-    x = rand((nk,))
-    if polname == "bf16":
-        a, x = a.astype(jnp.bfloat16), x.astype(jnp.bfloat16)
-    elif dt is not np.float32:
-        a, x = a.astype(dt), x.astype(dt)
+    a, x = cast_policy([rand((u, nk, v)), rand((nk,))], polname)
     got = ops.tvc_pallas(a, x, prec=polname)
     want = ref.tvc3_ref(a, x, prec=polname)
     assert got.shape == (u, v) and got.dtype == want.dtype
@@ -48,21 +59,44 @@ def test_tvc_kernel_sweep(u, nk, v, polname):
     )
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    u=st.integers(1, 33),
-    nk=st.integers(1, 160),
-    v=st.integers(1, 140),
-    seed=st.integers(0, 2**31),
-)
-def test_tvc_kernel_property(u, nk, v, seed):
-    r = np.random.default_rng(seed)
-    a = jnp.asarray(r.normal(size=(u, nk, v)).astype(np.float32))
-    x = jnp.asarray(r.normal(size=(nk,)).astype(np.float32))
-    got = ops.tvc_pallas(a, x)
-    want = ref.tvc3_ref(a, x)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+# order-5 odd-shape tensor: every mode through the mode-oblivious view,
+# both precision policies, all ragged dims (satellite: non-block-multiple
+# coverage for the Pallas path)
+@pytest.mark.parametrize("shape", [(3, 5, 7, 2, 9), (7, 13, 129)])
+@pytest.mark.parametrize("polname", ["f32", "bf16"])
+def test_tvc_kernel_ragged_every_mode(shape, polname):
+    (A,) = cast_policy([rand(shape)], polname)
+    tol = 1e-4 if polname == "f32" else 6e-2
+    for k in range(len(shape)):
+        (x,) = cast_policy([rand((shape[k],))], polname)
+        got = ops.tvc(A, x, k, prec=polname)
+        want = core_tvc(A, x, k, impl="native", prec=polname)
+        assert got.shape == want.shape and got.dtype == want.dtype
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol,
+        )
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_tvc_kernel_property():
+    @settings(max_examples=25, deadline=None)
+    @given(
+        u=st.integers(1, 33),
+        nk=st.integers(1, 160),
+        v=st.integers(1, 140),
+        seed=st.integers(0, 2**31),
+    )
+    def check(u, nk, v, seed):
+        r = np.random.default_rng(seed)
+        a = jnp.asarray(r.normal(size=(u, nk, v)).astype(np.float32))
+        x = jnp.asarray(r.normal(size=(nk,)).astype(np.float32))
+        got = ops.tvc_pallas(a, x)
+        want = ref.tvc3_ref(a, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    check()
 
 
 def test_tvc_kernel_linearity():
@@ -86,10 +120,7 @@ def test_tvc_kernel_via_mode_view():
 @pytest.mark.parametrize("n", [1, 127, 128, 1000, 8 * 128, 5000])
 @pytest.mark.parametrize("polname", ["f32", "bf16"])
 def test_axpby_kernel(n, polname):
-    x = rand((n,))
-    y = rand((n,))
-    if polname == "bf16":
-        x, y = x.astype(jnp.bfloat16), y.astype(jnp.bfloat16)
+    x, y = cast_policy([rand((n,)), rand((n,))], polname)
     got = ops.axpby_pallas(1.25, x, -0.5, y, prec=polname)
     want = ref.axpby_ref(1.25, x, -0.5, y, prec=polname)
     assert got.dtype == want.dtype

@@ -1,0 +1,201 @@
+"""Zero-copy guarantees of the ragged Pallas path: no ``pad`` primitive in
+the jaxpr, the fused alpha/beta epilogue, the VMEM-aware block autotuner, and
+the streamed-bytes accounting that backs the bandwidth harness.  No optional
+deps — this file runs everywhere the kernels do."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import memory_model as mm
+from repro.core.tvc import mode_uv, tvc as core_tvc, tvc_bytes
+from repro.core.mixed_precision import get_policy
+from repro.kernels import autotune, ops, ref
+
+RNG = np.random.default_rng(5)
+
+
+def rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+# ---- no-copy: the jaxpr of the Pallas path must not contain `pad` ---------
+
+def _primitives(jaxpr, acc):
+    """All primitive names in a jaxpr, recursing into sub-jaxpr params
+    (incl. the pallas_call kernel body)."""
+    for eqn in jaxpr.eqns:
+        acc.add(eqn.primitive.name)
+        for v in eqn.params.values():
+            for item in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(item, "jaxpr", item)
+                if hasattr(inner, "eqns"):
+                    _primitives(inner, acc)
+    return acc
+
+
+@pytest.mark.parametrize("shape,k", [
+    ((7, 13, 129), 1),           # all-prime order-3, middle mode
+    ((7, 13, 129), 2),           # matvec path (v == 1)
+    ((3, 5, 7, 2, 9), 2),        # order-5 odd shape
+])
+def test_no_pad_in_pallas_jaxpr(shape, k):
+    A, x = rand(shape), rand((shape[k],))
+    jaxpr = jax.make_jaxpr(
+        lambda A, x: core_tvc(A, x, k, impl="pallas"))(A, x)
+    prims = _primitives(jaxpr.jaxpr, set())
+    assert "pallas_call" in prims
+    assert "pad" not in prims, sorted(prims)
+
+
+def test_no_pad_in_pallas_jaxpr_with_update():
+    A, x, y = rand((7, 13, 129)), rand((13,)), rand((7, 129))
+    jaxpr = jax.make_jaxpr(
+        lambda A, x, y: core_tvc(A, x, 1, alpha=2.0, beta=-0.5, y=y,
+                                 impl="pallas"))(A, x, y)
+    prims = _primitives(jaxpr.jaxpr, set())
+    assert "pad" not in prims, sorted(prims)
+
+
+def test_no_pad_in_axpby_jaxpr():
+    x, y = rand((999,)), rand((999,))   # ragged: 999 % 128 != 0
+    jaxpr = jax.make_jaxpr(
+        lambda x, y: ops.axpby_pallas(1.25, x, -0.5, y))(x, y)
+    prims = _primitives(jaxpr.jaxpr, set())
+    assert "pad" not in prims, sorted(prims)
+
+
+def test_no_pad_in_tvc2_jaxpr():
+    a, x1, x2 = rand((4, 5, 7, 3)), rand((5,)), rand((7,))
+    jaxpr = jax.make_jaxpr(
+        lambda a, x1, x2: ops.tvc2_pallas(a, x1, x2))(a, x1, x2)
+    prims = _primitives(jaxpr.jaxpr, set())
+    assert "pad" not in prims, sorted(prims)
+
+
+# ---- fused alpha/beta epilogue --------------------------------------------
+
+@pytest.mark.parametrize("u,nk,v", [(7, 13, 129), (5, 7, 3), (37, 129, 1)])
+@pytest.mark.parametrize("polname", ["f32", "bf16"])
+def test_fused_epilogue_matches_oracle(u, nk, v, polname):
+    prec = get_policy(polname)
+    a = rand((u, nk, v)).astype(prec.storage)
+    x = rand((nk,)).astype(prec.storage)
+    y = rand((u, v)).astype(prec.storage)
+    got = ops.tvc_pallas(a, x, y, alpha=2.5, beta=-0.5, prec=polname)
+    base = np.asarray(ref.tvc3_ref(a, x, prec=polname), np.float32)
+    want = 2.5 * base - 0.5 * np.asarray(y, np.float32)
+    tol = 1e-4 if polname == "f32" else 6e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               rtol=tol, atol=tol)
+
+
+def test_pallas_beta_requires_y():
+    with pytest.raises(ValueError):
+        ops.tvc_pallas(rand((3, 4, 5)), rand((4,)), beta=1.0)
+
+
+def test_ops_tvc_wrapper_honours_update():
+    """Satellite: the arbitrary-order wrapper is drop-in for
+    core.tvc(impl="pallas") including alpha/beta/y."""
+    A, k = rand((3, 5, 7, 2)), 2
+    x, y = rand((7,)), rand((3, 5, 2))
+    got = ops.tvc(A, x, k, alpha=0.5, beta=1.5, y=y)
+    want = core_tvc(A, x, k, alpha=0.5, beta=1.5, y=y, impl="native")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_core_tvc_pallas_update_matches_native_ragged():
+    A = rand((7, 13, 129))
+    for k in range(3):
+        x = rand((A.shape[k],))
+        y = rand(core_tvc(A, x, k).shape)
+        got = core_tvc(A, x, k, alpha=3.0, beta=-2.0, y=y, impl="pallas")
+        want = core_tvc(A, x, k, alpha=3.0, beta=-2.0, y=y, impl="native")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---- axpby: zero-copy ragged ----------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1,), (999,), (13, 9), (7, 11, 3)])
+def test_axpby_ragged_shapes(shape):
+    x, y = rand(shape), rand(shape)
+    got = ops.axpby_pallas(1.25, x, -0.5, y)
+    np.testing.assert_allclose(
+        np.asarray(got), 1.25 * np.asarray(x) - 0.5 * np.asarray(y),
+        rtol=1e-5, atol=1e-5)
+
+
+# ---- autotuner -------------------------------------------------------------
+
+def test_sublane_quantum_is_dtype_aware():
+    assert autotune.sublane_quantum(jnp.float32) == 8
+    assert autotune.sublane_quantum(jnp.bfloat16) == 16
+    assert autotune.sublane_quantum(jnp.float16) == 16
+    assert autotune.sublane_quantum(jnp.int8) == 32
+
+
+@pytest.mark.parametrize("storage", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("u,nk,v", [
+    (7, 13, 129), (4096, 4096, 4096), (1, 1, 1), (64, 17, 513),
+])
+def test_tvc3_blocks_respect_quanta_and_budget(storage, u, nk, v):
+    q = autotune.sublane_quantum(storage)
+    bu, bk, bv = autotune.pick_tvc3_blocks(u, nk, v, storage=storage)
+    assert bu % 8 == 0 and bk % q == 0 and bv % autotune.LANE == 0
+    ssz = jnp.dtype(storage).itemsize
+    blk_bytes = 2 * bu * bk * bv * ssz + bu * bv * 4
+    assert blk_bytes <= autotune.vmem_budget(), (bu, bk, bv, blk_bytes)
+    # never more than one fully-masked block along any dim
+    assert (bu - 8 < u or u <= 8) and bk - q < nk + q and bv - 128 < v + 128
+
+
+def test_tvc2_blocks_flip_quantum_roles():
+    """Satellite regression: the matvec path lanes on n_k (quantum 128) and
+    sublanes on u (dtype quantum) — the seed had bk quantum 8 vs 128 mixed
+    up between the two paths."""
+    for storage in (jnp.float32, jnp.bfloat16):
+        q = autotune.sublane_quantum(storage)
+        bu, bk = autotune.pick_tvc2_blocks(1000, 1000, storage=storage)
+        assert bk % autotune.LANE == 0
+        assert bu % q == 0
+
+
+def test_vmem_budget_shrinks_blocks():
+    big = autotune.pick_tvc3_blocks(4096, 4096, 4096)
+    small = autotune.pick_tvc3_blocks(4096, 4096, 4096, budget=256 * 1024)
+    assert np.prod(small) < np.prod(big)
+    bu, bk, bv = small
+    assert 2 * bu * bk * bv * 4 <= 256 * 1024
+
+
+def test_explicit_block_override_wins():
+    a, x = rand((64, 256, 256)), rand((256,))
+    got = ops.tvc_pallas(a, x, bu=8, bk=16, bv=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.tvc3_ref(a, x)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---- streamed-bytes accounting --------------------------------------------
+
+def test_streamed_elems_matches_tvc_bytes():
+    shape, k = (7, 13, 129), 1
+    u, nk, v = mode_uv(shape, k)
+    assert mm.tvc_streamed_elems(u, nk, v) * 4 == tvc_bytes(shape, k, 4)
+    assert mm.tvc_streamed_elems(u, nk, v, beta=1.0) * 4 == \
+        tvc_bytes(shape, k, 4, beta=1.0)
+
+
+def test_pad_overhead_identity_when_aligned():
+    assert mm.pad_overhead(64, 128, 128, (8, 128, 128)) == pytest.approx(1.0)
+
+
+def test_pad_overhead_ragged_exceeds_one():
+    # the motivating case: non-block-multiple dims used to force a full
+    # zero-padded copy of A — more than 2x streamed traffic for small blocks
+    ratio = mm.pad_overhead(7, 13, 129, (8, 128, 128))
+    assert ratio > 2.0
+    # and the old beta path paid a second full pass over Y
+    assert mm.pad_overhead(64, 128, 128, (8, 128, 128), beta=1.0) > 1.0
