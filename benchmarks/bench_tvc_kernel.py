@@ -14,20 +14,29 @@ the bandwidth proxy (interpret-mode Pallas timings are meaningless), while
 the writer and schema on CPU CI.  The engine is recorded per run so
 trajectory comparisons stay apples-to-apples.
 
-Each cell also records ``pad_overhead`` — the streamed-traffic ratio the old
-pad-and-copy wrapper would have paid for that shape (from
+Each single-mode cell also records ``pad_overhead`` — the streamed-traffic
+ratio the old pad-and-copy wrapper would have paid for that shape (from
 :func:`repro.core.memory_model.pad_overhead`); aligned cells sit at 1.0.
+
+Schema 2 adds *fused-pair* cells (``kind: "tvc2"``): the leading and tail
+adjacent-mode pairs of every shape through the single-launch pair kernels
+(``mode`` records k1), with ``streamed_bytes`` from
+:func:`repro.core.tvc.tvc2_bytes` and ``fused_saving`` — the predicted
+two-launch / fused traffic ratio
+(:func:`repro.core.memory_model.fused_pair_saving`) that the CI bandwidth
+gate holds the accounting to.
 """
 from __future__ import annotations
 
 import json
+import math
 import pathlib
 import time
 
 import jax
 
-from repro.core import tvc, tvc_bytes
-from repro.core.memory_model import pad_overhead
+from repro.core import tvc, tvc2, tvc2_bytes, tvc_bytes
+from repro.core.memory_model import fused_pair_saving, pad_overhead
 from repro.core.mixed_precision import get_policy
 from repro.core.tvc import mode_uv
 from repro.kernels import autotune
@@ -66,6 +75,23 @@ def _cell_blocks(shape, k, prec):
         u, nk, v, storage=prec.storage, compute=prec.compute)
 
 
+def _pair_view(shape, k1):
+    u = math.prod(shape[:k1])
+    n1, n2 = shape[k1], shape[k1 + 1]
+    v = math.prod(shape[k1 + 2:])
+    return u, n1, n2, v
+
+
+def _pair_blocks(shape, k1, prec):
+    u, n1, n2, v = _pair_view(shape, k1)
+    if v == 1:
+        bu, b1, b2 = autotune.pick_tvc2_pair_blocks(
+            u, n1, n2, storage=prec.storage, compute=prec.compute)
+        return (bu, b1, b2, 1)
+    return autotune.pick_tvc4_blocks(
+        u, n1, n2, v, storage=prec.storage, compute=prec.compute)
+
+
 def run(smoke: bool = False, out_path=None):
     if out_path:
         out_path = pathlib.Path(out_path)
@@ -95,6 +121,7 @@ def run(smoke: bool = False, out_path=None):
                     gbs = nbytes / t / 1e9
                     u, nk, v, blocks = _cell_blocks(shape, k, prec)
                     cells.append({
+                        "kind": "tvc",
                         "order": d,
                         "mode": k,
                         "dtype": polname,
@@ -111,9 +138,41 @@ def run(smoke: bool = False, out_path=None):
                         f"tvck_d{d}m{k}_{polname}_{layout}", t * 1e6,
                         f"{gbs:.2f}GB/s={gbs/peak*100:.0f}%peak"))
 
+                # fused pairs: the leading pair and the chain tail (one
+                # launch each through the pair kernels; einsum proxy on CPU)
+                pair_k1s = (d - 2,) if smoke else sorted({0, d - 2})
+                for k1 in pair_k1s:
+                    x1 = rand_tensor((shape[k1],), dtype=prec.storage,
+                                     seed=200 + k1)
+                    x2 = rand_tensor((shape[k1 + 1],), dtype=prec.storage,
+                                     seed=201 + k1)
+                    fn = jax.jit(lambda A, x1, x2, k1=k1: tvc2(
+                        A, x1, k1, x2, k1 + 1, impl=impl, prec=prec))
+                    t = time_fn(fn, A, x1, x2, reps=3 if smoke else 5)
+                    nbytes = tvc2_bytes(shape, k1, k1 + 1, itemsize)
+                    gbs = nbytes / t / 1e9
+                    u, n1, n2, v = _pair_view(shape, k1)
+                    cells.append({
+                        "kind": "tvc2",
+                        "order": d,
+                        "mode": k1,
+                        "dtype": polname,
+                        "layout": layout,
+                        "shape": list(shape),
+                        "blocks": list(_pair_blocks(shape, k1, prec)),
+                        "streamed_bytes": nbytes,
+                        "us": t * 1e6,
+                        "gbs": gbs,
+                        "pct_peak": gbs / peak * 100.0,
+                        "fused_saving": fused_pair_saving(u, n1, n2, v),
+                    })
+                    lines.append(emit(
+                        f"tvck2_d{d}p{k1}_{polname}_{layout}", t * 1e6,
+                        f"{gbs:.2f}GB/s={gbs/peak*100:.0f}%peak"))
+
     payload = {
         "meta": {
-            "schema": 1,
+            "schema": 2,
             "engine": engine,
             "backend": jax.default_backend(),
             "jax": jax.__version__,

@@ -1,0 +1,189 @@
+"""CI bandwidth-regression gate for the TVC bench trajectory files.
+
+    PYTHONPATH=src python -m benchmarks.check_bench BENCH_TVC.smoke.json \
+        [--ref BENCH_TVC.json] [...tolerances]
+
+Three checks, strictest first:
+
+1. **Schema** — the file parses, carries the same ``meta.schema`` as the
+   committed reference (``--ref``), has a positive STREAM-triad peak, and
+   every cell carries the full core key set (plus ``pad_overhead`` on
+   single-mode cells and ``fused_saving`` on fused-pair cells).
+
+2. **Streamed-bytes accounting** — each cell's recorded ``streamed_bytes``
+   must not exceed the :mod:`repro.core.memory_model` prediction
+   (``tvc_streamed_elems`` / ``tvc2_streamed_elems`` x itemsize) by more
+   than ``--acct-tol``.  The bench records bytes via ``core.tvc.tvc_bytes``
+   and the model predicts them independently, so this cross-validates the
+   two accountings on *every* engine — including interpret-mode smoke runs
+   whose wall times mean nothing.  Fused-pair cells must additionally
+   predict strictly fewer streamed bytes than the two-launch reference
+   (``fused_saving > 1`` — the whole point of the fused kernel).
+
+3. **Time-implied traffic** (engines with real timings only) — the bytes a
+   cell's wall time would stream at the measured STREAM peak,
+   ``us * peak``, minus a per-launch dispatch allowance
+   (``--dispatch-us * peak`` — the ROADMAP caveat: small-tensor cells are
+   dispatch-dominated and must not be judged as bandwidth), must not exceed
+   ``prediction * ratio``.  The ratio is per engine: ``--ratio-pallas``
+   (default 2.0: at least 50% of STREAM, the paper's native-algorithm
+   floor) on TPU, ``--ratio-native`` (default 32.0: the XLA einsum proxy is
+   not the kernel — this only catches catastrophic regressions; the
+   committed CPU trajectory's worst f32 cell sits near 18x) for
+   ``native-xla``, where low-precision cells additionally get
+   ``--lowprec-factor`` (default 3.0: CPU XLA has no native bf16 and pays a
+   convert/compute/convert round trip, worst committed cell ~43x; TPU bf16
+   is native and gets no factor).  ``pallas-interpret`` timings are
+   interpreter overhead and are skipped.
+
+Exit code 0 = green; 1 = any cell failed (all failures listed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+from repro.core.memory_model import tvc2_streamed_elems, tvc_streamed_elems
+from repro.core.mixed_precision import get_policy
+
+CORE_KEYS = frozenset({
+    "kind", "order", "mode", "dtype", "layout", "shape", "blocks",
+    "streamed_bytes", "us", "gbs", "pct_peak",
+})
+KIND_KEYS = {"tvc": "pad_overhead", "tvc2": "fused_saving"}
+TIMED_ENGINES = ("pallas", "native-xla")
+
+
+def predicted_bytes(cell: dict) -> int:
+    """memory_model's streamed-bytes prediction for one cell."""
+    shape = tuple(cell["shape"])
+    k = cell["mode"]
+    itemsize = get_policy(cell["dtype"]).storage_bytes
+    if cell["kind"] == "tvc2":
+        u = math.prod(shape[:k])
+        n1, n2 = shape[k], shape[k + 1]
+        v = math.prod(shape[k + 2:])
+        return tvc2_streamed_elems(u, n1, n2, v) * itemsize
+    u = math.prod(shape[:k])
+    v = math.prod(shape[k + 1:])
+    return tvc_streamed_elems(u, shape[k], v) * itemsize
+
+
+def _cell_name(c: dict) -> str:
+    return (f"{c.get('kind', '?')}/d{c.get('order', '?')}m{c.get('mode', '?')}"
+            f"/{c.get('dtype', '?')}/{c.get('layout', '?')}")
+
+
+def check(payload: dict, ref: dict | None, *, acct_tol: float,
+          dispatch_us: float, ratio_pallas: float,
+          ratio_native: float, lowprec_factor: float = 3.0) -> list[str]:
+    """All failure messages for one trajectory payload ([] = green)."""
+    fails: list[str] = []
+    meta = payload.get("meta", {})
+    cells = payload.get("cells", [])
+    peak = payload.get("stream_triad_gbs", 0.0)
+    engine = meta.get("engine")
+
+    # -- 1. schema ----------------------------------------------------------
+    if ref is not None:
+        want = ref.get("meta", {}).get("schema")
+        if meta.get("schema") != want:
+            fails.append(f"schema {meta.get('schema')!r} != committed "
+                         f"reference schema {want!r}")
+    if not cells:
+        fails.append("no cells")
+    if not (isinstance(peak, (int, float)) and peak > 0):
+        fails.append(f"stream_triad_gbs not positive: {peak!r}")
+    for c in cells:
+        missing = CORE_KEYS - set(c)
+        kind_key = KIND_KEYS.get(c.get("kind"))
+        if kind_key and kind_key not in c:
+            missing = missing | {kind_key}
+        if missing:
+            fails.append(f"{_cell_name(c)}: missing keys {sorted(missing)}")
+    if fails:
+        return fails  # later checks would only cascade
+
+    ratio = {"pallas": ratio_pallas, "native-xla": ratio_native}.get(engine)
+    for c in cells:
+        name = _cell_name(c)
+        pred = predicted_bytes(c)
+
+        # -- 2. accounting --------------------------------------------------
+        if c["streamed_bytes"] > pred * (1.0 + acct_tol):
+            fails.append(
+                f"{name}: recorded streamed_bytes {c['streamed_bytes']} "
+                f"exceeds model prediction {pred} (tol {acct_tol})")
+        if c["kind"] == "tvc2" and not c["fused_saving"] > 1.0:
+            fails.append(
+                f"{name}: fused pair predicts no saving over two launches "
+                f"(fused_saving={c['fused_saving']})")
+        if c["kind"] == "tvc" and c["pad_overhead"] < 1.0:
+            fails.append(f"{name}: pad_overhead {c['pad_overhead']} < 1")
+
+        # -- 3. time-implied traffic ---------------------------------------
+        if ratio is not None:
+            cell_ratio = ratio
+            if engine == "native-xla" and c["dtype"] not in ("f32",):
+                cell_ratio *= lowprec_factor   # CPU XLA emulates bf16/f16
+            implied = c["us"] * 1e-6 * peak * 1e9       # bytes at STREAM peak
+            allowance = dispatch_us * 1e-6 * peak * 1e9
+            if implied - allowance > pred * cell_ratio:
+                fails.append(
+                    f"{name}: time-implied traffic {implied / 1e6:.2f} MB "
+                    f"(us={c['us']:.0f}, dispatch allowance "
+                    f"{allowance / 1e6:.2f} MB) exceeds {cell_ratio}x the "
+                    f"predicted {pred / 1e6:.2f} MB [{engine}]")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("bench", help="trajectory JSON to gate")
+    ap.add_argument("--ref", default=None,
+                    help="committed reference file whose schema the gated "
+                         "file must match (e.g. BENCH_TVC.json)")
+    ap.add_argument("--acct-tol", type=float, default=0.0,
+                    help="allowed fractional excess of recorded over "
+                         "predicted streamed bytes (default: exact)")
+    ap.add_argument("--dispatch-us", type=float, default=200.0,
+                    help="per-launch dispatch-overhead allowance for the "
+                         "time-implied check (ROADMAP small-cell caveat)")
+    ap.add_argument("--ratio-pallas", type=float, default=2.0,
+                    help="implied/predicted traffic ceiling on TPU "
+                         "(2.0 = the paper's >=50%%-of-STREAM floor)")
+    ap.add_argument("--ratio-native", type=float, default=32.0,
+                    help="ceiling for the CPU native-xla proxy "
+                         "(catastrophic-regression bound only)")
+    ap.add_argument("--lowprec-factor", type=float, default=3.0,
+                    help="extra native-xla headroom for non-f32 cells "
+                         "(CPU XLA emulates bf16/f16)")
+    args = ap.parse_args(argv)
+
+    payload = json.loads(pathlib.Path(args.bench).read_text())
+    ref = (json.loads(pathlib.Path(args.ref).read_text())
+           if args.ref else None)
+    fails = check(payload, ref, acct_tol=args.acct_tol,
+                  dispatch_us=args.dispatch_us,
+                  ratio_pallas=args.ratio_pallas,
+                  ratio_native=args.ratio_native,
+                  lowprec_factor=args.lowprec_factor)
+    engine = payload.get("meta", {}).get("engine")
+    n = len(payload.get("cells", []))
+    if fails:
+        for f in fails:
+            print(f"FAIL {f}")
+        print(f"# bandwidth gate: {len(fails)} failure(s) over {n} cells "
+              f"({args.bench}, engine={engine})")
+        return 1
+    timed = "timed" if engine in TIMED_ENGINES else "accounting-only"
+    print(f"# bandwidth gate: OK — {n} cells ({args.bench}, "
+          f"engine={engine}, {timed})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

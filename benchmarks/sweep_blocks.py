@@ -1,0 +1,150 @@
+"""Offline (bu, bk, bv) block-size sweep — regenerates the checked-in
+``src/repro/kernels/block_table.json`` that the autotuner consults before its
+heuristic grow loop.
+
+    PYTHONPATH=src python -m benchmarks.sweep_blocks [--smoke] \
+        [--dtypes f32,bf16] [--max-candidates N] [--out PATH] [--dry-run]
+
+The grid is the bench harness's (order, mode-class, dtype) cells
+(:mod:`benchmarks.bench_tvc_kernel` shapes): every single mode of each shape
+(kind ``tvc3`` / ``tvc2`` by whether v == 1) plus the leading and tail
+adjacent-mode pairs (kind ``tvc4`` / ``tvc2_pair``).  Winners are merged into
+the table (replacing same-cell entries for this backend) and tagged with the
+backend + engine, so a table swept here never steers other hardware — rerun
+this script on each new machine (see README "Kernels").
+
+On non-TPU backends the kernels run in interpret mode: the sweep still
+exercises every candidate end-to-end (CI uses ``--smoke`` for exactly that),
+but the timings rank interpreter overhead, not HBM streaming — regenerate on
+TPU before trusting the winners.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import jax
+
+from repro.core.mixed_precision import get_policy
+from repro.kernels import block_table, sweep
+from .bench_tvc_kernel import SHAPES, SMOKE_SHAPES
+from .common import emit
+
+
+def grid_cases(shapes_by_layout, dtypes):
+    """(kind, dims, order, mode_class, dtype) cells for the sweep."""
+    cases = []
+    for layout, by_order in shapes_by_layout.items():
+        del layout  # aligned vs ragged share size buckets; sweep both shapes
+        for d, shape in sorted(by_order.items()):
+            for polname in dtypes:
+                for k in range(d):
+                    u = math.prod(shape[:k])
+                    v = math.prod(shape[k + 1:])
+                    if v == 1:
+                        cases.append(("tvc2", (u, shape[k]), d, "matvec",
+                                      polname))
+                    else:
+                        cases.append(("tvc3", (u, shape[k], v), d, "inner",
+                                      polname))
+                # adjacent pairs: leading (k1 = 0) and the chain tail
+                # (k1 = d-2) — the two shapes dHOPM_3's fused chains see
+                for k1 in {0, d - 2}:
+                    u = math.prod(shape[:k1])
+                    n1, n2 = shape[k1], shape[k1 + 1]
+                    v = math.prod(shape[k1 + 2:])
+                    if v == 1:
+                        cases.append(("tvc2_pair", (u, n1, n2), d,
+                                      "pair_tail", polname))
+                    else:
+                        cases.append(("tvc4", (u, n1, n2, v), d, "pair",
+                                      polname))
+    # dedupe identical (kind, dims, dtype) cells across layouts/orders
+    seen, out = set(), []
+    for c in cases:
+        key = (c[0], c[1], c[4])
+        if key not in seen:
+            seen.add(key)
+            out.append(c)
+    return out
+
+
+def run(smoke: bool = False, dtypes=("f32", "bf16"), max_candidates: int = 48,
+        out_path=None, dry_run: bool = False, reps: int = 3):
+    shapes = SMOKE_SHAPES if smoke else SHAPES
+    if smoke:
+        max_candidates = min(max_candidates, 6)
+        reps = 1
+    engine = sweep.engine_name()
+    backend = jax.default_backend()
+    lines = []
+    winners = []
+    for kind, dims, order, mode_class, polname in grid_cases(shapes, dtypes):
+        prec = get_policy(polname)
+        best, results = sweep.sweep_case(
+            kind, dims, prec=prec, max_candidates=max_candidates, reps=reps)
+        winners.append(block_table.entry(
+            kind, dims, best.blocks, prec.storage, gbs=best.gbs, order=order,
+            mode_class=mode_class, engine=engine, backend=backend,
+        ))
+        name = f"sweep_{kind}_{'x'.join(map(str, dims))}_{polname}"
+        lines.append(emit(
+            name, best.seconds * 1e6,
+            f"blocks={'x'.join(map(str, best.blocks))}"
+            f";{best.gbs:.2f}GB/s;{len(results)}cand"))
+
+    if dry_run:
+        print(f"# dry run: {len(winners)} winners NOT written")
+        return lines, winners
+
+    # merge: this backend's same-bucket cells are replaced, everything else
+    # (other backends' winners) is preserved
+    new_keys = {
+        (w["kind"], w["dtype"], w["backend"],
+         tuple(block_table.size_bucket(d) for d in w["dims"]))
+        for w in winners
+    }
+    kept = [
+        e for e in block_table.load(out_path)
+        if (e.get("kind"), e.get("dtype"), e.get("backend"),
+            tuple(block_table.size_bucket(d) for d in e.get("dims", [])))
+        not in new_keys
+    ]
+    path = block_table.save(
+        kept + winners, out_path,
+        meta={
+            "generated_by": "benchmarks/sweep_blocks.py",
+            "engine": engine,
+            "backend": backend,
+            "jax": jax.__version__,
+            "smoke": smoke,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        },
+    )
+    print(f"# wrote {path} ({len(winners)} winners, {len(kept)} kept)",
+          flush=True)
+    return lines, winners
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, few candidates (CI machinery check)")
+    ap.add_argument("--dtypes", default="f32,bf16")
+    ap.add_argument("--max-candidates", type=int, default=48)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=None,
+                    help="table path (default: the checked-in "
+                         "src/repro/kernels/block_table.json)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="measure and print winners without writing")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, dtypes=tuple(args.dtypes.split(",")),
+        max_candidates=args.max_candidates, out_path=args.out,
+        dry_run=args.dry_run, reps=args.reps)
+
+
+if __name__ == "__main__":
+    main()

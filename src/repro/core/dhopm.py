@@ -28,9 +28,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import collectives as coll
-from .dtvc import ShardState, dtvc_local
+from .dtvc import ShardState, dtvc2_local, dtvc_local
 from .mixed_precision import F32, Precision, get_policy
-from .tvc import tvc, tvc2
 
 __all__ = [
     "hopm_classic", "hopm3", "dhopm3", "hopm3_partial", "rank1", "rank1_residual",
@@ -99,10 +98,10 @@ def _hopm_sweeps(
                                   and done_after_first == set(range(j)))
                     do_fuse = not hit_n and not captures_W
                 if do_fuse:
-                    f_impl = impl if impl in ("native", "pallas") else "native"
-                    cur = tvc2(cur, xs[m], k_local, xs[nxt], k_local + 1,
-                               impl=f_impl, prec=prec)
-                    st = st.after_pair_contraction(k_local)
+                    # ONE launch for the adjacent pair (single-launch Pallas
+                    # kernel under impl="pallas", incl. the chain tail)
+                    cur, st = dtvc2_local(cur, xs[m], k_local, xs[nxt], st,
+                                          impl=impl, prec=prec)
                     modes = tuple(mm for mm in modes if mm not in (m, nxt))
                     idx += 2
                 else:

@@ -25,9 +25,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist import collectives as coll
 from .mixed_precision import F32, Precision, get_policy
-from .tvc import tvc, tvc_shape
+from .tvc import tvc, tvc2, tvc_shape
 
-__all__ = ["ShardState", "dtvc_local", "dtvc"]
+__all__ = ["ShardState", "dtvc_local", "dtvc2_local", "dtvc"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +109,44 @@ def dtvc_local(
         x_use = x
     out = tvc(A_loc, x_use, k, alpha=alpha, beta=beta, y=y, impl=impl, prec=prec)
     return out, state.after_contraction(k, hit_split)
+
+
+def dtvc2_local(
+    A_loc: jax.Array,
+    x1: jax.Array,
+    k: int,
+    x2: jax.Array,
+    state: ShardState,
+    *,
+    impl: str = "native",
+    prec: Precision | str = F32,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    y: jax.Array | None = None,
+) -> tuple[jax.Array, ShardState]:
+    """One *fused-pair* contraction of adjacent local modes (k, k+1) on a
+    shard — the single-launch counterpart of two :func:`dtvc_local` calls,
+    skipping the order-(d-1) intermediate entirely (dHOPM_3's chain fusion).
+
+    The fused kernel cannot take the Eq. 2 slice path, so the split dim must
+    not be part of the pair — :meth:`ShardState.after_pair_contraction`
+    raises otherwise and dHOPM's chain walker gates fusion on exactly that.
+    With ``impl="pallas"`` the pair streams through ONE ragged Pallas launch
+    (the chain-tail kernel when the pair ends the mode list) with the
+    ``alpha``/``beta``/``y`` update fused into its epilogue."""
+    prec = get_policy(prec)
+    new_state = state.after_pair_contraction(k)  # raises on split-in-pair
+    if x1.shape[0] != A_loc.shape[k] or x2.shape[0] != A_loc.shape[k + 1]:
+        raise ValueError(
+            f"vector sizes ({x1.shape[0]}, {x2.shape[0]}) != local pair "
+            f"extents {A_loc.shape[k:k + 2]}"
+        )
+    # looped/unfolded have no fused analogue (they are per-mode BLAS-2
+    # schedules); the fused pass is native einsum or the Pallas pair kernel
+    f_impl = impl if impl in ("native", "pallas") else "native"
+    out = tvc2(A_loc, x1, k, x2, k + 1, alpha=alpha, beta=beta, y=y,
+               impl=f_impl, prec=prec)
+    return out, new_state
 
 
 def _out_split_dim(k: int, s: int) -> int:

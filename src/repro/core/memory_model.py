@@ -22,6 +22,7 @@ __all__ = [
     "m_seq", "M_seq", "m_par_j_eq_s", "m_par_j_ne_s", "M_par", "M_par_rec",
     "eta_inv", "ring_allreduce_touched", "simulate_sweep", "H_inv",
     "tvc_streamed_elems", "tvc_padded_copy_elems", "pad_overhead",
+    "tvc2_streamed_elems", "tvc2_unfused_streamed_elems", "fused_pair_saving",
 ]
 
 
@@ -40,6 +41,37 @@ def tvc_streamed_elems(u: int, nk: int, v: int, beta: float = 0.0) -> int:
     multiply by the storage itemsize for bytes."""
     y_traffic = u * v * (2 if beta else 1)
     return u * nk * v + nk + y_traffic
+
+
+def tvc2_streamed_elems(u: int, n1: int, n2: int, v: int,
+                        beta: float = 0.0) -> int:
+    """Elements streamed by ONE single-launch fused-pair contraction
+    ``Y[u,v] = alpha * sum_{a,b} A[u,a,b,v] x1[a] x2[b] + beta * Y``: read A
+    once, read both vectors, write Y (+ one read of Y when the beta-update is
+    fused into the kernel epilogue).  The order-(d-1) intermediate
+    ``A x_{k1} x1`` never exists, so its write-then-read round trip — the
+    dominant term of the unfused pair for small n1 — is simply absent."""
+    y_traffic = u * v * (2 if beta else 1)
+    return u * n1 * n2 * v + n1 + n2 + y_traffic
+
+
+def tvc2_unfused_streamed_elems(u: int, n1: int, n2: int, v: int,
+                                beta: float = 0.0) -> int:
+    """Elements streamed by the same pair as TWO kernel launches: the first
+    TVC writes the (u, n2, v) intermediate, the second reads it back.  This
+    is the reference the fused kernel is predicted (and gated in CI) to beat:
+    the difference is exactly ``2 * u * n2 * v`` intermediate traffic."""
+    first = tvc_streamed_elems(u, n1, n2 * v)
+    second = tvc_streamed_elems(u, n2, v, beta=beta)
+    return first + second
+
+
+def fused_pair_saving(u: int, n1: int, n2: int, v: int,
+                      beta: float = 0.0) -> float:
+    """Streamed-traffic ratio two-launch / fused (> 1 always: the fused pass
+    never materializes the intermediate)."""
+    return (tvc2_unfused_streamed_elems(u, n1, n2, v, beta)
+            / tvc2_streamed_elems(u, n1, n2, v, beta))
 
 
 def tvc_padded_copy_elems(

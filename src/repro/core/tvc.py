@@ -39,6 +39,7 @@ __all__ = [
     "tvc_shape",
     "tvc",
     "tvc_bytes",
+    "tvc2_bytes",
     "IMPLS",
 ]
 
@@ -76,6 +77,23 @@ def tvc_bytes(shape: Sequence[int], k: int, itemsize: int, beta: float = 0.0) ->
     out = n // nk
     y_traffic = out * (2 if beta else 1)
     return (n + nk + y_traffic) * itemsize
+
+
+def tvc2_bytes(shape: Sequence[int], k1: int, k2: int, itemsize: int,
+               beta: float = 0.0) -> int:
+    """Streamed (touched) memory of one *fused-pair* contraction over
+    adjacent modes (k1, k2 = k1+1): read A, read both vectors, write Y
+    (+ read Y when beta != 0).  The single-launch Pallas pair kernels move
+    exactly these bytes — the order-(d-1) intermediate of the two-launch
+    reference never exists (see
+    :func:`repro.core.memory_model.tvc2_streamed_elems`)."""
+    if k2 != k1 + 1:
+        raise ValueError(f"tvc2 fuses adjacent modes only, got {k1},{k2}")
+    n = math.prod(shape)
+    n1, n2 = shape[k1], shape[k2]
+    out = n // (n1 * n2)
+    y_traffic = out * (2 if beta else 1)
+    return (n + n1 + n2 + y_traffic) * itemsize
 
 
 def _contract_core(a3, x, prec: Precision):
@@ -168,12 +186,20 @@ def tvc(
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
 
     y2 = y2.astype(prec.compute)
-    if alpha != 1.0:
+    if isinstance(alpha, (int, float)) and isinstance(beta, (int, float)):
+        if float(alpha) != 1.0:
+            y2 = y2 * jnp.asarray(alpha, prec.compute)
+        if float(beta) != 0.0:
+            if y is None:
+                raise ValueError("beta != 0 requires y")
+            y2 = y2 + jnp.asarray(beta, prec.compute) * \
+                y.reshape(u, v).astype(prec.compute)
+    else:
+        # traced scalars: never branch a Python bool on a tracer
         y2 = y2 * jnp.asarray(alpha, prec.compute)
-    if beta != 0.0:
-        if y is None:
-            raise ValueError("beta != 0 requires y")
-        y2 = y2 + jnp.asarray(beta, prec.compute) * y.reshape(u, v).astype(prec.compute)
+        if y is not None:
+            y2 = y2 + jnp.asarray(beta, prec.compute) * \
+                y.reshape(u, v).astype(prec.compute)
     return y2.reshape(tvc_shape(shape, k)).astype(out_dtype)
 
 
@@ -184,15 +210,22 @@ def tvc2(
     x2: jax.Array,
     k2: int,
     *,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    y: jax.Array | None = None,
     impl: str = "native",
     prec: Precision | str = F32,
 ):
     """BEYOND-PAPER: fused two-mode contraction — one streaming pass computes
-    ``(A x_{k1} x1) x_{k2'} x2`` without materializing the order-(d-1)
-    intermediate, cutting the streamed memory of a contraction pair from
-    N + 2N/n_{k1} + N/(n_{k1} n_{k2}) to N + N/(n_{k1} n_{k2}).  Requires
-    k2 == k1 + 1 (HOPM chains contract consecutive modes).  On TPU this is
-    the Pallas kernel in repro.kernels (two sequential reduction grid dims).
+    ``Y = alpha * ((A x_{k1} x1) x_{k2'} x2) + beta * Y`` without
+    materializing the order-(d-1) intermediate, cutting the streamed memory
+    of a contraction pair from N + 2N/n_{k1} + N/(n_{k1} n_{k2}) to
+    N + N/(n_{k1} n_{k2}).  Requires k2 == k1 + 1 (HOPM chains contract
+    consecutive modes).  With ``impl="pallas"`` this is ONE kernel launch:
+    the pair kernels in repro.kernels (two sequential reduction grid dims;
+    a dedicated tail kernel when the pair ends the mode list, v == 1) with
+    the BLAS update fused into the emit epilogue, exactly like single-mode
+    ``tvc``.
     """
     if k2 != k1 + 1:
         raise ValueError(f"tvc2 fuses adjacent modes only, got {k1},{k2}")
@@ -204,14 +237,39 @@ def tvc2(
     if x1.shape != (n1,) or x2.shape != (n2,):
         raise ValueError("vector shapes incompatible with fused modes")
     a4 = A.reshape(u, n1, n2, v)
+    out_shape = tuple(shape[:k1]) + tuple(shape[k2 + 1:])
+    static_ab = isinstance(alpha, (int, float)) and isinstance(beta, (int, float))
+    if static_ab and float(beta) != 0.0 and y is None:
+        raise ValueError("beta != 0 requires y")
     if impl == "pallas":
         from repro.kernels import ops as kops
-        y = kops.tvc2_pallas(a4, x1, x2, prec=prec)
+        if static_ab:
+            # Static alpha/beta: the whole update runs inside the single
+            # kernel launch (one extra read of y, no second pass).
+            y_in = None if float(beta) == 0.0 else y.reshape(u, v)
+            out = kops.tvc2_pallas(a4, x1, x2, y_in, alpha=float(alpha),
+                                   beta=float(beta), prec=prec)
+            return out.reshape(out_shape).astype(prec.storage)
+        out = kops.tvc2_pallas(a4, x1, x2, prec=prec)
     else:
-        y = jnp.einsum("uabv,a,b->uv", a4, x1, x2,
-                       preferred_element_type=prec.compute)
-    out_shape = tuple(shape[:k1]) + tuple(shape[k2 + 1:])
-    return y.reshape(out_shape).astype(prec.storage)
+        out = jnp.einsum("uabv,a,b->uv", a4, x1, x2,
+                         preferred_element_type=prec.compute)
+    out = out.astype(prec.compute)
+    if static_ab:
+        if float(alpha) != 1.0:
+            out = out * jnp.asarray(alpha, prec.compute)
+        if float(beta) != 0.0:
+            out = out + jnp.asarray(beta, prec.compute) * \
+                y.reshape(u, v).astype(prec.compute)
+    else:
+        # traced scalars: no Python-bool branching on tracer values — apply
+        # the update unconditionally (a traced beta requires y; a traced
+        # "beta == 0" is indistinguishable from any other runtime value)
+        out = out * jnp.asarray(alpha, prec.compute)
+        if y is not None:
+            out = out + jnp.asarray(beta, prec.compute) * \
+                y.reshape(u, v).astype(prec.compute)
+    return out.reshape(out_shape).astype(prec.storage)
 
 
 def tvc_chain(

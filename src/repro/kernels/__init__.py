@@ -3,10 +3,15 @@
 * :mod:`tvc_kernel` — the paper's native mode-oblivious TVC (HBM->VMEM
   streaming, mixed-precision accumulator, ragged ``pl.cdiv`` grids with
   in-kernel edge masking, fused alpha/beta epilogue).
-* :mod:`axpby`      — the paper's §5.5 mixed-precision axpby (zero-copy).
-* :mod:`autotune`   — VMEM-aware block-size selection (dtype tiling quantum,
-  byte budget, view aspect ratio).
+* :mod:`axpby`      — the paper's §5.5 mixed-precision axpby (zero-copy,
+  tiled ragged view).
+* :mod:`autotune`   — block-size selection: offline sweep-table lookup first,
+  VMEM-aware heuristic fallback (dtype tiling quantum, byte budget, view
+  aspect ratio).
+* :mod:`block_table`— the checked-in sweep winners the autotuner consults
+  (regenerate with ``benchmarks/sweep_blocks.py``).
+* :mod:`sweep`      — the offline (bu, bk, bv) candidate search itself.
 * :mod:`ops`        — jit'd wrappers (autotuned dispatch, views; no padding).
 * :mod:`ref`        — pure-jnp oracles.
 """
-from . import autotune, ops, ref  # noqa: F401
+from . import autotune, block_table, ops, ref  # noqa: F401

@@ -17,12 +17,23 @@ three inputs, mirroring the paper's cache-blocking discussion (§3, §5):
   (v, then n_k, then u): v-blocks give the longest contiguous HBM runs in the
   last-order layout, and k-blocks amortize accumulator init/emit across the
   sequential reduction dim.
+
+The heuristic is the *fallback*: every ``pick_*_blocks`` call first consults
+the offline sweep table (:mod:`repro.kernels.block_table` — measured winners
+per (kind, dtype, backend, size-bucket) cell, pinned by
+``benchmarks/sweep_blocks.py``) and only runs the grow loop on a miss.
+Table hits are sanitized to the dtype tiling quanta and clamped to the view,
+so a stale or hand-edited table can cost bandwidth but never correctness.
+Pass ``table=False`` (or set ``REPRO_TVC_DISABLE_TABLE=1``) to force the
+heuristic.
 """
 from __future__ import annotations
 
 import os
 
 import jax.numpy as jnp
+
+from . import block_table
 
 __all__ = [
     "LANE",
@@ -31,6 +42,7 @@ __all__ = [
     "pick_tvc3_blocks",
     "pick_tvc2_blocks",
     "pick_tvc4_blocks",
+    "pick_tvc2_pair_blocks",
     "pick_axpby_blocks",
 ]
 
@@ -63,6 +75,25 @@ def _clamp(block: int, dim: int, quantum: int) -> int:
     return max(quantum, min(block, _round_up(dim, quantum)))
 
 
+def _from_table(kind: str, dims: tuple[int, ...], storage,
+                quanta: tuple[int, ...], cost, budget: int
+                ) -> tuple[int, ...] | None:
+    """Sweep-table hit for ``dims``, sanitized: each block rounded up to its
+    dim's tiling quantum and clamped to the dim — block sizes are a pure
+    perf knob (the kernels mask ragged edges in-kernel), so sanitizing keeps
+    even a stale table entry correct.  Hits whose VMEM cost exceeds the
+    caller's budget are rejected (the sweep may have run under a larger
+    budget than this call site has)."""
+    hit = block_table.lookup(kind, dims, storage)
+    if hit is None or len(hit) != len(dims):
+        return None
+    blocks = tuple(
+        _clamp(_round_up(max(1, int(b)), q), d, q)
+        for b, d, q in zip(hit, dims, quanta)
+    )
+    return blocks if cost(*blocks) <= budget else None
+
+
 def pick_tvc3_blocks(
     u: int,
     nk: int,
@@ -72,9 +103,11 @@ def pick_tvc3_blocks(
     compute=jnp.float32,
     has_y: bool = False,
     budget: int | None = None,
+    table: bool = True,
 ) -> tuple[int, int, int]:
     """(bu, bk, bv) for the (u, n_k, v)-view kernel (lanes on v, sublanes on
-    n_k)."""
+    n_k).  Sweep-table winners (see :mod:`repro.kernels.block_table`) take
+    precedence over the heuristic grow loop."""
     budget = vmem_budget(budget)
     ssz = jnp.dtype(storage).itemsize
     csz = jnp.dtype(compute).itemsize
@@ -86,6 +119,12 @@ def pick_tvc3_blocks(
         acc = bu * bv * csz
         out = bu * bv * ssz * (3 if has_y else 1)  # + double-buffered y-in
         return a_blk + x_blk + acc + out
+
+    if table:
+        hit = _from_table("tvc3", (u, nk, v), storage, (8, q, LANE),
+                          cost, budget)
+        if hit is not None:
+            return hit
 
     bu = _clamp(64, u, 8)
     bk = _clamp(512, nk, q)
@@ -126,6 +165,7 @@ def pick_tvc2_blocks(
     compute=jnp.float32,
     has_y: bool = False,
     budget: int | None = None,
+    table: bool = True,
 ) -> tuple[int, int]:
     """(bu, bk) for the k = d-1 matvec kernel (lanes on n_k, sublanes on u) —
     note the quantum roles flip vs. the 3-D view: bu takes the dtype sublane
@@ -138,6 +178,11 @@ def pick_tvc2_blocks(
     def cost(bu: int, bk: int) -> int:
         return (2 * bu * bk * ssz + 2 * bk * ssz + bu * csz
                 + bu * ssz * (3 if has_y else 1))
+
+    if table:
+        hit = _from_table("tvc2", (u, nk), storage, (q, LANE), cost, budget)
+        if hit is not None:
+            return hit
 
     bu = _clamp(8 * q, u, q)
     bk = _clamp(1024, nk, LANE)
@@ -171,7 +216,9 @@ def pick_tvc4_blocks(
     *,
     storage=jnp.float32,
     compute=jnp.float32,
+    has_y: bool = False,
     budget: int | None = None,
+    table: bool = True,
 ) -> tuple[int, int, int, int]:
     """(bu, b1, b2, bv) for the fused-pair kernel: lanes on v, sublanes on
     n_2; n_1 and u are leading dims kept small so the 4-D block fits."""
@@ -182,7 +229,13 @@ def pick_tvc4_blocks(
 
     def cost(bu: int, b1: int, b2: int, bv: int) -> int:
         return (2 * bu * b1 * b2 * bv * ssz + 2 * (b1 + b2) * ssz
-                + bu * bv * csz + bu * bv * ssz)
+                + bu * bv * csz + bu * bv * ssz * (3 if has_y else 1))
+
+    if table:
+        hit = _from_table("tvc4", (u, n1, n2, v), storage, (8, 8, q, LANE),
+                          cost, budget)
+        if hit is not None:
+            return hit
 
     bu = _clamp(8, u, 8)
     b1 = _clamp(8, n1, 8)
@@ -206,6 +259,67 @@ def pick_tvc4_blocks(
                 break
             bu, b1, b2, bv = nbu, nb1, nb2, nbv
     return bu, b1, b2, bv
+
+
+def pick_tvc2_pair_blocks(
+    u: int,
+    n1: int,
+    n2: int,
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    has_y: bool = False,
+    budget: int | None = None,
+    table: bool = True,
+) -> tuple[int, int, int]:
+    """(bu, b1, b2) for the fused-pair chain-tail kernel (v == 1): lanes on
+    n_2 (the contiguous minor mode), sublanes on n_1; bu rides the output's
+    sublane dim so it keeps the dtype quantum."""
+    budget = vmem_budget(budget)
+    ssz = jnp.dtype(storage).itemsize
+    csz = jnp.dtype(compute).itemsize
+    q = sublane_quantum(storage)
+
+    def cost(bu: int, b1: int, b2: int) -> int:
+        return (2 * bu * b1 * b2 * ssz + 2 * (b1 + b2) * ssz
+                + bu * csz + bu * ssz * (3 if has_y else 1))
+
+    if table:
+        hit = _from_table("tvc2_pair", (u, n1, n2), storage, (q, q, LANE),
+                          cost, budget)
+        if hit is not None:
+            return hit
+
+    bu = _clamp(8 * q, u, q)
+    b1 = _clamp(4 * q, n1, q)
+    b2 = _clamp(512, n2, LANE)
+    # shrink to budget: u first (pure parallel), then the outer reduction
+    # dim, then the lanes
+    while cost(bu, b1, b2) > budget:
+        if bu > q:
+            bu = _clamp(_round_up(bu // 2, q), u, q)
+        elif b1 > q:
+            b1 = _clamp(_round_up(b1 // 2, q), n1, q)
+        elif b2 > LANE:
+            b2 = _clamp(_round_up(b2 // 2, LANE), n2, LANE)
+        else:
+            break
+    # grow minor-dim first: n_2 lanes give the contiguous HBM runs
+    for grow in ("2", "1", "u"):
+        while True:
+            nbu, nb1, nb2 = bu, b1, b2
+            if grow == "2" and b2 < min(_round_up(n2, LANE), 4096):
+                nb2 = _clamp(b2 * 2, n2, LANE)
+            elif grow == "1" and b1 < min(_round_up(n1, q), 16 * q):
+                nb1 = _clamp(b1 * 2, n1, q)
+            elif grow == "u" and bu < min(_round_up(u, q), 64 * q):
+                nbu = _clamp(bu * 2, u, q)
+            else:
+                break
+            if (nbu, nb1, nb2) == (bu, b1, b2) or cost(nbu, nb1, nb2) > budget:
+                break
+            bu, b1, b2 = nbu, nb1, nb2
+    return bu, b1, b2
 
 
 def pick_axpby_blocks(

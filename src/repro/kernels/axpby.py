@@ -7,21 +7,36 @@ promote/compute/demote pipeline is native vector work, and the VMEM block IS
 the cache-resident work array.  The kernel keeps the same contract: HBM
 traffic in the storage dtype, arithmetic in the compute dtype.
 
-Ragged sizes stream with zero copies: the grid uses ``pl.cdiv`` and partial
-edge blocks need no in-kernel masking at all — the op is elementwise, so
-garbage in out-of-bounds input lanes only ever lands in out-of-bounds output
-lanes, which are discarded.  (Contrast the TVC kernels, whose *reduction*
-edge blocks must be masked.)  Standalone axpby passes over TVC outputs are
-mostly gone anyway: the ``beta != 0`` update is fused into the TVC kernel
-epilogue (see :mod:`repro.kernels.tvc_kernel`).
+Ragged sizes stream with zero copies, at full VPU-row utilization:
+
+* lane-aligned n: the flat buffer is reinterpreted (a free reshape) as
+  ``(n/128, 128)`` and tiled with :func:`axpby_2d` — no masking needed, the
+  op is elementwise and partial edge blocks only ever put garbage into
+  discarded out-of-bounds output lanes.
+* lane-UNALIGNED n: ``(n/128, 128)`` is not a free reshape, so the buffer
+  stays a ``(1, n)`` view — but instead of the old single-sublane ``(1, n)``
+  blocks (1/8 of the VPU rows), :func:`axpby_tiled` streams ``(1, 128*bt)``
+  lane runs and re-tiles each to ``(bt, 128)`` *inside* the kernel: HBM
+  reads stay contiguous, compute runs on full (sublane, lane) rows.  The
+  trailing partial block is masked in-kernel (garbage lanes zeroed before
+  the promote — interior blocks skip the mask entirely), the matching
+  out-of-bounds stores are discarded.
+
+Standalone axpby passes over TVC outputs are mostly gone anyway: the
+``beta != 0`` update is fused into the TVC kernel epilogue (see
+:mod:`repro.kernels.tvc_kernel`).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.core.mixed_precision import F32, Precision, get_policy
+from .autotune import LANE
 
 _cdiv = pl.cdiv
 
@@ -60,5 +75,73 @@ def axpby_2d(
         ],
         out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, c), prec.storage),
+        interpret=interpret,
+    )(ab, x, y)
+
+
+def _axpby_tiled_body(ab_ref, x_ref, y_ref, o_ref, *, n: int, bt: int,
+                      blocks: int, mask_tail: bool):
+    """(1, bt*128) lane-run blocks over a flat (1, n) view, re-tiled to
+    (bt, 128) in-kernel so compute uses full VPU rows."""
+    cdt = ab_ref.dtype
+    alpha = ab_ref[0, 0]
+    beta = ab_ref[0, 1]
+    i = pl.program_id(0)
+    width = bt * LANE
+
+    def _store(masked: bool):
+        x = x_ref[...].astype(cdt)                  # (1, bt*128)
+        y = y_ref[...].astype(cdt)
+        if masked:
+            # trailing partial block: zero the garbage lanes past n before
+            # the promote/compute (out-of-bounds lanes are undefined)
+            lim = n - i * width
+            m = lax.broadcasted_iota(jnp.int32, (1, width), 1) < lim
+            x = jnp.where(m, x, 0)
+            y = jnp.where(m, y, 0)
+        out = alpha * x.reshape(bt, LANE) + beta * y.reshape(bt, LANE)
+        o_ref[...] = out.reshape(1, width).astype(o_ref.dtype)
+
+    if mask_tail:
+        # only the last block carries garbage lanes; interior blocks skip
+        # the iota/select entirely
+        last = i == blocks - 1
+        pl.when(last)(lambda: _store(True))
+        pl.when(jnp.logical_not(last))(lambda: _store(False))
+    else:
+        _store(False)
+
+
+def axpby_tiled(
+    alpha,
+    x: jax.Array,
+    beta,
+    y: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    bt: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """x, y: flat (1, n) views with lane-unaligned n > 128.  One launch,
+    zero copies, full sublane rows via the in-kernel (bt, 128) re-tile."""
+    prec = get_policy(prec)
+    _, n = x.shape
+    width = bt * LANE
+    blocks = _cdiv(n, width)
+    ab = jnp.asarray([alpha, beta], prec.compute).reshape(1, 2)
+    kernel = functools.partial(
+        _axpby_tiled_body, n=n, bt=bt, blocks=blocks,
+        mask_tail=n % width != 0,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, width), lambda i: (0, i)),
+            pl.BlockSpec((1, width), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, width), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), prec.storage),
         interpret=interpret,
     )(ab, x, y)

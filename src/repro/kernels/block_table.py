@@ -1,0 +1,185 @@
+"""Checked-in (bu, bk, bv) sweep-table lookup for the TVC kernels.
+
+The autotuner's grow loop (:mod:`repro.kernels.autotune`) is a heuristic —
+good shape-independent defaults, but Peise et al. ("On the Performance
+Prediction of BLAS-based Tensor Contractions") show per-shape selection from
+*offline measurements* beats any single heuristic.  This module is the
+measured side of that split:
+
+* ``benchmarks/sweep_blocks.py`` runs the offline search
+  (:mod:`repro.kernels.sweep`) over (order, mode-class, dtype) cells and pins
+  each winner into ``kernels/block_table.json`` — a checked-in artifact, so
+  every later run (and CI) selects from measurements instead of re-deriving;
+* :func:`lookup` is consulted by every ``pick_*_blocks`` call *before* the
+  heuristic grow loop.  A hit must match the kernel kind, storage dtype,
+  backend, and the log2 size bucket of every view dim (block choice is a
+  bandwidth property of the *magnitude* of each extent, not its exact value
+  — and ragged extents would otherwise never hit).
+
+Entries record the backend they were measured on and lookups are filtered by
+the *current* backend, so a table swept on CPU never steers a TPU run (and
+vice versa) — regenerate per hardware, see the README "Kernels" section.
+
+``REPRO_TVC_BLOCK_TABLE`` overrides the table path;
+``REPRO_TVC_DISABLE_TABLE=1`` turns lookups off (heuristic only).
+:func:`pin` injects in-memory entries (tests, fresh sweep results) that take
+precedence over the file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "KINDS", "DEFAULT_PATH", "size_bucket", "dtype_name",
+    "load", "save", "lookup", "pin", "clear",
+]
+
+#: kernel kinds, keyed by the view the wrapper dispatches on:
+#:   tvc3      — (u, n_k, v) single mode, v > 1
+#:   tvc2      — (u, n_k) matvec, mode k = d-1
+#:   tvc4      — (u, n1, n2, v) fused pair, v > 1
+#:   tvc2_pair — (u, n1, n2) fused pair chain tail, v == 1
+KINDS = ("tvc2", "tvc3", "tvc4", "tvc2_pair")
+
+DEFAULT_PATH = pathlib.Path(__file__).with_name("block_table.json")
+
+_file_cache: dict[str, list[dict]] = {}
+_pinned: list[dict] = []
+
+
+def size_bucket(n: int) -> int:
+    """log2 bucket of a view extent: 0, 1, 2, ... for 0/1, 2, 3-4, 5-8, ...
+    (``int.bit_length`` of n-1, i.e. ceil(log2 n))."""
+    n = int(n)
+    return max(0, n - 1).bit_length()
+
+
+def dtype_name(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+def _table_path(path=None) -> pathlib.Path:
+    if path is not None:
+        return pathlib.Path(path)
+    env = os.environ.get("REPRO_TVC_BLOCK_TABLE")
+    return pathlib.Path(env) if env else DEFAULT_PATH
+
+
+def load(path=None) -> list[dict]:
+    """Entries from the table file (cached per path; [] when absent).  A
+    file that exists but does not parse raises — silently ignoring it would
+    disable every sweep winner with no signal."""
+    p = _table_path(path)
+    key = str(p)
+    if key not in _file_cache:
+        try:
+            text = p.read_text()
+        except OSError:
+            _file_cache[key] = []        # no table yet: heuristic only
+            return _file_cache[key]
+        try:
+            payload = json.loads(text)
+            _file_cache[key] = list(payload.get("entries", []))
+        except (ValueError, AttributeError) as e:
+            raise ValueError(f"corrupt block table {p}: {e}") from e
+    return _file_cache[key]
+
+
+def save(entries: Iterable[dict], path=None, meta: dict | None = None) -> pathlib.Path:
+    """Write (and re-cache) the table file; ``benchmarks/sweep_blocks.py`` is
+    the normal caller."""
+    p = _table_path(path)
+    entries = sorted(
+        entries,
+        key=lambda e: (e.get("kind", ""), e.get("dtype", ""),
+                       e.get("backend", ""), list(e.get("dims", []))),
+    )
+    payload = {"meta": {"schema": 1, **(meta or {})}, "entries": entries}
+    p.write_text(json.dumps(payload, indent=1) + "\n")
+    _file_cache[str(p)] = entries
+    return p
+
+
+def clear() -> None:
+    """Drop pinned entries and the file cache (tests)."""
+    _pinned.clear()
+    _file_cache.clear()
+
+
+def pin(entry: dict) -> None:
+    """Register an in-memory entry that outranks the file (tests / a sweep
+    that has not been committed yet).  Required keys: kind, dtype, dims,
+    blocks; backend defaults to the current one."""
+    e = dict(entry)
+    e.setdefault("backend", jax.default_backend())
+    missing = {"kind", "dtype", "dims", "blocks"} - set(e)
+    if missing:
+        raise ValueError(f"pinned entry missing {sorted(missing)}")
+    _pinned.append(e)
+
+
+def _matches(e: dict, kind: str, dname: str, backend: str,
+             buckets: tuple[int, ...]) -> bool:
+    if e.get("kind") != kind or e.get("dtype") != dname:
+        return False
+    if e.get("backend") != backend:
+        return False
+    dims = e.get("dims", ())
+    if len(dims) != len(buckets):
+        return False
+    return tuple(size_bucket(d) for d in dims) == buckets
+
+
+def lookup(kind: str, dims: tuple[int, ...], storage,
+           backend: str | None = None, path=None) -> tuple[int, ...] | None:
+    """Best pinned-or-filed blocks for a (kind, dtype, backend, size-bucket)
+    cell, or None (caller falls back to the heuristic).  Ties/multiple hits
+    resolve to the highest measured GB/s."""
+    if os.environ.get("REPRO_TVC_DISABLE_TABLE"):
+        return None
+    if kind not in KINDS:
+        raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
+    dname = dtype_name(storage)
+    backend = backend or jax.default_backend()
+    buckets = tuple(size_bucket(d) for d in dims)
+
+    def _best(entries) -> dict | None:
+        best: dict | None = None
+        for e in entries:
+            if not _matches(e, kind, dname, backend, buckets):
+                continue
+            if best is None or e.get("gbs", 0.0) > best.get("gbs", 0.0):
+                best = e
+        return best
+
+    # pinned entries outrank the file outright (a fresh sweep result or a
+    # test override must win regardless of the stale entry's measured gbs)
+    hit = _best(_pinned) or _best(load(path))
+    if hit is None:
+        return None
+    return tuple(int(b) for b in hit["blocks"])
+
+
+def entry(kind: str, dims, blocks, storage, *, gbs: float = 0.0,
+          order: int | None = None, mode_class: str | None = None,
+          engine: str | None = None, backend: str | None = None,
+          **extra: Any) -> dict:
+    """Normalized table entry (shared by the sweep writer and tests)."""
+    return {
+        "kind": kind,
+        "dtype": dtype_name(storage),
+        "backend": backend or jax.default_backend(),
+        "engine": engine,
+        "order": order,
+        "mode_class": mode_class,
+        "dims": [int(d) for d in dims],
+        "blocks": [int(b) for b in blocks],
+        "gbs": float(gbs),
+        **extra,
+    }

@@ -99,25 +99,57 @@ def tvc(
     return out.reshape(out_shape)
 
 
-@partial(jax.jit, static_argnames=("prec", "interpret"))
+@partial(jax.jit,
+         static_argnames=("alpha", "beta", "prec", "bu", "b1", "b2", "bv",
+                          "interpret"))
 def tvc2_pallas(
     a4: jax.Array,
     x1: jax.Array,
     x2: jax.Array,
+    y: jax.Array | None = None,
     *,
+    alpha: float = 1.0,
+    beta: float = 0.0,
     prec: Precision | str = F32,
+    bu: int | None = None,
+    b1: int | None = None,
+    b2: int | None = None,
+    bv: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused two-mode contraction on the (u, n1, n2, v) view — ragged-safe,
-    zero-copy, autotuned blocks."""
+    """Fused two-mode contraction on the (u, n1, n2, v) view in ONE kernel
+    launch, with the BLAS update ``Y = alpha * (A x1 x2) + beta * Y`` fused
+    into the emit epilogue — ragged-safe, zero-copy, autotuned blocks (pass
+    ``bu``/``b1``/``b2``/``bv`` to override).  Dispatches to the dedicated
+    chain-tail kernel when v == 1 (the pair (d-2, d-1) of dHOPM_3's fused
+    chains), which lanes on n_2 instead of wasting a 128-lane block on the
+    singleton v."""
     prec = get_policy(prec)
     if interpret is None:
         interpret = _interpret_default()
+    alpha, beta = float(alpha), float(beta)
     u, n1, n2, v = a4.shape
-    bu, b1, b2, bv = _at.pick_tvc4_blocks(
-        u, n1, n2, v, storage=prec.storage, compute=prec.compute)
-    return _tvc.tvc4(a4, x1, x2, prec=prec, bu=bu, b1=b1, b2=b2, bv=bv,
-                     interpret=interpret)
+    if beta != 0.0 and y is None:
+        raise ValueError("beta != 0 requires y")
+    has_y = y is not None and beta != 0.0
+
+    if v == 1:
+        bu_, b1_, b2_ = _at.pick_tvc2_pair_blocks(
+            u, n1, n2, storage=prec.storage, compute=prec.compute,
+            has_y=has_y)
+        bu_, b1_, b2_ = bu or bu_, b1 or b1_, b2 or b2_
+        y_in = y.reshape(u, 1) if has_y else None
+        return _tvc.tvc2_pair(
+            a4.reshape(u, n1, n2), x1, x2, prec=prec, bu=bu_, b1=b1_, b2=b2_,
+            alpha=alpha, beta=beta, y_in=y_in, interpret=interpret,
+        ).reshape(u, 1)
+
+    bu_, b1_, b2_, bv_ = _at.pick_tvc4_blocks(
+        u, n1, n2, v, storage=prec.storage, compute=prec.compute, has_y=has_y)
+    bu_, b1_, b2_, bv_ = bu or bu_, b1 or b1_, b2 or b2_, bv or bv_
+    y_in = y.reshape(u, v) if has_y else None
+    return _tvc.tvc4(a4, x1, x2, prec=prec, bu=bu_, b1=b1_, b2=b2_, bv=bv_,
+                     alpha=alpha, beta=beta, y_in=y_in, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("prec", "interpret"))
@@ -132,9 +164,12 @@ def axpby_pallas(
 ) -> jax.Array:
     """Mixed-precision ``alpha*x + beta*y`` over arbitrary-shape arrays.
 
-    Zero-copy: the flat view is reinterpreted as (n/128, 128) when the size
-    is lane-aligned (full VPU sublane utilization), else as (1, n); both are
-    free reshapes, and ragged edges ride on out-of-bounds-safe blocks."""
+    Zero-copy: lane-aligned sizes reinterpret the flat view as
+    (n/128, 128) (a free reshape, full VPU sublane utilization); lane-
+    UNALIGNED sizes larger than one lane run keep the flat (1, n) view but
+    stream (1, 128*bt) lane runs re-tiled to (bt, 128) *inside* the kernel
+    with an in-kernel masked tail — full sublane rows either way, never a
+    single-sublane pass, never a padding copy."""
     prec = get_policy(prec)
     if interpret is None:
         interpret = _interpret_default()
@@ -142,12 +177,24 @@ def axpby_pallas(
     n = math.prod(shape) if shape else 1
     if n % _at.LANE == 0:
         rows, cols = n // _at.LANE, _at.LANE
+        block = _at.pick_axpby_blocks(
+            rows, cols, storage=prec.storage, compute=prec.compute)
+        out = _axpby.axpby_2d(
+            alpha, x.reshape(rows, cols), beta, y.reshape(rows, cols),
+            prec=prec, block=block, interpret=interpret,
+        )
+    elif n > _at.LANE:
+        # ragged: same (bt, 128) tiling, via the in-kernel re-tile
+        bt, _ = _at.pick_axpby_blocks(
+            -(-n // _at.LANE), _at.LANE,
+            storage=prec.storage, compute=prec.compute)
+        out = _axpby.axpby_tiled(
+            alpha, x.reshape(1, n), beta, y.reshape(1, n),
+            prec=prec, bt=bt, interpret=interpret,
+        )
     else:
-        rows, cols = 1, n
-    block = _at.pick_axpby_blocks(
-        rows, cols, storage=prec.storage, compute=prec.compute)
-    out = _axpby.axpby_2d(
-        alpha, x.reshape(rows, cols), beta, y.reshape(rows, cols),
-        prec=prec, block=block, interpret=interpret,
-    )
+        out = _axpby.axpby_2d(
+            alpha, x.reshape(1, n), beta, y.reshape(1, n),
+            prec=prec, block=(1, _at.LANE), interpret=interpret,
+        )
     return out.reshape(shape)

@@ -1,0 +1,227 @@
+"""Offline block-size search for the TVC kernels.
+
+The autotuner's grow loop picks one (bu, bk, bv) per view from a fixed
+heuristic; this module *measures* instead: enumerate every quantum-aligned
+power-of-two block candidate that fits the VMEM budget, time the actual
+kernel launch on each, and return the winner.  ``benchmarks/sweep_blocks.py``
+drives it over the (order, mode-class, dtype) bench grid and pins the winners
+into :mod:`repro.kernels.block_table`, which the autotuner consults before
+the heuristic on every later run.
+
+Timings are only meaningful where the kernels compile (TPU — engine
+``pallas``).  Elsewhere the sweep still runs end-to-end through interpret
+mode (engine ``pallas-interpret``) so the machinery is exercised in CI, and
+the resulting entries are tagged with the CPU backend, which
+:func:`block_table.lookup` filters on — interpreter noise never steers a TPU
+run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.memory_model import tvc2_streamed_elems, tvc_streamed_elems
+from repro.core.mixed_precision import Precision, get_policy
+from . import autotune as _at
+from . import block_table
+from . import ops
+
+__all__ = ["SweepResult", "candidates", "streamed_bytes", "time_blocks",
+           "sweep_case", "engine_name"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    kind: str
+    dims: tuple[int, ...]
+    blocks: tuple[int, ...]
+    seconds: float
+    gbs: float
+
+
+def engine_name() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "pallas-interpret"
+
+
+def _pow2_multiples(quantum: int, dim: int, cap: int) -> list[int]:
+    """quantum, 2*quantum, 4*quantum, ... clipped to min(cap, dim rounded up
+    to the quantum) — every size a block along this dim can usefully take."""
+    top = min(cap, _at._round_up(max(1, dim), quantum))
+    out, b = [], quantum
+    while b <= top:
+        out.append(b)
+        b *= 2
+    if not out or out[-1] < top:
+        out.append(top)
+    return out
+
+
+def _quanta_and_cost(kind: str, storage, compute,
+                     has_y: bool) -> tuple[tuple[int, ...], Callable]:
+    """Per-dim (quantum, cap) axes and the double-buffered VMEM cost model
+    for each kernel kind (mirrors the autotuner's budgets)."""
+    ssz = jnp.dtype(storage).itemsize
+    csz = jnp.dtype(compute).itemsize
+    q = _at.sublane_quantum(storage)
+    L = _at.LANE
+    yf = 3 if has_y else 1
+    if kind == "tvc3":
+        axes = ((8, 256), (q, 4096), (L, 2048))
+        cost = lambda bu, bk, bv: (2 * bu * bk * bv * ssz + 2 * bk * ssz
+                                   + bu * bv * csz + bu * bv * ssz * yf)
+    elif kind == "tvc2":
+        axes = ((q, 64 * q), (L, 8192))
+        cost = lambda bu, bk: (2 * bu * bk * ssz + 2 * bk * ssz
+                               + bu * csz + bu * ssz * yf)
+    elif kind == "tvc4":
+        axes = ((8, 64), (8, 64), (q, 16 * q), (L, 1024))
+        cost = lambda bu, b1, b2, bv: (2 * bu * b1 * b2 * bv * ssz
+                                       + 2 * (b1 + b2) * ssz
+                                       + bu * bv * csz + bu * bv * ssz * yf)
+    elif kind == "tvc2_pair":
+        axes = ((q, 64 * q), (q, 32 * q), (L, 8192))
+        cost = lambda bu, b1, b2: (2 * bu * b1 * b2 * ssz
+                                   + 2 * (b1 + b2) * ssz
+                                   + bu * csz + bu * ssz * yf)
+    else:
+        raise ValueError(f"kind must be one of {block_table.KINDS}, got {kind!r}")
+    return axes, cost
+
+
+def candidates(
+    kind: str,
+    dims: Sequence[int],
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    has_y: bool = False,
+    budget: int | None = None,
+    max_candidates: int = 48,
+) -> list[tuple[int, ...]]:
+    """Quantum-aligned power-of-two block tuples that fit the VMEM budget,
+    largest-block-first, capped at ``max_candidates`` (the heuristic pick is
+    always included so the sweep can only match or beat it)."""
+    budget = _at.vmem_budget(budget)
+    axes, cost = _quanta_and_cost(kind, storage, compute, has_y)
+    if len(axes) != len(dims):
+        raise ValueError(f"{kind} wants {len(axes)} dims, got {dims}")
+    per_dim = [_pow2_multiples(qt, d, cap)
+               for (qt, cap), d in zip(axes, dims)]
+    grid = [c for c in itertools.product(*per_dim) if cost(*c) <= budget]
+    # biggest A-block first: those amortize init/emit best and are the
+    # likeliest winners, so truncation keeps the interesting region
+    grid.sort(key=lambda c: (-np.prod(c), c))
+    heur = _heuristic(kind, dims, storage, compute, has_y, budget)
+    if heur in grid:
+        grid.remove(heur)
+    grid = [heur] + grid[: max(0, max_candidates - 1)]
+    return grid
+
+
+def _heuristic(kind, dims, storage, compute, has_y, budget):
+    kw = dict(storage=storage, compute=compute, budget=budget, table=False)
+    if kind == "tvc3":
+        return _at.pick_tvc3_blocks(*dims, has_y=has_y, **kw)
+    if kind == "tvc2":
+        return _at.pick_tvc2_blocks(*dims, has_y=has_y, **kw)
+    if kind == "tvc4":
+        return _at.pick_tvc4_blocks(*dims, has_y=has_y, **kw)
+    return _at.pick_tvc2_pair_blocks(*dims, has_y=has_y, **kw)
+
+
+def streamed_bytes(kind: str, dims: Sequence[int], storage) -> int:
+    """Model-predicted streamed bytes of one launch — the GB/s denominator
+    (and what the CI bandwidth gate checks measured cells against)."""
+    ssz = jnp.dtype(storage).itemsize
+    if kind == "tvc3":
+        u, nk, v = dims
+        return tvc_streamed_elems(u, nk, v) * ssz
+    if kind == "tvc2":
+        u, nk = dims
+        return tvc_streamed_elems(u, nk, 1) * ssz
+    u, n1, n2 = dims[:3]
+    v = dims[3] if kind == "tvc4" else 1
+    return tvc2_streamed_elems(u, n1, n2, v) * ssz
+
+
+def _operands(kind: str, dims, storage, seed: int = 0):
+    rng = np.random.default_rng(seed)
+
+    def r(shape):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32)
+                           ).astype(storage)
+
+    if kind == "tvc3":
+        u, nk, v = dims
+        return (r((u, nk, v)), r((nk,)))
+    if kind == "tvc2":
+        u, nk = dims
+        return (r((u, nk, 1)), r((nk,)))
+    u, n1, n2 = dims[:3]
+    v = dims[3] if kind == "tvc4" else 1
+    return (r((u, n1, n2, v)), r((n1,)), r((n2,)))
+
+
+def _launch(kind: str, operands, blocks, prec: Precision):
+    if kind == "tvc3":
+        a3, x = operands
+        bu, bk, bv = blocks
+        return ops.tvc_pallas(a3, x, prec=prec, bu=bu, bk=bk, bv=bv)
+    if kind == "tvc2":
+        a3, x = operands
+        bu, bk = blocks
+        return ops.tvc_pallas(a3, x, prec=prec, bu=bu, bk=bk)
+    a4, x1, x2 = operands
+    if kind == "tvc4":
+        bu, b1, b2, bv = blocks
+        return ops.tvc2_pallas(a4, x1, x2, prec=prec,
+                               bu=bu, b1=b1, b2=b2, bv=bv)
+    bu, b1, b2 = blocks
+    return ops.tvc2_pallas(a4, x1, x2, prec=prec, bu=bu, b1=b1, b2=b2)
+
+
+def time_blocks(kind: str, operands, blocks, prec: Precision, *,
+                reps: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds of one launch with the given blocks."""
+    for _ in range(warmup):
+        jax.block_until_ready(_launch(kind, operands, blocks, prec))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(_launch(kind, operands, blocks, prec))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def sweep_case(
+    kind: str,
+    dims: Sequence[int],
+    *,
+    prec: Precision | str = "f32",
+    budget: int | None = None,
+    max_candidates: int = 48,
+    reps: int = 3,
+    warmup: int = 1,
+) -> tuple[SweepResult, list[SweepResult]]:
+    """Measure every candidate for one (kind, dims, dtype) cell; returns
+    (winner, all results sorted fastest-first)."""
+    prec = get_policy(prec)
+    dims = tuple(int(d) for d in dims)
+    operands = _operands(kind, dims, prec.storage)
+    nbytes = streamed_bytes(kind, dims, prec.storage)
+    results = []
+    for blocks in candidates(kind, dims, storage=prec.storage,
+                             compute=prec.compute, budget=budget,
+                             max_candidates=max_candidates):
+        sec = time_blocks(kind, operands, blocks, prec,
+                          reps=reps, warmup=warmup)
+        results.append(SweepResult(kind, dims, tuple(blocks), sec,
+                                   nbytes / sec / 1e9))
+    results.sort(key=lambda r: r.seconds)
+    return results[0], results

@@ -19,9 +19,18 @@ no masking at all because out-of-bounds stores are discarded.  Nothing is
 ever ``jnp.pad``-ed, so streamed HBM traffic equals
 :func:`repro.core.tvc.tvc_bytes` exactly.
 
-Two kernel bodies cover every mode with one streaming pass each:
+Two kernel bodies cover every single mode with one streaming pass each:
   * v > 1  : blocks (bu, bk, bv), lanes on v          (modes k < d-1)
   * v == 1 : blocks (bu, bk),     lanes on n_k        (mode  k = d-1, matvec)
+
+and two more cover a *fused pair* of adjacent modes — one launch contracts
+both, never materializing the order-(d-1) intermediate (dHOPM_3's chain
+fusion, see :func:`repro.core.tvc.tvc2`):
+  * v > 1  : blocks (bu, b1, b2, bv), lanes on v      (pairs k2 < d-1)
+  * v == 1 : blocks (bu, b1, b2),     lanes on n_2    (pair (d-2, d-1) — the
+             chain-tail kernel ``_tvc2_pair_body``, which puts lanes on the
+             contiguous minor mode instead of wasting a 128-lane block on a
+             size-1 v)
 
 All bodies fold the BLAS-style update ``Y = alpha * (A x_k x) + beta * Y``
 into the emit epilogue: ``alpha``/``beta`` are trace-time constants and the
@@ -186,6 +195,53 @@ def _tvc4_body(x1_ref, x2_ref, a_ref, *rest, n1: int, b1: int, n2: int,
         _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta)
 
 
+def _tvc2_pair_body(x1_ref, x2_ref, a_ref, *rest, n1: int, b1: int, n2: int,
+                    b2: int, k1_blocks: int, k2_blocks: int, mask_1: bool,
+                    mask_2: bool, alpha: float, beta: float, has_y: bool):
+    """Fused-pair chain tail (v == 1): y[u] = sum_{a,b} A[u,a,b] x1[a] x2[b]
+    in one launch.  Lanes ride on n_2 (the contiguous minor mode), sublanes
+    on n_1; both reduction grid dims are sequential."""
+    yin_ref = rest[0] if has_y else None
+    y_ref, acc_ref = rest[-2], rest[-1]
+    kk1 = pl.program_id(1)
+    kk2 = pl.program_id(2)
+
+    @pl.when((kk1 == 0) & (kk2 == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _accum(m1: bool, m2: bool):
+        a = a_ref[...].astype(acc_ref.dtype)          # (bu, b1, b2)
+        x1 = x1_ref[...].astype(acc_ref.dtype)        # (1, b1)
+        x2 = x2_ref[...].astype(acc_ref.dtype)        # (1, b2)
+        if m1:
+            lim1 = n1 - kk1 * b1
+            a = jnp.where(_edge_mask((1, b1, 1), 1, lim1), a, 0)
+            x1 = jnp.where(_edge_mask((1, b1), 1, lim1), x1, 0)
+        if m2:
+            lim2 = n2 - kk2 * b2
+            a = jnp.where(_edge_mask((1, 1, b2), 2, lim2), a, 0)
+            x2 = jnp.where(_edge_mask((1, b2), 1, lim2), x2, 0)
+        w = x1[0][:, None] * x2[0][None, :]           # (b1, b2)
+        acc_ref[...] += jnp.sum(a * w[None], axis=(1, 2), keepdims=False)[:, None]
+
+    if mask_1 or mask_2:
+        conds = []
+        if mask_1:
+            conds.append(kk1 == k1_blocks - 1)
+        if mask_2:
+            conds.append(kk2 == k2_blocks - 1)
+        edge = conds[0] if len(conds) == 1 else conds[0] | conds[1]
+        pl.when(edge)(lambda: _accum(mask_1, mask_2))
+        pl.when(jnp.logical_not(edge))(lambda: _accum(False, False))
+    else:
+        _accum(False, False)
+
+    @pl.when((kk1 == k1_blocks - 1) & (kk2 == k2_blocks - 1))
+    def _emit():
+        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta)
+
+
 def _update_operands(y_in, alpha: float, beta: float, out_spec):
     """(extra_inputs, extra_specs, has_y) for the fused epilogue; the y input
     shares the output BlockSpec so partial edge blocks line up."""
@@ -283,6 +339,55 @@ def tvc4(
         interpret=interpret,
         **kwargs,
     )(x1.reshape(1, n1), x2.reshape(1, n2), a4, *extra_in)
+
+
+def tvc2_pair(
+    a3: jax.Array,
+    x1: jax.Array,
+    x2: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    bu: int = 8,
+    b1: int = 8,
+    b2: int = 128,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    y_in: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused-pair chain tail: Y[u] = alpha * sum_{a,b} A[u,a,b] x1[a] x2[b]
+    + beta * y_in[u] in ONE streaming pass — the pair (d-2, d-1) of dHOPM_3's
+    fused chains, where v == 1 and the generic 4-D kernel would burn a
+    128-lane block on a singleton dim.  Lanes on n_2, ragged-safe, no
+    padding copies."""
+    prec = get_policy(prec)
+    u, n1, n2 = a3.shape
+    grid = (_cdiv(u, bu), _cdiv(n1, b1), _cdiv(n2, b2))
+    out_spec = pl.BlockSpec((bu, 1), lambda i, a, b: (i, 0))
+    extra_in, extra_specs, has_y = _update_operands(y_in, alpha, beta, out_spec)
+    kernel = functools.partial(
+        _tvc2_pair_body, n1=n1, b1=b1, n2=n2, b2=b2,
+        k1_blocks=grid[1], k2_blocks=grid[2],
+        mask_1=n1 % b1 != 0, mask_2=n2 % b2 != 0,
+        alpha=alpha, beta=beta, has_y=has_y,
+    )
+    params = _compiler_params(1, 2)
+    kwargs = {"compiler_params": params} if (params and not interpret) else {}
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, b1), lambda i, a, b: (0, a)),
+            pl.BlockSpec((1, b2), lambda i, a, b: (0, b)),
+            pl.BlockSpec((bu, b1, b2), lambda i, a, b: (i, a, b)),
+            *extra_specs,
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((u, 1), prec.storage),
+        scratch_shapes=[pltpu.VMEM((bu, 1), prec.compute)],
+        interpret=interpret,
+        **kwargs,
+    )(x1.reshape(1, n1), x2.reshape(1, n2), a3, *extra_in)
 
 
 def tvc2(

@@ -83,6 +83,39 @@ def main():
                                rtol=2e-5, atol=2e-5)
     ok("dtvc_pallas_ragged")
 
+    # fused-pair local op on ragged shards: ONE Pallas launch per adjacent
+    # pair with the alpha/beta update in its epilogue, split tracked across
+    # the pair — both the generic (v > 1) and the chain-tail (v == 1) kernel
+    A_q = jnp.asarray(rng.normal(size=(8, 6, 10, 3)).astype(np.float32))
+    x1q = jnp.asarray(rng.normal(size=(6,)).astype(np.float32))
+    x2q = jnp.asarray(rng.normal(size=(10,)).astype(np.float32))
+    for k1 in (1, 2):
+        out_extents = tuple(n for i, n in enumerate(A_q.shape)
+                            if i not in (k1, k1 + 1))
+        y_q = jnp.asarray(rng.normal(size=out_extents).astype(np.float32))
+        xa = x1q if k1 == 1 else jnp.asarray(
+            rng.normal(size=(10,)).astype(np.float32))
+        xb = x2q if k1 == 1 else jnp.asarray(
+            rng.normal(size=(3,)).astype(np.float32))
+
+        def pair_body(a_loc, xa, xb, y_loc, k1=k1):
+            out, st = dtvc_mod.dtvc2_local(
+                a_loc, xa, k1, xb, dtvc_mod.ShardState(split=0),
+                impl="pallas", alpha=2.0, beta=-0.5, y=y_loc)
+            assert st.split == 0    # split below the pair is untouched
+            return out
+
+        fnp = jax.shard_map(pair_body, mesh=mesh,
+                            in_specs=(P("x"), P(), P(), P("x")),
+                            out_specs=P("x"), check_vma=False)
+        got = jax.jit(fnp)(A_q, xa, xb, y_q)
+        mid = np.tensordot(np.asarray(A_q), np.asarray(xa), axes=(k1, 0))
+        full = np.tensordot(mid, np.asarray(xb), axes=(k1, 0))
+        want = 2.0 * full - 0.5 * np.asarray(y_q)
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=2e-5, atol=2e-5)
+    ok("dtvc2_pair_local")
+
     # ---- mixed-precision collectives --------------------------------------
     def run_coll(fn, v):
         f = jax.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x"),

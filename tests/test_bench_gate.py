@@ -1,0 +1,220 @@
+"""Unit tests for the CI bandwidth-regression gate (benchmarks/check_bench)
+and the offline block sweep (repro.kernels.sweep + block_table round trip).
+The gate's job: recorded streamed bytes must never exceed the memory_model
+prediction, fused pairs must predict a real saving, and real-engine timings
+must stay inside the dispatch-overhead-aware traffic ceiling."""
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:  # `python -m pytest` from the repo root has it
+    sys.path.insert(0, str(ROOT))
+
+from benchmarks import check_bench  # noqa: E402
+from repro.core import memory_model as mm  # noqa: E402
+from repro.kernels import block_table, sweep  # noqa: E402
+
+
+def _cell(kind="tvc", shape=(7, 13, 129), mode=1, dtype="f32", us=100.0,
+          peak=10.0, **over):
+    itemsize = 4 if dtype == "f32" else 2
+    if kind == "tvc":
+        u = int(np.prod(shape[:mode]))
+        v = int(np.prod(shape[mode + 1:]))
+        nbytes = mm.tvc_streamed_elems(u, shape[mode], v) * itemsize
+        extra = {"pad_overhead": 1.5}
+    else:
+        u = int(np.prod(shape[:mode]))
+        v = int(np.prod(shape[mode + 2:]))
+        nbytes = mm.tvc2_streamed_elems(u, shape[mode], shape[mode + 1],
+                                        v) * itemsize
+        extra = {"fused_saving": mm.fused_pair_saving(
+            u, shape[mode], shape[mode + 1], v)}
+    gbs = nbytes / (us * 1e-6) / 1e9
+    cell = {
+        "kind": kind, "order": len(shape), "mode": mode, "dtype": dtype,
+        "layout": "ragged", "shape": list(shape), "blocks": [8, 8, 128],
+        "streamed_bytes": nbytes, "us": us, "gbs": gbs,
+        "pct_peak": gbs / peak * 100.0, **extra,
+    }
+    cell.update(over)
+    return cell
+
+
+def _payload(cells, engine="pallas-interpret", peak=10.0, schema=2):
+    return {
+        "meta": {"schema": schema, "engine": engine, "backend": "cpu",
+                 "smoke": True},
+        "stream_triad_gbs": peak,
+        "cells": cells,
+    }
+
+
+def _run(payload, ref=None, **kw):
+    kw.setdefault("acct_tol", 0.0)
+    kw.setdefault("dispatch_us", 200.0)
+    kw.setdefault("ratio_pallas", 2.0)
+    kw.setdefault("ratio_native", 32.0)
+    return check_bench.check(payload, ref, **kw)
+
+
+def test_gate_green_on_consistent_payload():
+    p = _payload([_cell(), _cell(kind="tvc2", mode=0)])
+    assert _run(p, ref=p) == []
+
+
+def test_gate_fails_on_inflated_streamed_bytes():
+    c = _cell()
+    c["streamed_bytes"] = int(c["streamed_bytes"] * 1.5)  # accounting drift
+    fails = _run(_payload([c]))
+    assert len(fails) == 1 and "exceeds model prediction" in fails[0]
+    # tolerance forgives it
+    assert _run(_payload([c]), acct_tol=0.6) == []
+
+
+def test_gate_fails_on_schema_mismatch_and_missing_keys():
+    p = _payload([_cell()])
+    ref = _payload([_cell()], schema=1)
+    assert any("schema" in f for f in _run(p, ref=ref))
+    c = _cell()
+    del c["streamed_bytes"]
+    assert any("missing keys" in f for f in _run(_payload([c])))
+    c2 = _cell(kind="tvc2", mode=0)
+    del c2["fused_saving"]
+    assert any("missing keys" in f for f in _run(_payload([c2])))
+    assert any("no cells" in f for f in _run(_payload([])))
+
+
+def test_gate_fails_when_fused_pair_saves_nothing():
+    c = _cell(kind="tvc2", mode=0, fused_saving=1.0)
+    assert any("no saving" in f for f in _run(_payload([c])))
+
+
+def test_gate_time_implied_traffic_is_engine_and_dispatch_aware():
+    # 100 us at 10 GB/s peak = 1 MB implied on a ~36 KB cell: a huge ratio
+    slow = _cell(us=100.0)
+    # interpret timings are skipped entirely
+    assert _run(_payload([slow], engine="pallas-interpret")) == []
+    # on a real engine the same cell fails ...
+    fails = _run(_payload([slow], engine="pallas"), dispatch_us=0.0)
+    assert any("time-implied" in f for f in fails)
+    # ... unless the dispatch allowance covers it (ROADMAP small-cell caveat)
+    assert _run(_payload([slow], engine="pallas"), dispatch_us=200.0) == []
+    # native-xla gets the loose catastrophic bound + low-precision factor
+    assert _run(_payload([slow], engine="native-xla"), dispatch_us=0.0,
+                ratio_native=64.0) == []
+
+
+def test_gate_runs_green_on_committed_trajectory():
+    path = ROOT / "BENCH_TVC.json"
+    payload = json.loads(path.read_text())
+    assert _run(payload, ref=payload) == []
+
+
+def test_gate_main_exit_codes(tmp_path):
+    good = _payload([_cell()])
+    f = tmp_path / "b.json"
+    f.write_text(json.dumps(good))
+    assert check_bench.main([str(f)]) == 0
+    bad = _payload([_cell(streamed_bytes=10**12)])
+    f.write_text(json.dumps(bad))
+    assert check_bench.main([str(f)]) == 1
+
+
+# ---- sweep + table round trip ---------------------------------------------
+
+def test_sweep_candidates_fit_budget_and_include_heuristic():
+    from repro.kernels import autotune
+    for kind, dims in [("tvc3", (16, 32, 200)), ("tvc2", (64, 300)),
+                       ("tvc2_pair", (16, 8, 200)), ("tvc4", (4, 8, 8, 130))]:
+        cands = sweep.candidates(kind, dims, max_candidates=12)
+        assert 1 <= len(cands) <= 12
+        assert len(set(cands)) == len(cands)
+        heur = sweep._heuristic(kind, dims, jnp.float32, jnp.float32, False,
+                                autotune.vmem_budget(None))
+        assert cands[0] == heur
+
+
+def test_sweep_case_times_every_candidate_and_ranks():
+    best, results = sweep.sweep_case("tvc2_pair", (8, 5, 9), reps=1,
+                                    max_candidates=4)
+    assert best is results[0]
+    assert all(r.seconds >= best.seconds for r in results)
+    assert best.gbs > 0
+    want = sweep.streamed_bytes("tvc2_pair", (8, 5, 9), jnp.float32)
+    assert want == mm.tvc2_streamed_elems(8, 5, 9, 1) * 4
+
+
+def test_block_table_save_load_roundtrip(tmp_path):
+    path = tmp_path / "table.json"
+    e = block_table.entry("tvc3", (16, 32, 200), (8, 32, 256), jnp.float32,
+                          gbs=3.0, order=3, mode_class="inner",
+                          backend="cpu")
+    block_table.save([e], path)
+    block_table.clear()
+    got = block_table.lookup("tvc3", (16, 32, 200), jnp.float32,
+                             backend="cpu", path=path)
+    assert got == (8, 32, 256)
+    # same buckets, different extents: still the same winner
+    assert block_table.lookup("tvc3", (9, 20, 129), jnp.float32,
+                              backend="cpu", path=path) == (8, 32, 256)
+    # other dtype / backend / kind: miss
+    assert block_table.lookup("tvc3", (16, 32, 200), jnp.bfloat16,
+                              backend="cpu", path=path) is None
+    assert block_table.lookup("tvc3", (16, 32, 200), jnp.float32,
+                              backend="tpu", path=path) is None
+    assert block_table.lookup("tvc2_pair", (16, 32, 200), jnp.float32,
+                              backend="cpu", path=path) is None
+    block_table.clear()
+
+
+def test_pinned_entry_outranks_file(tmp_path):
+    """pin()'s contract: a fresh pinned entry wins even when the file holds
+    a higher-gbs entry for the same cell; corrupt files raise, absent files
+    mean heuristic-only."""
+    path = tmp_path / "table.json"
+    filed = block_table.entry("tvc3", (16, 32, 200), (8, 32, 256),
+                              jnp.float32, gbs=500.0, backend="cpu")
+    block_table.save([filed], path)
+    block_table.clear()
+    block_table.pin(block_table.entry("tvc3", (16, 32, 200), (16, 32, 128),
+                                      jnp.float32, backend="cpu"))  # gbs 0.0
+    assert block_table.lookup("tvc3", (16, 32, 200), jnp.float32,
+                              backend="cpu", path=path) == (16, 32, 128)
+    block_table.clear()
+    assert block_table.lookup("tvc3", (16, 32, 200), jnp.float32,
+                              backend="cpu", path=path) == (8, 32, 256)
+    block_table.clear()
+    assert block_table.lookup("tvc3", (16, 32, 200), jnp.float32,
+                              backend="cpu",
+                              path=tmp_path / "absent.json") is None
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    block_table.clear()
+    with pytest.raises(ValueError, match="corrupt block table"):
+        block_table.load(bad)
+    block_table.clear()
+
+
+def test_committed_block_table_parses():
+    entries = block_table.load(block_table.DEFAULT_PATH)
+    assert entries, "checked-in block_table.json is empty"
+    for e in entries:
+        assert e["kind"] in block_table.KINDS
+        assert len(e["blocks"]) == len(e["dims"])
+        assert e["backend"]
+    block_table.clear()
+
+
+def test_smoke_writer_matches_gate_prediction():
+    """predicted_bytes agrees with the model for both kinds (the invariant
+    the smoke gate enforces end-to-end in CI)."""
+    c = _cell()
+    assert check_bench.predicted_bytes(c) == c["streamed_bytes"]
+    c2 = _cell(kind="tvc2", mode=0)
+    assert check_bench.predicted_bytes(c2) == c2["streamed_bytes"]

@@ -12,6 +12,7 @@ EXPECTED = [
     "dtvc_unassembled",
     "dtvc_eq2_alphabeta",
     "dtvc_pallas_ragged",
+    "dtvc2_pair_local",
     "mp_doubling_f32_exact",
     "mp_ring_f32_exact",
     "mp_ring_bf16_bounded",

@@ -117,7 +117,8 @@ def test_tvc_kernel_via_mode_view():
                                    rtol=1e-4, atol=1e-5)
 
 
-@pytest.mark.parametrize("n", [1, 127, 128, 1000, 8 * 128, 5000])
+@pytest.mark.parametrize("n", [1, 127, 128, 129, 1000, 8 * 128, 8 * 128 + 5,
+                               5000])
 @pytest.mark.parametrize("polname", ["f32", "bf16"])
 def test_axpby_kernel(n, polname):
     x, y = cast_policy([rand((n,)), rand((n,))], polname)

@@ -128,6 +128,22 @@ def test_axpby_ragged_shapes(shape):
         rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("n", [129, 257, 8 * 128 + 1, 37 * 128 - 1])
+def test_axpby_tiled_masked_tail(n):
+    """Satellite: lane-UNALIGNED sizes take the tiled (bt, 128) re-tile path
+    with the in-kernel masked tail — the old single-sublane (1, n) fallback
+    is gone for n > 128 — and every element, tail included, is exact."""
+    x, y = rand((n,)), rand((n,))
+    got = ops.axpby_pallas(2.0, x, 3.0, y)
+    np.testing.assert_allclose(
+        np.asarray(got), 2.0 * np.asarray(x) + 3.0 * np.asarray(y),
+        rtol=1e-5, atol=1e-5)
+    # and it is still copy-free
+    jaxpr = jax.make_jaxpr(lambda x, y: ops.axpby_pallas(2.0, x, 3.0, y))(x, y)
+    prims = _primitives(jaxpr.jaxpr, set())
+    assert "pad" not in prims, sorted(prims)
+
+
 # ---- autotuner -------------------------------------------------------------
 
 def test_sublane_quantum_is_dtype_aware():

@@ -1,0 +1,357 @@
+"""Fused-pair (tvc2) coverage: single-launch guarantee asserted on the
+jaxpr (incl. through dHOPM_3's fused chains), prime/odd ragged sweeps across
+orders 3-4 in f32 + bf16, the fused alpha/beta epilogue vs the two-launch
+reference, the no-pad guarantee, the fused-pair streamed-bytes accounting,
+and the sweep-table preference of the autotuner.  No optional deps."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import dhopm as dh
+from repro.core import memory_model as mm
+from repro.core.dtvc import ShardState, dtvc2_local
+from repro.core.tvc import tvc as core_tvc, tvc2 as core_tvc2, tvc2_bytes
+from repro.kernels import autotune, block_table, ops
+
+RNG = np.random.default_rng(11)
+
+
+def rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+def two_launch_ref(A, x1, k1, x2, alpha=1.0, beta=0.0, y=None):
+    """The unfused reference: two single-mode TVCs + explicit update."""
+    mid = core_tvc(A, x1, k1, impl="native")
+    out = core_tvc(mid, x2, k1, impl="native")
+    out = alpha * np.asarray(out, np.float32)
+    if beta:
+        out = out + beta * np.asarray(y, np.float32)
+    return out
+
+
+def _count_pallas(jaxpr) -> int:
+    """pallas_call eqns in a jaxpr, recursing into sub-jaxprs (pjit bodies,
+    shard_map bodies, kernel jaxprs)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for item in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(item, "jaxpr", item)
+                if hasattr(inner, "eqns"):
+                    n += _count_pallas(inner)
+    return n
+
+
+# ---- correctness: ragged sweeps, both pair kernels, both dtypes -----------
+
+PAIR_SHAPES = [
+    # (shape, k1): order 3-4, prime/odd extents, every pair position --
+    # v == 1 cases take the dedicated chain-tail kernel
+    ((7, 13, 129), 0),       # order-3 leading pair, v = 129
+    ((7, 13, 129), 1),       # order-3 tail pair, v = 1
+    ((3, 5, 7, 2), 0),       # order-4 leading, v = 14
+    ((3, 5, 7, 2), 1),       # order-4 middle, v = 2
+    ((3, 5, 7, 2), 2),       # order-4 tail, v = 1
+    ((1, 17, 257, 1), 1),    # u = 1 ragged pair ending in v = 1
+    ((37, 2, 3, 1), 1),      # singleton trailing dim, tail kernel
+]
+
+
+@pytest.mark.parametrize("shape,k1", PAIR_SHAPES)
+@pytest.mark.parametrize("polname", ["f32", "bf16"])
+def test_tvc2_ragged_sweep(shape, k1, polname):
+    A = rand(shape)
+    x1, x2 = rand((shape[k1],)), rand((shape[k1 + 1],))
+    if polname == "bf16":
+        A, x1, x2 = (t.astype(jnp.bfloat16) for t in (A, x1, x2))
+    got = core_tvc2(A, x1, k1, x2, k1 + 1, impl="pallas", prec=polname)
+    want = core_tvc2(A, x1, k1, x2, k1 + 1, impl="native", prec=polname)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    tol = 1e-4 if polname == "f32" else 6e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape,k1", [((7, 13, 129), 1), ((3, 5, 7, 2), 0),
+                                      ((3, 5, 7, 2), 2)])
+@pytest.mark.parametrize("polname", ["f32", "bf16"])
+def test_tvc2_epilogue_vs_two_launch(shape, k1, polname):
+    """Fused alpha/beta epilogue == two launches + explicit axpby."""
+    A = rand(shape)
+    x1, x2 = rand((shape[k1],)), rand((shape[k1 + 1],))
+    y_shape = tuple(s for i, s in enumerate(shape) if i not in (k1, k1 + 1))
+    y = rand(y_shape)
+    if polname == "bf16":
+        A, x1, x2, y = (t.astype(jnp.bfloat16) for t in (A, x1, x2, y))
+    got = core_tvc2(A, x1, k1, x2, k1 + 1, alpha=2.5, beta=-0.5, y=y,
+                    impl="pallas", prec=polname)
+    want = two_launch_ref(A.astype(jnp.float32), np.asarray(x1, np.float32),
+                          k1, np.asarray(x2, np.float32), alpha=2.5,
+                          beta=-0.5, y=np.asarray(y, np.float32))
+    tol = 1e-4 if polname == "f32" else 8e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               rtol=tol, atol=tol)
+
+
+def test_tvc2_traced_alpha_beta_under_jit():
+    """Runtime-computed alpha/beta must trace cleanly (no Python bool on a
+    tracer) and match the static-scalar result."""
+    A, x1, x2 = rand((3, 5, 7, 2)), rand((5,)), rand((7,))
+    y = rand((3, 2))
+
+    @jax.jit
+    def f(A, x1, x2, y, a, b):
+        return core_tvc2(A, x1, 1, x2, 2, alpha=a, beta=b, y=y,
+                         impl="pallas")
+
+    got = f(A, x1, x2, y, jnp.float32(2.5), jnp.float32(-0.5))
+    want = core_tvc2(A, x1, 1, x2, 2, alpha=2.5, beta=-0.5, y=y,
+                     impl="native")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+    y1 = rand((3, 7, 2))
+
+    @jax.jit
+    def g(A, x, y, a, b):
+        return core_tvc(A, x, 1, alpha=a, beta=b, y=y, impl="native")
+
+    got = g(A, x1, y1, jnp.float32(3.0), jnp.float32(0.5))
+    want = core_tvc(A, x1, 1, alpha=3.0, beta=0.5, y=y1, impl="native")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tvc2_beta_requires_y():
+    A = rand((3, 4, 5))
+    with pytest.raises(ValueError):
+        core_tvc2(A, rand((3,)), 0, rand((4,)), 1, beta=1.0, impl="pallas")
+    with pytest.raises(ValueError):
+        ops.tvc2_pallas(rand((2, 3, 4, 5)), rand((3,)), rand((4,)), beta=1.0)
+
+
+# ---- single-launch guarantee (jaxpr) --------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 5, 7, 3), (4, 5, 7, 1)])
+def test_tvc2_is_one_launch(shape):
+    """One fused pair == exactly ONE pallas_call, for both the generic and
+    the chain-tail (v == 1) kernels, with and without the epilogue."""
+    a, x1, x2 = rand(shape), rand((5,)), rand((7,))
+    jaxpr = jax.make_jaxpr(
+        lambda a, x1, x2: ops.tvc2_pallas(a, x1, x2))(a, x1, x2)
+    assert _count_pallas(jaxpr.jaxpr) == 1
+    y = rand((shape[0], shape[3]))
+    jaxpr = jax.make_jaxpr(
+        lambda a, x1, x2, y: ops.tvc2_pallas(a, x1, x2, y, alpha=2.0,
+                                             beta=-1.0))(a, x1, x2, y)
+    assert _count_pallas(jaxpr.jaxpr) == 1
+
+
+def _hopm3_launches(shape, fuse_pairs, **kw):
+    A = rand(shape)
+    xs = [rand((n,)) for n in shape]
+    jaxpr = jax.make_jaxpr(lambda A, *xs: dh.hopm3(
+        A, list(xs), sweeps=1, impl="pallas", fuse_pairs=fuse_pairs, **kw
+    )[0])(A, *xs)
+    return _count_pallas(jaxpr.jaxpr)
+
+
+def test_hopm3_fused_chain_is_one_launch_per_pair():
+    """d = 4 sweep: the fused schedule forms 2 adjacent pairs (one of them
+    the chain tail) out of 9 single contractions — so exactly 2 launches
+    disappear from the jaxpr."""
+    unfused = _hopm3_launches((5, 4, 6, 3), fuse_pairs=False)
+    fused = _hopm3_launches((5, 4, 6, 3), fuse_pairs=True)
+    assert unfused == 9, unfused
+    assert fused == unfused - 2, (fused, unfused)
+
+
+def test_dhopm3_fused_chain_is_one_launch_per_pair():
+    """Same assertion through the real dhopm3 entry point (shard_map body,
+    p = 1 mesh, s = 0 so both pairs of the d = 4 schedule fuse)."""
+    mesh = jax.make_mesh((1,), ("x",))
+    shape = (5, 4, 6, 3)
+    A = rand(shape)
+    xs = [rand((n,)) for n in shape]
+
+    def counts(fuse):
+        jaxpr = jax.make_jaxpr(lambda A, *xs: dh.dhopm3(
+            A, list(xs), mesh, "x", s=0, sweeps=1, impl="pallas",
+            fuse_pairs=fuse)[0])(A, *xs)
+        return _count_pallas(jaxpr.jaxpr)
+
+    unfused, fused = counts(False), counts(True)
+    assert unfused == 9 and fused == 7, (unfused, fused)
+
+
+def test_no_pad_in_pair_jaxprs():
+    """Zero-copy guarantee extends to both pair kernels + fused epilogue."""
+    def prims(fn, *args):
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        acc = set()
+
+        def walk(j):
+            for eqn in j.eqns:
+                acc.add(eqn.primitive.name)
+                for v in eqn.params.values():
+                    for item in (v if isinstance(v, (list, tuple)) else [v]):
+                        inner = getattr(item, "jaxpr", item)
+                        if hasattr(inner, "eqns"):
+                            walk(inner)
+        walk(jaxpr.jaxpr)
+        return acc
+
+    a, x1, x2 = rand((4, 5, 7, 3)), rand((5,)), rand((7,))
+    y = rand((4, 3))
+    p = prims(lambda a, x1, x2, y: ops.tvc2_pallas(a, x1, x2, y, alpha=2.0,
+                                                   beta=-0.5), a, x1, x2, y)
+    assert "pallas_call" in p and "pad" not in p, sorted(p)
+    a_t, y_t = rand((4, 5, 7, 1)), rand((4, 1))
+    p = prims(lambda a, x1, x2, y: ops.tvc2_pallas(a, x1, x2, y, alpha=2.0,
+                                                   beta=-0.5), a_t, x1, x2, y_t)
+    assert "pallas_call" in p and "pad" not in p, sorted(p)
+
+
+# ---- dtvc2_local: shard-level fused pair ----------------------------------
+
+def test_dtvc2_local_tracks_split_and_updates():
+    A = rand((6, 5, 7, 3))
+    x1, x2 = rand((5,)), rand((7,))
+    y = rand((6, 3))
+    out, st = dtvc2_local(A, x1, 1, x2, ShardState(split=3), impl="pallas",
+                          alpha=2.0, beta=-0.5, y=y)
+    want = two_launch_ref(A, x1, 1, x2, alpha=2.0, beta=-0.5, y=y)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4, atol=1e-4)
+    assert st == ShardState(split=1)        # split above the pair drops by 2
+
+
+def test_dtvc2_local_rejects_split_in_pair():
+    A = rand((6, 5, 7, 3))
+    for s in (1, 2):
+        with pytest.raises(ValueError):
+            dtvc2_local(A, rand((5,)), 1, rand((7,)), ShardState(split=s))
+
+
+# ---- memory model: fused-pair streamed accounting -------------------------
+
+def test_fused_pair_predicts_strictly_fewer_bytes():
+    """Acceptance: memory_model predicts strictly fewer streamed bytes for
+    the fused pair than the two-launch (2x dTVC) reference, everywhere."""
+    for (u, n1, n2, v) in [(1, 8, 8, 8), (7, 13, 129, 3), (322, 322, 322, 1),
+                           (1, 2, 2, 2)]:
+        fused = mm.tvc2_streamed_elems(u, n1, n2, v)
+        unfused = mm.tvc2_unfused_streamed_elems(u, n1, n2, v)
+        assert fused < unfused, (u, n1, n2, v)
+        # the gap is exactly the intermediate's write + read-back
+        assert unfused - fused == 2 * u * n2 * v
+        assert mm.fused_pair_saving(u, n1, n2, v) > 1.0
+
+
+def test_tvc2_bytes_matches_streamed_elems():
+    shape, k1 = (7, 13, 129), 1
+    u, n1, n2, v = 7, 13, 129, 1
+    assert tvc2_bytes(shape, k1, k1 + 1, 4) == \
+        mm.tvc2_streamed_elems(u, n1, n2, v) * 4
+    assert tvc2_bytes(shape, k1, k1 + 1, 4, beta=1.0) == \
+        mm.tvc2_streamed_elems(u, n1, n2, v, beta=1.0) * 4
+
+
+def test_simulated_fused_sweep_beats_hopm3():
+    for (n, d, p, s) in [(30, 3, 4, 0), (20, 4, 8, 3), (12, 5, 2, 0)]:
+        fused = mm.simulate_sweep(n, d, p, s, "hopm3_fused")
+        plain = mm.simulate_sweep(n, d, p, s, "hopm3")
+        assert fused < plain, (n, d, p, s)
+    # d = 3 with s = 2: every candidate pair either crosses the W boundary
+    # or contains the split mode -- nothing fuses, the model agrees exactly
+    assert mm.simulate_sweep(30, 3, 4, 2, "hopm3_fused") == \
+        mm.simulate_sweep(30, 3, 4, 2, "hopm3")
+
+
+# ---- autotuner: pair blocks + sweep-table preference ----------------------
+
+@pytest.mark.parametrize("storage", [jnp.float32, jnp.bfloat16])
+def test_tvc2_pair_blocks_quanta_and_budget(storage):
+    q = autotune.sublane_quantum(storage)
+    for (u, n1, n2) in [(7, 13, 129), (4096, 4096, 4096), (1, 1, 1)]:
+        bu, b1, b2 = autotune.pick_tvc2_pair_blocks(u, n1, n2,
+                                                    storage=storage)
+        assert bu % q == 0 and b1 % q == 0 and b2 % autotune.LANE == 0
+        ssz = jnp.dtype(storage).itemsize
+        assert 2 * bu * b1 * b2 * ssz <= autotune.vmem_budget()
+
+
+@pytest.fixture
+def clean_table():
+    block_table.clear()
+    yield
+    block_table.clear()
+
+
+def test_autotune_prefers_pinned_table_entry(clean_table):
+    """Acceptance: a sweep-table entry wins over the heuristic when one
+    exists for the (kind, dtype, backend, size-bucket) cell."""
+    dims = (40, 96, 640)
+    heur = autotune.pick_tvc3_blocks(*dims, table=False)
+    pinned = (16, 32, 256)
+    assert pinned != heur
+    block_table.pin(block_table.entry("tvc3", dims, pinned, jnp.float32,
+                                      gbs=99.0))
+    assert autotune.pick_tvc3_blocks(*dims) == pinned
+    # same size bucket, different exact (ragged) extents: still a hit,
+    # sanitized to the new view
+    assert autotune.pick_tvc3_blocks(33, 65, 513) == pinned
+    # different bucket: miss, heuristic
+    assert autotune.pick_tvc3_blocks(7, 13, 129) == \
+        autotune.pick_tvc3_blocks(7, 13, 129, table=False)
+    # higher-gbs entry for the same cell wins
+    block_table.pin(block_table.entry("tvc3", dims, (8, 96, 640),
+                                      jnp.float32, gbs=500.0))
+    assert autotune.pick_tvc3_blocks(*dims) == (8, 96, 640)
+
+
+def test_table_entry_is_sanitized_and_budget_checked(clean_table):
+    dims = (40, 96, 640)
+    # off-quantum junk blocks: rounded to quanta and clamped to the view
+    block_table.pin(block_table.entry("tvc3", dims, (3, 50, 1000),
+                                      jnp.float32, gbs=9.0))
+    bu, bk, bv = autotune.pick_tvc3_blocks(*dims)
+    assert bu % 8 == 0 and bk % 8 == 0 and bv % autotune.LANE == 0
+    assert bv <= 640 + autotune.LANE
+    # an entry that busts a small budget is rejected -> heuristic
+    got = autotune.pick_tvc3_blocks(*dims, budget=64 * 1024)
+    assert got == autotune.pick_tvc3_blocks(*dims, budget=64 * 1024,
+                                            table=False)
+
+
+def test_table_disable_env_and_backend_filter(clean_table, monkeypatch):
+    dims = (40, 96, 640)
+    block_table.pin(block_table.entry("tvc3", dims, (16, 32, 256),
+                                      jnp.float32, gbs=9.0))
+    monkeypatch.setenv("REPRO_TVC_DISABLE_TABLE", "1")
+    assert autotune.pick_tvc3_blocks(*dims) == \
+        autotune.pick_tvc3_blocks(*dims, table=False)
+    monkeypatch.delenv("REPRO_TVC_DISABLE_TABLE")
+    # entries measured on another backend never steer this one
+    block_table.clear()
+    block_table.pin(block_table.entry("tvc3", dims, (16, 32, 256),
+                                      jnp.float32, gbs=9.0, backend="tpu"))
+    if jax.default_backend() != "tpu":
+        assert autotune.pick_tvc3_blocks(*dims) == \
+            autotune.pick_tvc3_blocks(*dims, table=False)
+
+
+def test_pair_kernels_honour_table_blocks(clean_table):
+    """A pinned pair-kernel entry flows through ops dispatch and still
+    computes the right thing (blocks are a pure perf knob)."""
+    block_table.pin(block_table.entry("tvc2_pair", (4, 5, 9), (8, 8, 128),
+                                      jnp.float32, gbs=9.0))
+    a, x1, x2 = rand((4, 5, 9, 1)), rand((5,)), rand((9,))
+    got = ops.tvc2_pallas(a, x1, x2)
+    want = np.einsum("uabv,a,b->uv", np.asarray(a), np.asarray(x1),
+                     np.asarray(x2))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
