@@ -25,6 +25,21 @@ adjacent-mode pairs of every shape through the single-launch pair kernels
 two-launch / fused traffic ratio
 (:func:`repro.core.memory_model.fused_pair_saving`) that the CI bandwidth
 gate holds the accounting to.
+
+Schema 3 adds *batched* cells (``kind: "tvc_batched"``): B in {8, 64}
+stacked copies of a deliberately small tensor — the dispatch-dominated
+regime PR 3's calibration measured at 18-43x over the memory model — where
+each cell times BOTH the one-launch batched path (``us``) and the same B
+contractions as B separate launches inside one jit (``sep_us``), recording
+``batched_speedup = sep_us / us`` next to the
+:func:`repro.core.memory_model.launch_amortized_speedup` prediction.
+Batched cells always run a *timed* engine — compiled Pallas on TPU,
+elsewhere the bitwise-batchable ``mulsum`` engine that
+``train.grad_compress``'s buckets actually run (tagged ``native-xla``) —
+even under ``--smoke``, and each carries its own ``engine`` tag.  The CI
+gate requires the geometric mean of ``batched_speedup`` over the B >= 16
+cells to exceed 1: one batched launch must measurably beat B separate
+launches where the launch-amortization model says it must.
 """
 from __future__ import annotations
 
@@ -35,8 +50,14 @@ import time
 
 import jax
 
-from repro.core import tvc, tvc2, tvc2_bytes, tvc_bytes
-from repro.core.memory_model import fused_pair_saving, pad_overhead
+import jax.numpy as jnp
+
+from repro.core import tvc, tvc2, tvc2_bytes, tvc_batched, tvc_bytes
+from repro.core.memory_model import (
+    fused_pair_saving,
+    launch_amortized_speedup,
+    pad_overhead,
+)
 from repro.core.mixed_precision import get_policy
 from repro.core.tvc import mode_uv
 from repro.kernels import autotune
@@ -57,6 +78,15 @@ SMOKE_SHAPES = {
     "ragged": {3: (5, 7, 129), 4: (3, 5, 7, 9)},
 }
 DTYPES = ("f32", "bf16")
+
+# batched cells: deliberately SMALL tensors (the dispatch-dominated regime
+# batching exists for), stacked B deep; modes cover both batched kernel
+# bodies (v > 1 and the matvec tail)
+BATCH_SHAPES = {"aligned": (16, 16, 16), "ragged": (13, 17, 11)}
+SMOKE_BATCH_SHAPES = {"aligned": (8, 8, 16), "ragged": (5, 7, 9)}
+BATCH_SIZES = (8, 64)
+BATCH_MODES = (1, 2)
+SMOKE_BATCH_DTYPES = ("f32",)
 
 
 def _engine(smoke: bool) -> str:
@@ -170,9 +200,77 @@ def run(smoke: bool = False, out_path=None):
                         f"tvck2_d{d}p{k1}_{polname}_{layout}", t * 1e6,
                         f"{gbs:.2f}GB/s={gbs/peak*100:.0f}%peak"))
 
+    # batched cells: small tensors stacked B deep — ONE batched launch vs
+    # the same B contractions as B separate launches inside one jit (the
+    # per-leaf-loop schedule the batched kernels replace).  These cells
+    # ALWAYS run a timed engine (compiled Pallas on TPU; elsewhere the
+    # bitwise-batchable mulsum engine grad_compress's buckets actually run,
+    # tagged native-xla), interpret mode included — the speedup is a
+    # same-engine relative measure and interpreter grid-step overhead would
+    # drown it.  Each cell carries its own ``engine`` tag.
+    batch_dtypes = SMOKE_BATCH_DTYPES if smoke else DTYPES
+    batch_shapes = SMOKE_BATCH_SHAPES if smoke else BATCH_SHAPES
+    from .check_bench import DEFAULT_DISPATCH_US
+    on_tpu = jax.default_backend() == "tpu"
+    impl_b = "pallas" if on_tpu else "mulsum"
+    engine_b = "pallas" if on_tpu else "native-xla"
+    dispatch_us = DEFAULT_DISPATCH_US
+    for layout, shape in batch_shapes.items():
+        d = len(shape)
+        for polname in batch_dtypes:
+            prec = get_policy(polname)
+            itemsize = prec.storage_bytes
+            for B in BATCH_SIZES:
+                Ab = rand_tensor((B,) + shape, dtype=prec.storage, seed=d)
+                for k in BATCH_MODES:
+                    xb = rand_tensor((B, shape[k]), dtype=prec.storage,
+                                     seed=300 + k)
+                    fn_b = jax.jit(lambda A, x, k=k: tvc_batched(
+                        A, x, k, impl=impl_b, prec=prec))
+                    fn_sep = jax.jit(lambda A, x, k=k, B=B: jnp.stack([
+                        tvc(A[i], x[i], k, impl=impl_b, prec=prec)
+                        for i in range(B)]))
+                    t = time_fn(fn_b, Ab, xb, reps=3 if smoke else 5)
+                    t_sep = time_fn(fn_sep, Ab, xb, reps=3 if smoke else 5,
+                                    warmup=1)
+                    one = tvc_bytes(shape, k, itemsize)
+                    nbytes = B * one
+                    gbs = nbytes / t / 1e9
+                    u, nk, v = mode_uv(shape, k)
+                    if v == 1:
+                        blocks = autotune.pick_tvc2_batched_blocks(
+                            B, u, nk, storage=prec.storage,
+                            compute=prec.compute) + (1,)
+                    else:
+                        blocks = autotune.pick_tvc3_batched_blocks(
+                            B, u, nk, v, storage=prec.storage,
+                            compute=prec.compute)
+                    cells.append({
+                        "kind": "tvc_batched",
+                        "order": d,
+                        "mode": k,
+                        "dtype": polname,
+                        "layout": layout,
+                        "shape": list(shape),
+                        "engine": engine_b,
+                        "batch": B,
+                        "blocks": list(blocks),
+                        "streamed_bytes": nbytes,
+                        "us": t * 1e6,
+                        "sep_us": t_sep * 1e6,
+                        "gbs": gbs,
+                        "pct_peak": gbs / peak * 100.0,
+                        "batched_speedup": t_sep / t,
+                        "predicted_speedup": launch_amortized_speedup(
+                            B, one, peak, dispatch_us),
+                    })
+                    lines.append(emit(
+                        f"tvckB{B}_d{d}m{k}_{polname}_{layout}", t * 1e6,
+                        f"{gbs:.2f}GB/s;x{t_sep / t:.1f}vs{B}sep"))
+
     payload = {
         "meta": {
-            "schema": 2,
+            "schema": 3,
             "engine": engine,
             "backend": jax.default_backend(),
             "jax": jax.__version__,

@@ -12,20 +12,30 @@ Three checks, strictest first:
 
 2. **Streamed-bytes accounting** — each cell's recorded ``streamed_bytes``
    must not exceed the :mod:`repro.core.memory_model` prediction
-   (``tvc_streamed_elems`` / ``tvc2_streamed_elems`` x itemsize) by more
-   than ``--acct-tol``.  The bench records bytes via ``core.tvc.tvc_bytes``
-   and the model predicts them independently, so this cross-validates the
-   two accountings on *every* engine — including interpret-mode smoke runs
-   whose wall times mean nothing.  Fused-pair cells must additionally
-   predict strictly fewer streamed bytes than the two-launch reference
-   (``fused_saving > 1`` — the whole point of the fused kernel).
+   (``tvc_streamed_elems`` / ``tvc2_streamed_elems`` /
+   ``tvc_batched_streamed_elems`` x itemsize) by more than ``--acct-tol``.
+   The bench records bytes via ``core.tvc.tvc_bytes`` and the model
+   predicts them independently, so this cross-validates the two accountings
+   on *every* engine — including interpret-mode smoke runs whose wall times
+   mean nothing.  Fused-pair cells must additionally predict strictly fewer
+   streamed bytes than the two-launch reference (``fused_saving > 1`` — the
+   whole point of the fused kernel).  Batched cells must beat their own B
+   separate launches where it matters: the *geometric mean* of
+   ``batched_speedup`` over the ``tvc_batched`` cells with
+   ``batch >= --speedup-min-batch`` (default 16, i.e. the B = 64 cells)
+   must exceed 1 — a same-engine relative measure (batched cells always run
+   a timed engine and carry their own ``engine`` tag), aggregated so one
+   timer-noise cell cannot flip CI while a real regression still fails.
 
 3. **Time-implied traffic** (engines with real timings only) — the bytes a
    cell's wall time would stream at the measured STREAM peak,
    ``us * peak``, minus a per-launch dispatch allowance
    (``--dispatch-us * peak`` — the ROADMAP caveat: small-tensor cells are
    dispatch-dominated and must not be judged as bandwidth), must not exceed
-   ``prediction * ratio``.  The ratio is per engine: ``--ratio-pallas``
+   ``prediction * ratio``.  Batched cells get exactly ONE dispatch
+   allowance for the whole batch — the per-launch ceiling of the unbatched
+   equivalent would grant B of them, so a batched cell that needs more than
+   one is slower than B separate launches and fails.  The ratio is per engine: ``--ratio-pallas``
    (default 2.0: at least 50% of STREAM, the paper's native-algorithm
    floor) on TPU, ``--ratio-native`` (default 32.0: the XLA einsum proxy is
    not the kernel — this only catches catastrophic regressions; the
@@ -46,15 +56,31 @@ import math
 import pathlib
 import sys
 
-from repro.core.memory_model import tvc2_streamed_elems, tvc_streamed_elems
+from repro.core.memory_model import (
+    tvc2_streamed_elems,
+    tvc_batched_streamed_elems,
+    tvc_streamed_elems,
+)
 from repro.core.mixed_precision import get_policy
 
 CORE_KEYS = frozenset({
     "kind", "order", "mode", "dtype", "layout", "shape", "blocks",
     "streamed_bytes", "us", "gbs", "pct_peak",
 })
-KIND_KEYS = {"tvc": "pad_overhead", "tvc2": "fused_saving"}
+KIND_KEYS = {
+    "tvc": ("pad_overhead",),
+    "tvc2": ("fused_saving",),
+    # "engine" is required so a batched cell can never silently inherit an
+    # untimed run-level engine and dodge the time-implied ceiling
+    "tvc_batched": ("engine", "batch", "sep_us", "batched_speedup",
+                    "predicted_speedup"),
+}
 TIMED_ENGINES = ("pallas", "native-xla")
+
+#: per-launch dispatch allowance shared by the gate's --dispatch-us default
+#: and the bench's recorded ``predicted_speedup`` (one constant so the two
+#: accountings can never drift apart)
+DEFAULT_DISPATCH_US = 200.0
 
 
 def predicted_bytes(cell: dict) -> int:
@@ -69,6 +95,9 @@ def predicted_bytes(cell: dict) -> int:
         return tvc2_streamed_elems(u, n1, n2, v) * itemsize
     u = math.prod(shape[:k])
     v = math.prod(shape[k + 1:])
+    if cell["kind"] == "tvc_batched":
+        return tvc_batched_streamed_elems(cell["batch"], u, shape[k], v) \
+            * itemsize
     return tvc_streamed_elems(u, shape[k], v) * itemsize
 
 
@@ -79,7 +108,8 @@ def _cell_name(c: dict) -> str:
 
 def check(payload: dict, ref: dict | None, *, acct_tol: float,
           dispatch_us: float, ratio_pallas: float,
-          ratio_native: float, lowprec_factor: float = 3.0) -> list[str]:
+          ratio_native: float, lowprec_factor: float = 3.0,
+          speedup_min_batch: int = 16) -> list[str]:
     """All failure messages for one trajectory payload ([] = green)."""
     fails: list[str] = []
     meta = payload.get("meta", {})
@@ -99,15 +129,14 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
         fails.append(f"stream_triad_gbs not positive: {peak!r}")
     for c in cells:
         missing = CORE_KEYS - set(c)
-        kind_key = KIND_KEYS.get(c.get("kind"))
-        if kind_key and kind_key not in c:
-            missing = missing | {kind_key}
+        for kind_key in KIND_KEYS.get(c.get("kind"), ()):
+            if kind_key not in c:
+                missing = missing | {kind_key}
         if missing:
             fails.append(f"{_cell_name(c)}: missing keys {sorted(missing)}")
     if fails:
         return fails  # later checks would only cascade
 
-    ratio = {"pallas": ratio_pallas, "native-xla": ratio_native}.get(engine)
     for c in cells:
         name = _cell_name(c)
         pred = predicted_bytes(c)
@@ -123,20 +152,49 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                 f"(fused_saving={c['fused_saving']})")
         if c["kind"] == "tvc" and c["pad_overhead"] < 1.0:
             fails.append(f"{name}: pad_overhead {c['pad_overhead']} < 1")
+        if c["kind"] == "tvc_batched":
+            if not c["predicted_speedup"] > 1.0:
+                fails.append(
+                    f"{name}: launch-amortization model predicts no win "
+                    f"(predicted_speedup={c['predicted_speedup']})")
 
         # -- 3. time-implied traffic ---------------------------------------
-        if ratio is not None:
-            cell_ratio = ratio
-            if engine == "native-xla" and c["dtype"] not in ("f32",):
+        # batched cells always run a timed engine and carry their own tag;
+        # everything else inherits the run-level engine
+        cell_engine = c.get("engine", engine)
+        cell_base = {"pallas": ratio_pallas,
+                     "native-xla": ratio_native}.get(cell_engine)
+        if cell_base is not None:
+            cell_ratio = cell_base
+            if cell_engine == "native-xla" and c["dtype"] not in ("f32",):
                 cell_ratio *= lowprec_factor   # CPU XLA emulates bf16/f16
             implied = c["us"] * 1e-6 * peak * 1e9       # bytes at STREAM peak
+            # ONE dispatch allowance per cell — for a batched cell that is
+            # the whole point: the unbatched equivalent of its B launches
+            # would be granted B allowances, so fitting under one proves
+            # the batch amortized the other B-1 away.
             allowance = dispatch_us * 1e-6 * peak * 1e9
             if implied - allowance > pred * cell_ratio:
                 fails.append(
                     f"{name}: time-implied traffic {implied / 1e6:.2f} MB "
                     f"(us={c['us']:.0f}, dispatch allowance "
                     f"{allowance / 1e6:.2f} MB) exceeds {cell_ratio}x the "
-                    f"predicted {pred / 1e6:.2f} MB [{engine}]")
+                    f"predicted {pred / 1e6:.2f} MB [{cell_engine}]")
+
+    # -- batched speedup: geometric mean over the large-B cells -------------
+    # (one batched launch vs B separate ones, same engine per cell;
+    # aggregated so a single timer-noise cell cannot flip CI)
+    sp = [c["batched_speedup"] for c in cells
+          if c.get("kind") == "tvc_batched"
+          and c.get("batch", 0) >= speedup_min_batch]
+    if sp:
+        geomean = math.exp(sum(math.log(max(s, 1e-9)) for s in sp) / len(sp))
+        if not geomean > 1.0:
+            fails.append(
+                f"batched cells (batch >= {speedup_min_batch}): geomean "
+                f"batched_speedup {geomean:.2f} <= 1 over {len(sp)} cells "
+                f"({', '.join(f'{s:.2f}' for s in sp)}) — one batched "
+                f"launch is not beating B separate launches")
     return fails
 
 
@@ -149,7 +207,7 @@ def main(argv=None) -> int:
     ap.add_argument("--acct-tol", type=float, default=0.0,
                     help="allowed fractional excess of recorded over "
                          "predicted streamed bytes (default: exact)")
-    ap.add_argument("--dispatch-us", type=float, default=200.0,
+    ap.add_argument("--dispatch-us", type=float, default=DEFAULT_DISPATCH_US,
                     help="per-launch dispatch-overhead allowance for the "
                          "time-implied check (ROADMAP small-cell caveat)")
     ap.add_argument("--ratio-pallas", type=float, default=2.0,
@@ -161,6 +219,10 @@ def main(argv=None) -> int:
     ap.add_argument("--lowprec-factor", type=float, default=3.0,
                     help="extra native-xla headroom for non-f32 cells "
                          "(CPU XLA emulates bf16/f16)")
+    ap.add_argument("--speedup-min-batch", type=int, default=16,
+                    help="gate batched_speedup > 1 only on batched cells "
+                         "with at least this batch size (small-B cells are "
+                         "noise-prone; B = 64 is the acceptance cell)")
     args = ap.parse_args(argv)
 
     payload = json.loads(pathlib.Path(args.bench).read_text())
@@ -170,7 +232,8 @@ def main(argv=None) -> int:
                   dispatch_us=args.dispatch_us,
                   ratio_pallas=args.ratio_pallas,
                   ratio_native=args.ratio_native,
-                  lowprec_factor=args.lowprec_factor)
+                  lowprec_factor=args.lowprec_factor,
+                  speedup_min_batch=args.speedup_min_batch)
     engine = payload.get("meta", {}).get("engine")
     n = len(payload.get("cells", []))
     if fails:

@@ -28,11 +28,17 @@ import jax
 
 from repro.core.mixed_precision import get_policy
 from repro.kernels import block_table, sweep
-from .bench_tvc_kernel import SHAPES, SMOKE_SHAPES
+from .bench_tvc_kernel import (
+    BATCH_SHAPES,
+    BATCH_SIZES,
+    SHAPES,
+    SMOKE_BATCH_SHAPES,
+    SMOKE_SHAPES,
+)
 from .common import emit
 
 
-def grid_cases(shapes_by_layout, dtypes):
+def grid_cases(shapes_by_layout, dtypes, batch_shapes=None):
     """(kind, dims, order, mode_class, dtype) cells for the sweep."""
     cases = []
     for layout, by_order in shapes_by_layout.items():
@@ -60,6 +66,26 @@ def grid_cases(shapes_by_layout, dtypes):
                     else:
                         cases.append(("tvc4", (u, n1, n2, v), d, "pair",
                                       polname))
+    # batched kinds: the bench's small-tensor batch cells, every kernel body
+    # (single inner + matvec tail, fused leading pair + pair tail)
+    for shape in (batch_shapes or {}).values():
+        d = len(shape)
+        for polname in dtypes:
+            for B in BATCH_SIZES:
+                u1, n1, v1 = math.prod(shape[:1]), shape[1], \
+                    math.prod(shape[2:])
+                cases.append(("tvc3_batched", (B, u1, n1, v1), d,
+                              "batched_inner", polname))
+                cases.append(("tvc2_batched",
+                              (B, math.prod(shape[:-1]), shape[-1]), d,
+                              "batched_matvec", polname))
+                cases.append(("tvc4_batched",
+                              (B, 1, shape[0], shape[1],
+                               math.prod(shape[2:])), d, "batched_pair",
+                              polname))
+                cases.append(("tvc2_pair_batched",
+                              (B, math.prod(shape[:-2]), shape[-2],
+                               shape[-1]), d, "batched_pair_tail", polname))
     # dedupe identical (kind, dims, dtype) cells across layouts/orders
     seen, out = set(), []
     for c in cases:
@@ -73,6 +99,7 @@ def grid_cases(shapes_by_layout, dtypes):
 def run(smoke: bool = False, dtypes=("f32", "bf16"), max_candidates: int = 48,
         out_path=None, dry_run: bool = False, reps: int = 3):
     shapes = SMOKE_SHAPES if smoke else SHAPES
+    batch_shapes = SMOKE_BATCH_SHAPES if smoke else BATCH_SHAPES
     if smoke:
         max_candidates = min(max_candidates, 6)
         reps = 1
@@ -80,7 +107,8 @@ def run(smoke: bool = False, dtypes=("f32", "bf16"), max_candidates: int = 48,
     backend = jax.default_backend()
     lines = []
     winners = []
-    for kind, dims, order, mode_class, polname in grid_cases(shapes, dtypes):
+    for kind, dims, order, mode_class, polname in grid_cases(
+            shapes, dtypes, batch_shapes):
         prec = get_policy(polname)
         best, results = sweep.sweep_case(
             kind, dims, prec=prec, max_candidates=max_candidates, reps=reps)

@@ -3,5 +3,8 @@ TVC (dTVC), the three-buffer distributed higher-order power method (dHOPM_3),
 the streamed-memory model, 1-D optimal splitting, and mixed precision."""
 from .mixed_precision import F32, BF16_F32, F16_F32, Precision, get_policy  # noqa: F401
 from .splitting import SplitPlan, best_split_dim, optimal_division, plan_split  # noqa: F401
-from .tvc import tvc, tvc2, tvc2_bytes, tvc_bytes, tvc_chain, tvc_shape, mode_uv  # noqa: F401
+from .tvc import (  # noqa: F401
+    tvc, tvc2, tvc2_bytes, tvc_bytes, tvc_chain, tvc_shape, mode_uv,
+    tvc_batched, tvc2_batched,
+)
 from . import memory_model  # noqa: F401

@@ -30,9 +30,11 @@ from jax.sharding import PartitionSpec as P
 from repro.dist import collectives as coll
 from .dtvc import ShardState, dtvc2_local, dtvc_local
 from .mixed_precision import F32, Precision, get_policy
+from .tvc import tvc2_batched, tvc_batched
 
 __all__ = [
-    "hopm_classic", "hopm3", "dhopm3", "hopm3_partial", "rank1", "rank1_residual",
+    "hopm_classic", "hopm3", "dhopm3", "hopm3_partial", "hopm3_batched",
+    "rank1", "rank1_residual",
 ]
 
 _EPS = 1e-30
@@ -41,6 +43,14 @@ _EPS = 1e-30
 def _norm(v, compute):
     v = v.astype(compute)
     return jnp.sqrt(jnp.sum(v * v) + _EPS)
+
+
+def _norm_batched(v, compute):
+    """Per-batch-row norms of a (B, n) stack — same summation order per row
+    as :func:`_norm` on each row alone (the bucketed/per-leaf bitwise
+    oracle depends on that)."""
+    v = v.astype(compute)
+    return jnp.sqrt(jnp.sum(v * v, axis=1) + _EPS)
 
 
 def _hopm_sweeps(
@@ -65,7 +75,10 @@ def _hopm_sweeps(
     (which needs the Eq. 2 slice path).  With ``impl="pallas"`` both the
     single and the fused contractions run through the zero-copy ragged
     kernels, so the ever-shrinking (and never block-multiple) chain
-    intermediates stream without padding copies."""
+    intermediates stream without padding copies.
+
+    NOTE: :func:`_hopm_sweeps_batched` mirrors this schedule for stacked
+    batches — keep the two walkers' predicates in lockstep."""
     d = A_loc.ndim
     xs = list(xs)
     st0 = ShardState(split=split, partial=partial_in)
@@ -160,6 +173,130 @@ def hopm3_partial(A_partial, xs, *, axis_name: str, sweeps: int = 1,
         A_partial, xs, sweeps=sweeps, split=None, partial_in=True,
         axis_name=axis_name, impl=impl, prec=prec, three_buffer=three_buffer,
         fuse_pairs=fuse_pairs,
+    )
+
+
+def _hopm_sweeps_batched(
+    A_b: jax.Array,
+    xs: Sequence[jax.Array],
+    *,
+    sweeps: int,
+    partial_in: bool,
+    axis_name: str | None,
+    impl: str,
+    prec: Precision,
+    fuse_pairs: bool = False,
+):
+    """The three-buffer chain walker over a stacked batch ``A_b[B, n_0..]``
+    of independent same-shape tensors: identical schedule to
+    :func:`_hopm_sweeps` (three buffers, W prefix cache, optional fused
+    pairs), but every contraction is ONE *batched* TVC — with
+    ``impl="pallas"`` one kernel launch per chain position covers all B
+    tensors, so a sweep's launch count is independent of B.
+
+    No 1-D split support (batched consumers stack full-shape leaves); the
+    Eq. 2 *partial-summand* mode is supported — ``partial_in=True`` runs the
+    delayed reduction as one stacked ``mp_allreduce`` per external
+    iteration, dispatched on the **per-leaf** vector size so the schedule
+    (and its rounding behaviour) matches B separate per-leaf reductions.
+    Returns (xs[B, n_j] list, lam[B]).
+
+    NOTE: the chain schedule below (three buffers, W capture, fused-pair
+    gating) deliberately mirrors :func:`_hopm_sweeps` minus the split
+    bookkeeping; a change to either walker's schedule predicates must be
+    mirrored in the other — ``test_hopm3_batched_matches_vmap_hopm3`` and
+    the grad_compress bitwise regressions are the drift canaries."""
+    d = A_b.ndim - 1
+    xs = list(xs)
+    A_modes = tuple(range(d))
+    B = A_b.shape[0]
+    lam = jnp.ones((B,), prec.compute)
+    W = None  # (array, modes): A_b contracted along 0..j-1
+
+    p = None
+    if partial_in:
+        if axis_name is None:
+            raise ValueError("partial summands need a mesh axis to reduce")
+        p = coll._axis_size(axis_name)
+
+    for _ in range(sweeps):
+        W = None
+        for j in range(d):
+            if j >= 2 and W is not None:
+                cur, modes = W
+                chain = [j - 1] + list(range(j + 1, d))
+            else:
+                cur, modes = A_b, A_modes
+                chain = [m for m in range(d) if m != j]
+
+            new_W = None
+            idx = 0
+            while idx < len(chain):
+                m = chain[idx]
+                nxt = chain[idx + 1] if idx + 1 < len(chain) else None
+                k_local = modes.index(m)
+                do_fuse = fuse_pairs and nxt == m + 1
+                if do_fuse:
+                    done_after_first = (set(range(d)) - set(modes)) | {m}
+                    do_fuse = not (j >= 1 and done_after_first
+                                   == set(range(j)))
+                if do_fuse:
+                    cur = tvc2_batched(cur, xs[m], k_local, xs[nxt],
+                                       k_local + 1, impl=impl, prec=prec)
+                    modes = tuple(mm for mm in modes if mm not in (m, nxt))
+                    idx += 2
+                else:
+                    cur = tvc_batched(cur, xs[m], k_local, impl=impl,
+                                      prec=prec)
+                    modes = tuple(mm for mm in modes if mm != m)
+                    idx += 1
+                if j >= 1 and set(range(d)) - set(modes) == set(range(j)):
+                    new_W = (cur, modes)
+            W = new_W if new_W is not None else W
+
+            # Delayed reduction: ONE stacked collective for the whole batch
+            # (algo picked from the per-leaf size n_j, not B * n_j, so the
+            # wire schedule matches B separate per-leaf reductions).
+            vec = cur  # (B, n_j)
+            if partial_in:
+                vec = coll.mp_allreduce(
+                    vec, axis_name, prec,
+                    algo=("auto" if jnp.dtype(prec.storage)
+                          == jnp.dtype(prec.compute)
+                          else coll.allreduce_algo(vec.shape[-1], p)))
+            lam = _norm_batched(vec, prec.compute)
+            xs[j] = (vec.astype(prec.compute)
+                     / lam[:, None]).astype(prec.storage)
+    return xs, lam
+
+
+def hopm3_batched(
+    A_b: jax.Array,
+    xs: Sequence[jax.Array],
+    *,
+    sweeps: int = 1,
+    impl: str = "native",
+    prec: Precision | str = F32,
+    fuse_pairs: bool = False,
+    partial: bool = False,
+    axis_name: str | None = None,
+):
+    """dHOPM_3 over a *batch* of B stacked order-d tensors
+    ``A_b[B, n_0..n_{d-1}]`` with per-batch factor vectors ``xs[j][B, n_j]``:
+    the three-buffer schedule runs all B power iterations in lockstep, one
+    (batched) contraction launch per chain position — launch count per sweep
+    is independent of B, which is what amortizes dispatch overhead for
+    many-small-tensor consumers (``train.grad_compress`` buckets, per-request
+    rank-1 serving).  Iterates match ``jax.vmap``'d :func:`hopm3` exactly.
+
+    ``partial=True`` is the stacked Eq. 2 setting (every rank holds one
+    addend of each tensor in the batch): one ``mp_allreduce`` of the stacked
+    ``(B, n_j)`` vector per external iteration, inside a shard_map region
+    over ``axis_name``.  Returns (xs, lam[B])."""
+    prec = get_policy(prec)
+    return _hopm_sweeps_batched(
+        A_b, xs, sweeps=sweeps, partial_in=partial, axis_name=axis_name,
+        impl=impl, prec=prec, fuse_pairs=fuse_pairs,
     )
 
 

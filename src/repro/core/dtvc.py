@@ -142,8 +142,9 @@ def dtvc2_local(
             f"extents {A_loc.shape[k:k + 2]}"
         )
     # looped/unfolded have no fused analogue (they are per-mode BLAS-2
-    # schedules); the fused pass is native einsum or the Pallas pair kernel
-    f_impl = impl if impl in ("native", "pallas") else "native"
+    # schedules); the fused pass is native einsum, its bitwise-batchable
+    # mulsum twin, or the Pallas pair kernel
+    f_impl = impl if impl in ("native", "mulsum", "pallas") else "native"
     out = tvc2(A_loc, x1, k, x2, k + 1, alpha=alpha, beta=beta, y=y,
                impl=f_impl, prec=prec)
     return out, new_state

@@ -23,6 +23,8 @@ __all__ = [
     "eta_inv", "ring_allreduce_touched", "simulate_sweep", "H_inv",
     "tvc_streamed_elems", "tvc_padded_copy_elems", "pad_overhead",
     "tvc2_streamed_elems", "tvc2_unfused_streamed_elems", "fused_pair_saving",
+    "tvc_batched_streamed_elems", "tvc2_batched_streamed_elems",
+    "launch_amortized_speedup",
 ]
 
 
@@ -72,6 +74,46 @@ def fused_pair_saving(u: int, n1: int, n2: int, v: int,
     never materializes the intermediate)."""
     return (tvc2_unfused_streamed_elems(u, n1, n2, v, beta)
             / tvc2_streamed_elems(u, n1, n2, v, beta))
+
+
+def tvc_batched_streamed_elems(b: int, u: int, nk: int, v: int,
+                               beta: float = 0.0) -> int:
+    """Elements streamed by ONE *batched* TVC launch over B stacked
+    same-shape contractions with per-batch vectors: exactly B times the
+    single-launch traffic (read every A row, every x row, write every Y row
+    — per-batch alpha/beta add only a negligible 2B-element operand, left
+    out of the model).  Batching changes the *launch count*, never the
+    streamed bytes: the win is dispatch amortization, which
+    :func:`launch_amortized_speedup` predicts."""
+    return b * tvc_streamed_elems(u, nk, v, beta)
+
+
+def tvc2_batched_streamed_elems(b: int, u: int, n1: int, n2: int, v: int,
+                                beta: float = 0.0) -> int:
+    """Batched counterpart of :func:`tvc2_streamed_elems`: B stacked
+    single-launch fused pairs, one launch, B times the traffic."""
+    return b * tvc2_streamed_elems(u, n1, n2, v, beta)
+
+
+def launch_amortized_speedup(b: int, streamed_bytes: float, peak_gbs: float,
+                             dispatch_us: float) -> float:
+    """Predicted wall-time ratio (B separate launches) / (one batched
+    launch) for a cell whose single launch streams ``streamed_bytes`` at
+    ``peak_gbs`` and pays ``dispatch_us`` of fixed per-launch dispatch
+    overhead:
+
+        t_sep     = B * (t_stream + t_dispatch)
+        t_batched = B * t_stream + t_dispatch
+
+    -> 1 as streaming dominates (big tensors), -> B as dispatch dominates
+    (the small-cell regime PR 3's check_bench calibration measured at
+    18-43x over the memory model on CPU).  The bench gate uses this to
+    assert a batched cell beats B separate launches where the model says it
+    must."""
+    if b <= 0:
+        raise ValueError(f"batch must be positive, got {b}")
+    t_stream = streamed_bytes / (peak_gbs * 1e9) * 1e6   # us per launch
+    return (b * (t_stream + dispatch_us)) / (b * t_stream + dispatch_us)
 
 
 def tvc_padded_copy_elems(

@@ -40,10 +40,12 @@ __all__ = [
     "tvc",
     "tvc_bytes",
     "tvc2_bytes",
+    "tvc_batched",
+    "tvc2_batched",
     "IMPLS",
 ]
 
-IMPLS = ("native", "looped", "unfolded", "pallas")
+IMPLS = ("native", "looped", "unfolded", "pallas", "mulsum")
 
 
 def mode_uv(shape: Sequence[int], k: int) -> tuple[int, int, int]:
@@ -96,6 +98,13 @@ def tvc2_bytes(shape: Sequence[int], k1: int, k2: int, itemsize: int,
     return (n + n1 + n2 + y_traffic) * itemsize
 
 
+def _out_dtype(A, prec: Precision):
+    """Output storage dtype under ``prec``: a storage-less policy keeps the
+    input's dtype.  Shared by every tvc/tvc2 variant (single and batched) so
+    no path can crash on ``prec.storage is None`` while another survives."""
+    return A.dtype if prec.storage is None else prec.storage
+
+
 def _contract_core(a3, x, prec: Precision):
     """Y[u,v] = sum_k A[u,k,v] x[k] with high-precision accumulation."""
     return jnp.einsum(
@@ -105,6 +114,19 @@ def _contract_core(a3, x, prec: Precision):
 
 def _native(a3, x, prec):
     return _contract_core(a3, x, prec)
+
+
+def _mulsum(a3, x, prec):
+    """Bitwise-batchable native variant: broadcast-multiply + axis
+    reduction instead of a ``dot_general``.  Same math and streamed traffic
+    as :func:`_native` (XLA fuses the multiply into the reduce), but the
+    per-output-element accumulation order does not change when a leading
+    batch dim is stacked in front — ``dot_general``'s does on CPU.  This is
+    the engine :mod:`repro.train.grad_compress` runs so its bucketed
+    (stacked) scheduler reproduces the per-leaf loop bit for bit."""
+    a = a3.astype(prec.compute)
+    xv = x.astype(prec.compute)
+    return jnp.sum(a * xv[None, :, None], axis=1)
 
 
 def _looped(a3, x, prec):
@@ -161,7 +183,7 @@ def tvc(
     if x.shape != (nk,):
         raise ValueError(f"x shape {x.shape} incompatible with mode {k} of {shape}")
     a3 = A.reshape(u, nk, v)
-    out_dtype = A.dtype if prec.storage is None else prec.storage
+    out_dtype = _out_dtype(A, prec)
 
     if impl == "pallas":
         from repro.kernels import ops as kops  # local import: optional dep cycle
@@ -178,6 +200,8 @@ def tvc(
         y2 = kops.tvc_pallas(a3, x, prec=prec)
     elif impl == "native":
         y2 = _native(a3, x, prec)
+    elif impl == "mulsum":
+        y2 = _mulsum(a3, x, prec)
     elif impl == "looped":
         y2 = _looped(a3, x, prec)
     elif impl == "unfolded":
@@ -249,8 +273,14 @@ def tvc2(
             y_in = None if float(beta) == 0.0 else y.reshape(u, v)
             out = kops.tvc2_pallas(a4, x1, x2, y_in, alpha=float(alpha),
                                    beta=float(beta), prec=prec)
-            return out.reshape(out_shape).astype(prec.storage)
+            return out.reshape(out_shape).astype(_out_dtype(A, prec))
         out = kops.tvc2_pallas(a4, x1, x2, prec=prec)
+    elif impl == "mulsum":
+        # bitwise-batchable fused pair (see _mulsum)
+        a = a4.astype(prec.compute)
+        w = x1.astype(prec.compute)[None, :, None, None] * \
+            x2.astype(prec.compute)[None, None, :, None]
+        out = jnp.sum(a * w, axis=(1, 2))
     else:
         out = jnp.einsum("uabv,a,b->uv", a4, x1, x2,
                          preferred_element_type=prec.compute)
@@ -269,7 +299,108 @@ def tvc2(
         if y is not None:
             out = out + jnp.asarray(beta, prec.compute) * \
                 y.reshape(u, v).astype(prec.compute)
-    return out.reshape(out_shape).astype(prec.storage)
+    return out.reshape(out_shape).astype(_out_dtype(A, prec))
+
+
+def _vmap_axes(y, alpha, beta):
+    """in_axes for the per-sample oracle: arrays map over the batch, static
+    scalars broadcast (vmapping a Python float would fail)."""
+    ax = lambda s: 0 if hasattr(s, "ndim") and getattr(s, "ndim", 0) >= 1 \
+        else None
+    return (0 if y is not None else None, ax(alpha), ax(beta))
+
+
+def tvc_batched(
+    A: jax.Array,
+    x: jax.Array,
+    k: int,
+    *,
+    alpha=1.0,
+    beta=0.0,
+    y: jax.Array | None = None,
+    impl: str = "native",
+    prec: Precision | str = F32,
+):
+    """Batched TVC over a stacked ``A[B, n_0..n_{d-1}]``: B independent
+    mode-``k`` contractions (``k`` indexes the *per-sample* shape) against
+    per-batch vectors ``x[B, n_k]``.
+
+    With ``impl="pallas"`` this is ONE kernel launch for the whole batch
+    (leading batch grid dim — dispatch overhead paid once, the
+    ``cublasGemvStridedBatched`` schedule of the paper's GPU baseline);
+    every other impl is the ``jax.vmap`` of the per-sample oracle, which is
+    also the correctness reference.  ``alpha``/``beta`` may be scalars or
+    per-batch ``[B]`` arrays; ``y`` is the stacked update operand."""
+    prec = get_policy(prec)
+    B = A.shape[0]
+    shape = A.shape[1:]
+    u, nk, v = mode_uv(shape, k)
+    if x.shape != (B, nk):
+        raise ValueError(
+            f"x shape {x.shape} incompatible with batch {B}, mode {k} of "
+            f"{tuple(shape)}")
+    out_shape = (B,) + tvc_shape(shape, k)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y_in = None if y is None else y.reshape(B, u, v)
+        out = kops.tvc_pallas_batched(A.reshape(B, u, nk, v), x, y_in,
+                                      alpha=alpha, beta=beta, prec=prec)
+        return out.reshape(out_shape).astype(_out_dtype(A, prec))
+    y_ax, a_ax, b_ax = _vmap_axes(y, alpha, beta)
+    fn = jax.vmap(
+        lambda A_, x_, y_, al_, be_: tvc(A_, x_, k, alpha=al_, beta=be_,
+                                         y=y_, impl=impl, prec=prec),
+        in_axes=(0, 0, y_ax, a_ax, b_ax))
+    return fn(A.reshape((B,) + tuple(shape)), x,
+              None if y is None else y.reshape((B,) + tvc_shape(shape, k)),
+              alpha, beta).reshape(out_shape)
+
+
+def tvc2_batched(
+    A: jax.Array,
+    x1: jax.Array,
+    k1: int,
+    x2: jax.Array,
+    k2: int,
+    *,
+    alpha=1.0,
+    beta=0.0,
+    y: jax.Array | None = None,
+    impl: str = "native",
+    prec: Precision | str = F32,
+):
+    """Batched fused-pair contraction over a stacked ``A[B, ...]``: B
+    independent adjacent-mode pairs (``k2 == k1 + 1`` in the per-sample
+    shape) in ONE streaming pass — and, with ``impl="pallas"``, ONE kernel
+    launch for the whole batch.  See :func:`tvc2` for the fused-pair
+    semantics and :func:`tvc_batched` for the batching contract."""
+    if k2 != k1 + 1:
+        raise ValueError(f"tvc2 fuses adjacent modes only, got {k1},{k2}")
+    prec = get_policy(prec)
+    B = A.shape[0]
+    shape = A.shape[1:]
+    u = math.prod(shape[:k1])
+    n1, n2 = shape[k1], shape[k2]
+    v = math.prod(shape[k2 + 1:])
+    if x1.shape != (B, n1) or x2.shape != (B, n2):
+        raise ValueError("vector shapes incompatible with batched fused modes")
+    out_shape = (B,) + tuple(shape[:k1]) + tuple(shape[k2 + 1:])
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y_in = None if y is None else y.reshape(B, u, v)
+        out = kops.tvc2_pallas_batched(A.reshape(B, u, n1, n2, v), x1, x2,
+                                       y_in, alpha=alpha, beta=beta,
+                                       prec=prec)
+        return out.reshape(out_shape).astype(_out_dtype(A, prec))
+    y_ax, a_ax, b_ax = _vmap_axes(y, alpha, beta)
+    fn = jax.vmap(
+        lambda A_, x1_, x2_, y_, al_, be_: tvc2(
+            A_, x1_, k1, x2_, k2, alpha=al_, beta=be_, y=y_, impl=impl,
+            prec=prec),
+        in_axes=(0, 0, 0, y_ax, a_ax, b_ax))
+    return fn(A.reshape((B,) + tuple(shape)), x1, x2,
+              None if y is None else y.reshape(out_shape),
+              alpha, beta).reshape(out_shape)
 
 
 def tvc_chain(

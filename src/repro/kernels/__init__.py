@@ -2,9 +2,11 @@
 
 * :mod:`tvc_kernel` — the paper's native mode-oblivious TVC (HBM->VMEM
   streaming, mixed-precision accumulator, ragged ``pl.cdiv`` grids with
-  in-kernel edge masking, fused alpha/beta epilogue).
+  in-kernel edge masking, fused alpha/beta epilogue), plus the *batched*
+  variants: a leading batch grid dim streams B independent same-shape
+  contractions per launch (per-batch vectors and alpha/beta).
 * :mod:`axpby`      — the paper's §5.5 mixed-precision axpby (zero-copy,
-  tiled ragged view).
+  tiled ragged view; batched per-row variant).
 * :mod:`autotune`   — block-size selection: offline sweep-table lookup first,
   VMEM-aware heuristic fallback (dtype tiling quantum, byte budget, view
   aspect ratio).

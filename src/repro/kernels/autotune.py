@@ -44,6 +44,11 @@ __all__ = [
     "pick_tvc4_blocks",
     "pick_tvc2_pair_blocks",
     "pick_axpby_blocks",
+    "pick_tvc3_batched_blocks",
+    "pick_tvc2_batched_blocks",
+    "pick_tvc4_batched_blocks",
+    "pick_tvc2_pair_batched_blocks",
+    "pick_axpby_batched_blocks",
 ]
 
 #: lane (minormost-dim) tiling quantum — fixed across dtypes.
@@ -243,7 +248,10 @@ def pick_tvc4_blocks(
     bv = _clamp(128, v, LANE)
     while cost(bu, b1, b2, bv) > budget and bv > LANE:
         bv = _clamp(_round_up(bv // 2, LANE), v, LANE)
-    for grow in ("v", "2", "1"):
+    # grow minor-dim first; bu rides last (ROADMAP follow-up: no longer
+    # pinned at 8 — leftover budget now covers the output tile too, and the
+    # offline sweep enumerates the same axis)
+    for grow in ("v", "2", "1", "u"):
         while True:
             nbu, nb1, nb2, nbv = bu, b1, b2, bv
             if grow == "v" and bv < min(_round_up(v, LANE), 512):
@@ -252,6 +260,8 @@ def pick_tvc4_blocks(
                 nb2 = _clamp(b2 * 2, n2, q)
             elif grow == "1" and b1 < min(_round_up(n1, 8), 64):
                 nb1 = _clamp(b1 * 2, n1, 8)
+            elif grow == "u" and bu < min(_round_up(u, 8), 64):
+                nbu = _clamp(bu * 2, u, 8)
             else:
                 break
             if (nbu, nb1, nb2, nbv) == (bu, b1, b2, bv) \
@@ -348,3 +358,207 @@ def pick_axpby_blocks(
         else:
             break
     return br, bc
+
+
+# ---------------------------------------------------------------------------
+# Batched picks: a leading batch block ``bb`` joins every tuple.  The batch
+# dim is pure parallelism with no tiling quantum (it is always the outermost
+# block dim), so the strategy is: size the per-sample blocks under the budget
+# *divided across a target number of batch tiles*, then spend whatever is
+# left growing bb — one grid step then streams many batch rows, which is the
+# entire point of the batched kernels (dispatch amortization).
+# ---------------------------------------------------------------------------
+
+_BB_TARGET = 8
+
+
+def _grow_bb(B: int, cost, budget: int) -> int:
+    """Largest doubling bb <= B whose total block cost fits the budget
+    (cost takes bb alone; at least 1 even when over budget)."""
+    bb = 1
+    while bb < B:
+        nbb = _clamp(bb * 2, B, 1)
+        if nbb == bb or cost(nbb) > budget:
+            break
+        bb = nbb
+    return bb
+
+
+def pick_tvc3_batched_blocks(
+    B: int,
+    u: int,
+    nk: int,
+    v: int,
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    has_y: bool = False,
+    has_ab: bool = False,
+    budget: int | None = None,
+    table: bool = True,
+) -> tuple[int, int, int, int]:
+    """(bb, bu, bk, bv) for the batched (B, u, n_k, v)-view kernel."""
+    budget = vmem_budget(budget)
+    ssz = jnp.dtype(storage).itemsize
+    csz = jnp.dtype(compute).itemsize
+    q = sublane_quantum(storage)
+
+    def per_sample(bu: int, bk: int, bv: int) -> int:
+        return (2 * bu * bk * bv * ssz + 2 * bk * ssz + bu * bv * csz
+                + bu * bv * ssz * (3 if has_y else 1)
+                + (4 * csz if has_ab else 0))
+
+    def cost(bb: int, bu: int, bk: int, bv: int) -> int:
+        return bb * per_sample(bu, bk, bv)
+
+    if table:
+        hit = _from_table("tvc3_batched", (B, u, nk, v), storage,
+                          (1, 8, q, LANE), cost, budget)
+        if hit is not None:
+            return hit
+
+    share = max(budget // min(B, _BB_TARGET), 64 * 1024)
+    bu, bk, bv = pick_tvc3_blocks(
+        u, nk, v, storage=storage, compute=compute, has_y=has_y,
+        budget=share, table=False)
+    bb = _grow_bb(B, lambda bb: cost(bb, bu, bk, bv), budget)
+    return bb, bu, bk, bv
+
+
+def pick_tvc2_batched_blocks(
+    B: int,
+    u: int,
+    nk: int,
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    has_y: bool = False,
+    has_ab: bool = False,
+    budget: int | None = None,
+    table: bool = True,
+) -> tuple[int, int, int]:
+    """(bb, bu, bk) for the batched matvec kernel (lanes on n_k)."""
+    budget = vmem_budget(budget)
+    ssz = jnp.dtype(storage).itemsize
+    csz = jnp.dtype(compute).itemsize
+    q = sublane_quantum(storage)
+
+    def cost(bb: int, bu: int, bk: int) -> int:
+        return bb * (2 * bu * bk * ssz + 2 * bk * ssz + bu * csz
+                     + bu * ssz * (3 if has_y else 1)
+                     + (4 * csz if has_ab else 0))
+
+    if table:
+        hit = _from_table("tvc2_batched", (B, u, nk), storage,
+                          (1, q, LANE), cost, budget)
+        if hit is not None:
+            return hit
+
+    share = max(budget // min(B, _BB_TARGET), 64 * 1024)
+    bu, bk = pick_tvc2_blocks(
+        u, nk, storage=storage, compute=compute, has_y=has_y,
+        budget=share, table=False)
+    bb = _grow_bb(B, lambda bb: cost(bb, bu, bk), budget)
+    return bb, bu, bk
+
+
+def pick_tvc4_batched_blocks(
+    B: int,
+    u: int,
+    n1: int,
+    n2: int,
+    v: int,
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    has_y: bool = False,
+    has_ab: bool = False,
+    budget: int | None = None,
+    table: bool = True,
+) -> tuple[int, int, int, int, int]:
+    """(bb, bu, b1, b2, bv) for the batched generic fused-pair kernel."""
+    budget = vmem_budget(budget)
+    ssz = jnp.dtype(storage).itemsize
+    csz = jnp.dtype(compute).itemsize
+    q = sublane_quantum(storage)
+
+    def cost(bb: int, bu: int, b1: int, b2: int, bv: int) -> int:
+        return bb * (2 * bu * b1 * b2 * bv * ssz + 2 * (b1 + b2) * ssz
+                     + bu * bv * csz + bu * bv * ssz * (3 if has_y else 1)
+                     + (4 * csz if has_ab else 0))
+
+    if table:
+        hit = _from_table("tvc4_batched", (B, u, n1, n2, v), storage,
+                          (1, 8, 8, q, LANE), cost, budget)
+        if hit is not None:
+            return hit
+
+    share = max(budget // min(B, _BB_TARGET), 64 * 1024)
+    bu, b1, b2, bv = pick_tvc4_blocks(
+        u, n1, n2, v, storage=storage, compute=compute, has_y=has_y,
+        budget=share, table=False)
+    bb = _grow_bb(B, lambda bb: cost(bb, bu, b1, b2, bv), budget)
+    return bb, bu, b1, b2, bv
+
+
+def pick_tvc2_pair_batched_blocks(
+    B: int,
+    u: int,
+    n1: int,
+    n2: int,
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    has_y: bool = False,
+    has_ab: bool = False,
+    budget: int | None = None,
+    table: bool = True,
+) -> tuple[int, int, int, int]:
+    """(bb, bu, b1, b2) for the batched fused-pair chain-tail kernel."""
+    budget = vmem_budget(budget)
+    ssz = jnp.dtype(storage).itemsize
+    csz = jnp.dtype(compute).itemsize
+    q = sublane_quantum(storage)
+
+    def cost(bb: int, bu: int, b1: int, b2: int) -> int:
+        return bb * (2 * bu * b1 * b2 * ssz + 2 * (b1 + b2) * ssz
+                     + bu * csz + bu * ssz * (3 if has_y else 1)
+                     + (4 * csz if has_ab else 0))
+
+    if table:
+        hit = _from_table("tvc2_pair_batched", (B, u, n1, n2), storage,
+                          (1, q, q, LANE), cost, budget)
+        if hit is not None:
+            return hit
+
+    share = max(budget // min(B, _BB_TARGET), 64 * 1024)
+    bu, b1, b2 = pick_tvc2_pair_blocks(
+        u, n1, n2, storage=storage, compute=compute, has_y=has_y,
+        budget=share, table=False)
+    bb = _grow_bb(B, lambda bb: cost(bb, bu, b1, b2), budget)
+    return bb, bu, b1, b2
+
+
+def pick_axpby_batched_blocks(
+    B: int,
+    n: int,
+    *,
+    storage=jnp.float32,
+    compute=jnp.float32,
+    budget: int | None = None,
+) -> tuple[int, int]:
+    """(bb, bc) for the batched per-row axpby kernel over a (B, n) stack."""
+    budget = vmem_budget(budget)
+    ssz = jnp.dtype(storage).itemsize
+    csz = jnp.dtype(compute).itemsize
+    q = sublane_quantum(storage)
+
+    def cost(bb: int, bc: int) -> int:
+        return bb * ((2 + 2 + 1) * bc * ssz + 4 * csz)
+
+    bc = _clamp(1024, n, LANE)
+    while cost(q, bc) > budget and bc > LANE:
+        bc = _clamp(_round_up(bc // 2, LANE), n, LANE)
+    # batch rows ride the sublane dim of the (bb, bc) block
+    bb = max(q, _grow_bb(B, lambda bb: cost(_round_up(bb, q), bc), budget))
+    return _clamp(_round_up(bb, q), B, q), bc

@@ -45,7 +45,10 @@ __all__ = [
 #:   tvc2      — (u, n_k) matvec, mode k = d-1
 #:   tvc4      — (u, n1, n2, v) fused pair, v > 1
 #:   tvc2_pair — (u, n1, n2) fused pair chain tail, v == 1
-KINDS = ("tvc2", "tvc3", "tvc4", "tvc2_pair")
+#: plus the ``*_batched`` variants, whose dims gain a leading batch extent B
+#: and whose blocks gain the leading batch block ``bb``.
+KINDS = ("tvc2", "tvc3", "tvc4", "tvc2_pair",
+         "tvc2_batched", "tvc3_batched", "tvc4_batched", "tvc2_pair_batched")
 
 DEFAULT_PATH = pathlib.Path(__file__).with_name("block_table.json")
 

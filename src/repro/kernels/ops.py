@@ -8,6 +8,11 @@ kernel epilogue: ``alpha``/``beta`` are static (trace-time) arguments baked
 into the kernel, and ``y`` rides along as one extra input ref, so a
 ``beta != 0`` update reads Y exactly once instead of spending a second full
 axpby pass over it.
+
+The ``*_batched`` wrappers stream B independent same-shape contractions
+(stacked operands, per-batch vectors) through ONE launch; their
+``alpha``/``beta`` additionally accept per-batch ``[B]`` arrays, normalized
+into one tiny ``(B, 2)`` kernel operand.
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import math
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.mixed_precision import F32, Precision, get_policy
 from . import autotune as _at
@@ -150,6 +156,180 @@ def tvc2_pallas(
     y_in = y.reshape(u, v) if has_y else None
     return _tvc.tvc4(a4, x1, x2, prec=prec, bu=bu_, b1=b1_, b2=b2_, bv=bv_,
                      alpha=alpha, beta=beta, y_in=y_in, interpret=interpret)
+
+
+def _batched_ab(alpha, beta, B: int, compute):
+    """Normalize the batched epilogue scalars.  Returns (ab, alpha, beta):
+    ``ab`` is None when both are static Python scalars (the kernel bakes
+    them), otherwise a (B, 2) array — per-batch values pass through, scalars
+    (including traced 0-d ones) broadcast across the batch."""
+    if isinstance(alpha, (int, float)) and isinstance(beta, (int, float)):
+        return None, float(alpha), float(beta)
+    al = jnp.broadcast_to(jnp.asarray(alpha, compute).reshape(-1), (B,))
+    be = jnp.broadcast_to(jnp.asarray(beta, compute).reshape(-1), (B,))
+    return jnp.stack([al, be], axis=1), 1.0, 0.0
+
+
+@partial(jax.jit,
+         static_argnames=("alpha", "beta", "prec", "bb", "bu", "bk", "bv",
+                          "interpret"))
+def _tvc_pallas_batched_call(a3, x, ab, y, *, alpha, beta, prec, bb, bu, bk,
+                             bv, interpret):
+    B, u, nk, v = a3.shape
+    has_y = y is not None
+    has_ab = ab is not None
+    if v == 1:
+        bb_, bu_, bk_ = _at.pick_tvc2_batched_blocks(
+            B, u, nk, storage=prec.storage, compute=prec.compute,
+            has_y=has_y, has_ab=has_ab)
+        bb_, bu_, bk_ = bb or bb_, bu or bu_, bk or bk_
+        y_in = y.reshape(B, u, 1) if has_y else None
+        return _tvc.tvc2_batched(
+            a3.reshape(B, u, nk), x, prec=prec, bb=bb_, bu=bu_, bk=bk_,
+            alpha=alpha, beta=beta, ab=ab, y_in=y_in, interpret=interpret,
+        ).reshape(B, u, 1)
+    bb_, bu_, bk_, bv_ = _at.pick_tvc3_batched_blocks(
+        B, u, nk, v, storage=prec.storage, compute=prec.compute,
+        has_y=has_y, has_ab=has_ab)
+    bb_, bu_, bk_, bv_ = bb or bb_, bu or bu_, bk or bk_, bv or bv_
+    y_in = y.reshape(B, u, v) if has_y else None
+    return _tvc.tvc3_batched(a3, x, prec=prec, bb=bb_, bu=bu_, bk=bk_,
+                             bv=bv_, alpha=alpha, beta=beta, ab=ab,
+                             y_in=y_in, interpret=interpret)
+
+
+def tvc_pallas_batched(
+    a3: jax.Array,
+    x: jax.Array,
+    y: jax.Array | None = None,
+    *,
+    alpha=1.0,
+    beta=0.0,
+    prec: Precision | str = F32,
+    bb: int | None = None,
+    bu: int | None = None,
+    bk: int | None = None,
+    bv: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched mode-oblivious TVC: B independent contractions on stacked
+    (B, u, n_k, v) views against per-batch vectors ``x[B, n_k]`` in ONE
+    kernel launch (the ``cublasGemvStridedBatched`` analogue) — dispatch
+    overhead is paid once, not B times.  ``alpha``/``beta`` may be Python
+    scalars (baked into the kernel) or per-batch ``[B]`` arrays (one tiny
+    (B, 2) operand feeding the per-row epilogue); ``y`` is the stacked
+    (B, u, v) update operand.  Dispatches to the batched matvec kernel when
+    v == 1."""
+    prec = get_policy(prec)
+    if interpret is None:
+        interpret = _interpret_default()
+    B = a3.shape[0]
+    if x.shape[0] != B:
+        raise ValueError(f"x batch {x.shape[0]} != A batch {B}")
+    ab, alpha_s, beta_s = _batched_ab(alpha, beta, B, prec.compute)
+    static_beta_zero = isinstance(beta, (int, float)) and float(beta) == 0.0
+    if not static_beta_zero and y is None:
+        raise ValueError("beta != 0 requires y")
+    y_use = None if static_beta_zero else y
+    return _tvc_pallas_batched_call(a3, x, ab, y_use, alpha=alpha_s,
+                                    beta=beta_s, prec=prec, bb=bb, bu=bu,
+                                    bk=bk, bv=bv, interpret=interpret)
+
+
+@partial(jax.jit,
+         static_argnames=("alpha", "beta", "prec", "bb", "bu", "b1", "b2",
+                          "bv", "interpret"))
+def _tvc2_pallas_batched_call(a4, x1, x2, ab, y, *, alpha, beta, prec, bb,
+                              bu, b1, b2, bv, interpret):
+    B, u, n1, n2, v = a4.shape
+    has_y = y is not None
+    has_ab = ab is not None
+    if v == 1:
+        bb_, bu_, b1_, b2_ = _at.pick_tvc2_pair_batched_blocks(
+            B, u, n1, n2, storage=prec.storage, compute=prec.compute,
+            has_y=has_y, has_ab=has_ab)
+        bb_, bu_, b1_, b2_ = bb or bb_, bu or bu_, b1 or b1_, b2 or b2_
+        y_in = y.reshape(B, u, 1) if has_y else None
+        return _tvc.tvc2_pair_batched(
+            a4.reshape(B, u, n1, n2), x1, x2, prec=prec, bb=bb_, bu=bu_,
+            b1=b1_, b2=b2_, alpha=alpha, beta=beta, ab=ab, y_in=y_in,
+            interpret=interpret,
+        ).reshape(B, u, 1)
+    bb_, bu_, b1_, b2_, bv_ = _at.pick_tvc4_batched_blocks(
+        B, u, n1, n2, v, storage=prec.storage, compute=prec.compute,
+        has_y=has_y, has_ab=has_ab)
+    bb_, bu_, b1_, b2_, bv_ = (bb or bb_, bu or bu_, b1 or b1_, b2 or b2_,
+                               bv or bv_)
+    y_in = y.reshape(B, u, v) if has_y else None
+    return _tvc.tvc4_batched(a4, x1, x2, prec=prec, bb=bb_, bu=bu_, b1=b1_,
+                             b2=b2_, bv=bv_, alpha=alpha, beta=beta, ab=ab,
+                             y_in=y_in, interpret=interpret)
+
+
+def tvc2_pallas_batched(
+    a4: jax.Array,
+    x1: jax.Array,
+    x2: jax.Array,
+    y: jax.Array | None = None,
+    *,
+    alpha=1.0,
+    beta=0.0,
+    prec: Precision | str = F32,
+    bb: int | None = None,
+    bu: int | None = None,
+    b1: int | None = None,
+    b2: int | None = None,
+    bv: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched fused-pair contraction on stacked (B, u, n1, n2, v) views in
+    ONE kernel launch, with per-batch vectors and the same scalar-or-[B]
+    ``alpha``/``beta`` epilogue as :func:`tvc_pallas_batched`.  Dispatches
+    to the batched chain-tail kernel when v == 1."""
+    prec = get_policy(prec)
+    if interpret is None:
+        interpret = _interpret_default()
+    B = a4.shape[0]
+    if x1.shape[0] != B or x2.shape[0] != B:
+        raise ValueError("vector batch dims != A batch dim")
+    ab, alpha_s, beta_s = _batched_ab(alpha, beta, B, prec.compute)
+    static_beta_zero = isinstance(beta, (int, float)) and float(beta) == 0.0
+    if not static_beta_zero and y is None:
+        raise ValueError("beta != 0 requires y")
+    y_use = None if static_beta_zero else y
+    return _tvc2_pallas_batched_call(a4, x1, x2, ab, y_use, alpha=alpha_s,
+                                     beta=beta_s, prec=prec, bb=bb, bu=bu,
+                                     b1=b1, b2=b2, bv=bv, interpret=interpret)
+
+
+def axpby_pallas_batched(
+    alpha,
+    x: jax.Array,
+    beta,
+    y: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-batch-row mixed-precision axpby over stacked (B, ...) arrays in
+    ONE launch: ``out[z] = alpha_z * x[z] + beta_z * y[z]``.  ``alpha`` /
+    ``beta`` are scalars or [B] arrays; rows are flattened to a (B, n)
+    view (a free reshape on contiguous stacks)."""
+    prec = get_policy(prec)
+    if interpret is None:
+        interpret = _interpret_default()
+    B = x.shape[0]
+    shape = x.shape
+    n = math.prod(shape[1:]) if len(shape) > 1 else 1
+    ab, alpha_s, beta_s = _batched_ab(alpha, beta, B, prec.compute)
+    if ab is None:
+        ab = jnp.broadcast_to(
+            jnp.asarray([alpha_s, beta_s], prec.compute), (B, 2))
+    block = _at.pick_axpby_batched_blocks(
+        B, n, storage=prec.storage, compute=prec.compute)
+    out = _axpby.axpby_batched(ab, x.reshape(B, n), y.reshape(B, n),
+                               prec=prec, block=block, interpret=interpret)
+    return out.reshape(shape)
 
 
 @partial(jax.jit, static_argnames=("prec", "interpret"))

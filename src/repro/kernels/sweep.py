@@ -3,7 +3,10 @@
 The autotuner's grow loop picks one (bu, bk, bv) per view from a fixed
 heuristic; this module *measures* instead: enumerate every quantum-aligned
 power-of-two block candidate that fits the VMEM budget, time the actual
-kernel launch on each, and return the winner.  ``benchmarks/sweep_blocks.py``
+kernel launch on each, and return the winner.  The candidate axes cover the
+4-D pair kernel's ``bu`` (which the heuristic long pinned at 8) and, for
+the ``*_batched`` kinds, the leading batch block ``bb`` (quantum 1 — the
+batch dim is pure parallelism; its cost multiplies across the bb tiles).  ``benchmarks/sweep_blocks.py``
 drives it over the (order, mode-class, dtype) bench grid and pins the winners
 into :mod:`repro.kernels.block_table`, which the autotuner consults before
 the heuristic on every later run.
@@ -26,7 +29,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.memory_model import tvc2_streamed_elems, tvc_streamed_elems
+from repro.core.memory_model import (
+    tvc2_batched_streamed_elems,
+    tvc2_streamed_elems,
+    tvc_batched_streamed_elems,
+    tvc_streamed_elems,
+)
 from repro.core.mixed_precision import Precision, get_policy
 from . import autotune as _at
 from . import block_table
@@ -89,6 +97,13 @@ def _quanta_and_cost(kind: str, storage, compute,
         cost = lambda bu, b1, b2: (2 * bu * b1 * b2 * ssz
                                    + 2 * (b1 + b2) * ssz
                                    + bu * csz + bu * ssz * yf)
+    elif kind.endswith("_batched"):
+        # one leading (quantum-1) batch-block axis; the per-sample cost is
+        # the unbatched kind's, multiplied across the bb tiles
+        axes, per = _quanta_and_cost(kind[: -len("_batched")], storage,
+                                     compute, has_y)
+        axes = ((1, 64),) + axes
+        cost = lambda bb, *blocks: bb * per(*blocks)
     else:
         raise ValueError(f"kind must be one of {block_table.KINDS}, got {kind!r}")
     return axes, cost
@@ -126,19 +141,33 @@ def candidates(
 
 def _heuristic(kind, dims, storage, compute, has_y, budget):
     kw = dict(storage=storage, compute=compute, budget=budget, table=False)
-    if kind == "tvc3":
-        return _at.pick_tvc3_blocks(*dims, has_y=has_y, **kw)
-    if kind == "tvc2":
-        return _at.pick_tvc2_blocks(*dims, has_y=has_y, **kw)
-    if kind == "tvc4":
-        return _at.pick_tvc4_blocks(*dims, has_y=has_y, **kw)
-    return _at.pick_tvc2_pair_blocks(*dims, has_y=has_y, **kw)
+    picks = {
+        "tvc3": _at.pick_tvc3_blocks,
+        "tvc2": _at.pick_tvc2_blocks,
+        "tvc4": _at.pick_tvc4_blocks,
+        "tvc2_pair": _at.pick_tvc2_pair_blocks,
+        "tvc3_batched": _at.pick_tvc3_batched_blocks,
+        "tvc2_batched": _at.pick_tvc2_batched_blocks,
+        "tvc4_batched": _at.pick_tvc4_batched_blocks,
+        "tvc2_pair_batched": _at.pick_tvc2_pair_batched_blocks,
+    }
+    return picks[kind](*dims, has_y=has_y, **kw)
 
 
 def streamed_bytes(kind: str, dims: Sequence[int], storage) -> int:
     """Model-predicted streamed bytes of one launch — the GB/s denominator
     (and what the CI bandwidth gate checks measured cells against)."""
     ssz = jnp.dtype(storage).itemsize
+    if kind.endswith("_batched"):
+        b, rest = dims[0], tuple(dims[1:])
+        base = kind[: -len("_batched")]
+        if base in ("tvc3", "tvc2"):
+            u, nk = rest[:2]
+            v = rest[2] if base == "tvc3" else 1
+            return tvc_batched_streamed_elems(b, u, nk, v) * ssz
+        u, n1, n2 = rest[:3]
+        v = rest[3] if base == "tvc4" else 1
+        return tvc2_batched_streamed_elems(b, u, n1, n2, v) * ssz
     if kind == "tvc3":
         u, nk, v = dims
         return tvc_streamed_elems(u, nk, v) * ssz
@@ -157,6 +186,16 @@ def _operands(kind: str, dims, storage, seed: int = 0):
         return jnp.asarray(rng.standard_normal(shape).astype(np.float32)
                            ).astype(storage)
 
+    if kind.endswith("_batched"):
+        b, rest = dims[0], tuple(dims[1:])
+        base = kind[: -len("_batched")]
+        if base in ("tvc3", "tvc2"):
+            u, nk = rest[:2]
+            v = rest[2] if base == "tvc3" else 1
+            return (r((b, u, nk, v)), r((b, nk)))
+        u, n1, n2 = rest[:3]
+        v = rest[3] if base == "tvc4" else 1
+        return (r((b, u, n1, n2, v)), r((b, n1)), r((b, n2)))
     if kind == "tvc3":
         u, nk, v = dims
         return (r((u, nk, v)), r((nk,)))
@@ -169,6 +208,25 @@ def _operands(kind: str, dims, storage, seed: int = 0):
 
 
 def _launch(kind: str, operands, blocks, prec: Precision):
+    if kind == "tvc3_batched":
+        a3, x = operands
+        bb, bu, bk, bv = blocks
+        return ops.tvc_pallas_batched(a3, x, prec=prec,
+                                      bb=bb, bu=bu, bk=bk, bv=bv)
+    if kind == "tvc2_batched":
+        a3, x = operands
+        bb, bu, bk = blocks
+        return ops.tvc_pallas_batched(a3, x, prec=prec, bb=bb, bu=bu, bk=bk)
+    if kind == "tvc4_batched":
+        a4, x1, x2 = operands
+        bb, bu, b1, b2, bv = blocks
+        return ops.tvc2_pallas_batched(a4, x1, x2, prec=prec, bb=bb, bu=bu,
+                                       b1=b1, b2=b2, bv=bv)
+    if kind == "tvc2_pair_batched":
+        a4, x1, x2 = operands
+        bb, bu, b1, b2 = blocks
+        return ops.tvc2_pallas_batched(a4, x1, x2, prec=prec, bb=bb, bu=bu,
+                                       b1=b1, b2=b2)
     if kind == "tvc3":
         a3, x = operands
         bu, bk, bv = blocks

@@ -37,8 +37,21 @@ into the emit epilogue: ``alpha``/``beta`` are trace-time constants and the
 optional y operand rides in as one extra input ref, so ``beta != 0`` costs a
 single extra read of Y instead of a second full axpby pass.
 
+Every body also runs **batched**: a leading batch grid dimension streams B
+independent same-shape contractions — ``A[B, ...]`` against per-batch vectors
+``x[B, n_k]`` — through ONE ``pallas_call``, so a chain step over B stacked
+tensors pays one dispatch instead of B (the ``cublasGemvStridedBatched``
+analogue of Shi et al.'s extended-BLAS batching).  The batched epilogue
+optionally takes *per-batch* ``alpha``/``beta`` as one tiny ``(B, 2)``
+operand (``ab``); the batch dim needs no edge masking — a partial trailing
+batch block only ever produces garbage in out-of-bounds output rows, which
+are discarded (each batch row accumulates independently; nothing reduces
+across the batch).  The ``tvc*_batched`` wrappers at the bottom mirror the
+unbatched ones one-for-one.
+
 Block sizes come from :mod:`repro.kernels.autotune` (dtype tiling quantum,
-VMEM budget, aspect ratio); the wrappers live in :mod:`repro.kernels.ops`.
+VMEM budget — divided across the ``bb`` batch tiles in the batched variants,
+aspect ratio); the wrappers live in :mod:`repro.kernels.ops`.
 """
 from __future__ import annotations
 
@@ -73,35 +86,61 @@ def _edge_mask(shape: tuple[int, ...], dim: int, limit) -> jax.Array:
     return lax.broadcasted_iota(jnp.int32, shape, dim) < limit
 
 
-def _emit_update(acc, y_ref, yin_ref, alpha: float, beta: float):
+def _emit_update(acc, y_ref, yin_ref, alpha: float, beta: float,
+                 ab_ref=None):
     """Fused epilogue: y = alpha * acc + beta * y_in, demoted to storage.
-    alpha/beta are Python floats folded into the kernel at trace time."""
+    alpha/beta are Python floats folded into the kernel at trace time —
+    unless ``ab_ref`` (a per-batch ``(bb, 2)`` block) is present, in which
+    case each batch row gets its own alpha/beta broadcast over the block."""
     out = acc
-    if alpha != 1.0:
-        out = out * alpha
-    if yin_ref is not None:
-        out = out + beta * yin_ref[...].astype(out.dtype)
+    if ab_ref is not None:
+        ab = ab_ref[...].astype(out.dtype)          # (bb, 2)
+        bshape = (-1,) + (1,) * (out.ndim - 1)
+        out = out * ab[:, 0].reshape(bshape)
+        if yin_ref is not None:
+            out = out + ab[:, 1].reshape(bshape) * \
+                yin_ref[...].astype(out.dtype)
+    else:
+        if alpha != 1.0:
+            out = out * alpha
+        if yin_ref is not None:
+            out = out + beta * yin_ref[...].astype(out.dtype)
     y_ref[...] = out.astype(y_ref.dtype)
 
 
+def _epilogue_refs(rest, has_ab: bool, has_y: bool):
+    """(ab_ref, yin_ref, y_ref, acc_ref) from a body's trailing refs; the
+    optional per-batch ab block rides before the optional y-in block."""
+    idx = 0
+    ab_ref = rest[idx] if has_ab else None
+    idx += 1 if has_ab else 0
+    yin_ref = rest[idx] if has_y else None
+    return ab_ref, yin_ref, rest[-2], rest[-1]
+
+
 def _tvc3_body(x_ref, a_ref, *rest, nk: int, bk: int, k_blocks: int,
-               mask_k: bool, alpha: float, beta: float, has_y: bool):
-    yin_ref = rest[0] if has_y else None
-    y_ref, acc_ref = rest[-2], rest[-1]
-    kk = pl.program_id(2)
+               mask_k: bool, alpha: float, beta: float, has_y: bool,
+               has_ab: bool = False, batched: bool = False):
+    ab_ref, yin_ref, y_ref, acc_ref = _epilogue_refs(rest, has_ab, has_y)
+    kk = pl.program_id(3 if batched else 2)
 
     @pl.when(kk == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     def _accum(masked: bool):
-        a = a_ref[...].astype(acc_ref.dtype)        # (bu, bk, bv)
-        xv = x_ref[...].astype(acc_ref.dtype)       # (1, bk)
-        if masked:                                  # trailing partial k-block
+        a = a_ref[...].astype(acc_ref.dtype)    # (bu, bk, bv) | (bb, bu, bk, bv)
+        xv = x_ref[...].astype(acc_ref.dtype)   # (1, bk)      | (bb, bk)
+        if masked:                              # trailing partial k-block
             lim = nk - kk * bk
-            a = jnp.where(_edge_mask((1, bk, 1), 1, lim), a, 0)
+            kdim = 2 if batched else 1
+            a = jnp.where(_edge_mask((1,) * kdim + (bk,) + (1,), kdim, lim),
+                          a, 0)
             xv = jnp.where(_edge_mask((1, bk), 1, lim), xv, 0)
-        acc_ref[...] += jnp.sum(a * xv[0][None, :, None], axis=1)
+        if batched:
+            acc_ref[...] += jnp.sum(a * xv[:, None, :, None], axis=2)
+        else:
+            acc_ref[...] += jnp.sum(a * xv[0][None, :, None], axis=1)
 
     if mask_k:
         # only the last k-block has garbage lanes — interior blocks skip the
@@ -114,27 +153,32 @@ def _tvc3_body(x_ref, a_ref, *rest, nk: int, bk: int, k_blocks: int,
 
     @pl.when(kk == k_blocks - 1)
     def _emit():
-        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta)
+        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta, ab_ref)
 
 
 def _tvc2_body(x_ref, a_ref, *rest, nk: int, bk: int, k_blocks: int,
-               mask_k: bool, alpha: float, beta: float, has_y: bool):
-    yin_ref = rest[0] if has_y else None
-    y_ref, acc_ref = rest[-2], rest[-1]
-    kk = pl.program_id(1)
+               mask_k: bool, alpha: float, beta: float, has_y: bool,
+               has_ab: bool = False, batched: bool = False):
+    ab_ref, yin_ref, y_ref, acc_ref = _epilogue_refs(rest, has_ab, has_y)
+    kk = pl.program_id(2 if batched else 1)
 
     @pl.when(kk == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     def _accum(masked: bool):
-        a = a_ref[...].astype(acc_ref.dtype)        # (bu, bk)
-        xv = x_ref[...].astype(acc_ref.dtype)       # (1, bk)
+        a = a_ref[...].astype(acc_ref.dtype)    # (bu, bk) | (bb, bu, bk)
+        xv = x_ref[...].astype(acc_ref.dtype)   # (1, bk)  | (bb, bk)
         if masked:
             lim = nk - kk * bk
-            a = jnp.where(_edge_mask((1, bk), 1, lim), a, 0)
+            kdim = 2 if batched else 1
+            a = jnp.where(_edge_mask((1,) * kdim + (bk,), kdim, lim), a, 0)
             xv = jnp.where(_edge_mask((1, bk), 1, lim), xv, 0)
-        acc_ref[...] += jnp.sum(a * xv, axis=1, keepdims=True)
+        if batched:
+            acc_ref[...] += jnp.sum(a * xv[:, None, :], axis=2,
+                                    keepdims=True)
+        else:
+            acc_ref[...] += jnp.sum(a * xv, axis=1, keepdims=True)
 
     if mask_k:
         last = kk == k_blocks - 1
@@ -145,33 +189,40 @@ def _tvc2_body(x_ref, a_ref, *rest, nk: int, bk: int, k_blocks: int,
 
     @pl.when(kk == k_blocks - 1)
     def _emit():
-        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta)
+        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta, ab_ref)
 
 
 def _tvc4_body(x1_ref, x2_ref, a_ref, *rest, n1: int, b1: int, n2: int,
                b2: int, k1_blocks: int, k2_blocks: int, mask_1: bool,
-               mask_2: bool, alpha: float, beta: float, has_y: bool):
-    yin_ref = rest[0] if has_y else None
-    y_ref, acc_ref = rest[-2], rest[-1]
-    kk1 = pl.program_id(2)
-    kk2 = pl.program_id(3)
+               mask_2: bool, alpha: float, beta: float, has_y: bool,
+               has_ab: bool = False, batched: bool = False):
+    ab_ref, yin_ref, y_ref, acc_ref = _epilogue_refs(rest, has_ab, has_y)
+    kk1 = pl.program_id(3 if batched else 2)
+    kk2 = pl.program_id(4 if batched else 3)
 
     @pl.when((kk1 == 0) & (kk2 == 0))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     def _accum(m1: bool, m2: bool):
-        a = a_ref[...].astype(acc_ref.dtype)          # (bu, b1, b2, bv)
-        x1 = x1_ref[...].astype(acc_ref.dtype)        # (1, b1)
-        x2 = x2_ref[...].astype(acc_ref.dtype)        # (1, b2)
+        a = a_ref[...].astype(acc_ref.dtype)    # (bu,b1,b2,bv)|(bb,bu,b1,b2,bv)
+        x1 = x1_ref[...].astype(acc_ref.dtype)  # (1, b1)      | (bb, b1)
+        x2 = x2_ref[...].astype(acc_ref.dtype)  # (1, b2)      | (bb, b2)
+        off = 1 if batched else 0
         if m1:
             lim1 = n1 - kk1 * b1
-            a = jnp.where(_edge_mask((1, b1, 1, 1), 1, lim1), a, 0)
+            sh = (1,) * (1 + off) + (b1,) + (1, 1)
+            a = jnp.where(_edge_mask(sh, 1 + off, lim1), a, 0)
             x1 = jnp.where(_edge_mask((1, b1), 1, lim1), x1, 0)
         if m2:
             lim2 = n2 - kk2 * b2
-            a = jnp.where(_edge_mask((1, 1, b2, 1), 2, lim2), a, 0)
+            sh = (1,) * (2 + off) + (b2,) + (1,)
+            a = jnp.where(_edge_mask(sh, 2 + off, lim2), a, 0)
             x2 = jnp.where(_edge_mask((1, b2), 1, lim2), x2, 0)
+        if batched:
+            w = x1[:, :, None] * x2[:, None, :]       # (bb, b1, b2)
+            acc_ref[...] += jnp.einsum("zuabv,zab->zuv", a, w)
+            return
         w = x1[0][:, None] * x2[0][None, :]           # (b1, b2)
         acc_ref[...] += jnp.einsum("uabv,ab->uv", a, w)
 
@@ -192,36 +243,43 @@ def _tvc4_body(x1_ref, x2_ref, a_ref, *rest, n1: int, b1: int, n2: int,
 
     @pl.when((kk1 == k1_blocks - 1) & (kk2 == k2_blocks - 1))
     def _emit():
-        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta)
+        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta, ab_ref)
 
 
 def _tvc2_pair_body(x1_ref, x2_ref, a_ref, *rest, n1: int, b1: int, n2: int,
                     b2: int, k1_blocks: int, k2_blocks: int, mask_1: bool,
-                    mask_2: bool, alpha: float, beta: float, has_y: bool):
+                    mask_2: bool, alpha: float, beta: float, has_y: bool,
+                    has_ab: bool = False, batched: bool = False):
     """Fused-pair chain tail (v == 1): y[u] = sum_{a,b} A[u,a,b] x1[a] x2[b]
     in one launch.  Lanes ride on n_2 (the contiguous minor mode), sublanes
     on n_1; both reduction grid dims are sequential."""
-    yin_ref = rest[0] if has_y else None
-    y_ref, acc_ref = rest[-2], rest[-1]
-    kk1 = pl.program_id(1)
-    kk2 = pl.program_id(2)
+    ab_ref, yin_ref, y_ref, acc_ref = _epilogue_refs(rest, has_ab, has_y)
+    kk1 = pl.program_id(2 if batched else 1)
+    kk2 = pl.program_id(3 if batched else 2)
 
     @pl.when((kk1 == 0) & (kk2 == 0))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     def _accum(m1: bool, m2: bool):
-        a = a_ref[...].astype(acc_ref.dtype)          # (bu, b1, b2)
-        x1 = x1_ref[...].astype(acc_ref.dtype)        # (1, b1)
-        x2 = x2_ref[...].astype(acc_ref.dtype)        # (1, b2)
+        a = a_ref[...].astype(acc_ref.dtype)    # (bu, b1, b2)|(bb, bu, b1, b2)
+        x1 = x1_ref[...].astype(acc_ref.dtype)  # (1, b1)     | (bb, b1)
+        x2 = x2_ref[...].astype(acc_ref.dtype)  # (1, b2)     | (bb, b2)
+        off = 1 if batched else 0
         if m1:
             lim1 = n1 - kk1 * b1
-            a = jnp.where(_edge_mask((1, b1, 1), 1, lim1), a, 0)
+            sh = (1,) * (1 + off) + (b1,) + (1,)
+            a = jnp.where(_edge_mask(sh, 1 + off, lim1), a, 0)
             x1 = jnp.where(_edge_mask((1, b1), 1, lim1), x1, 0)
         if m2:
             lim2 = n2 - kk2 * b2
-            a = jnp.where(_edge_mask((1, 1, b2), 2, lim2), a, 0)
+            sh = (1,) * (2 + off) + (b2,)
+            a = jnp.where(_edge_mask(sh, 2 + off, lim2), a, 0)
             x2 = jnp.where(_edge_mask((1, b2), 1, lim2), x2, 0)
+        if batched:
+            w = x1[:, :, None] * x2[:, None, :]       # (bb, b1, b2)
+            acc_ref[...] += jnp.sum(a * w[:, None], axis=(2, 3))[:, :, None]
+            return
         w = x1[0][:, None] * x2[0][None, :]           # (b1, b2)
         acc_ref[...] += jnp.sum(a * w[None], axis=(1, 2), keepdims=False)[:, None]
 
@@ -239,7 +297,7 @@ def _tvc2_pair_body(x1_ref, x2_ref, a_ref, *rest, n1: int, b1: int, n2: int,
 
     @pl.when((kk1 == k1_blocks - 1) & (kk2 == k2_blocks - 1))
     def _emit():
-        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta)
+        _emit_update(acc_ref[...], y_ref, yin_ref, alpha, beta, ab_ref)
 
 
 def _update_operands(y_in, alpha: float, beta: float, out_spec):
@@ -250,6 +308,27 @@ def _update_operands(y_in, alpha: float, beta: float, out_spec):
     if y_in is None or beta == 0.0:
         return (), (), False
     return (y_in,), (out_spec,), True
+
+
+def _update_operands_batched(ab, y_in, alpha: float, beta: float,
+                             ab_spec, out_spec):
+    """(extra_inputs, extra_specs, has_ab, has_y) for a batched epilogue.
+    ``ab`` is the optional per-batch ``(B, 2)`` alpha/beta operand; when
+    present the static alpha/beta are ignored by the body.  With per-batch
+    betas the y operand is required whenever ``ab`` rides along with a y —
+    callers that know their betas are all zero simply pass ``y_in=None``."""
+    if ab is None and beta != 0.0 and y_in is None:
+        raise ValueError("beta != 0 requires a y operand")
+    extra_in, extra_specs = [], []
+    has_ab = ab is not None
+    if has_ab:
+        extra_in.append(ab)
+        extra_specs.append(ab_spec)
+    has_y = y_in is not None and (has_ab or beta != 0.0)
+    if has_y:
+        extra_in.append(y_in)
+        extra_specs.append(out_spec)
+    return tuple(extra_in), tuple(extra_specs), has_ab, has_y
 
 
 def tvc3(
@@ -429,3 +508,205 @@ def tvc2(
         interpret=interpret,
         **kwargs,
     )(x.reshape(1, nk), a2, *extra_in)
+
+
+# ---------------------------------------------------------------------------
+# Batched variants: B independent same-shape contractions, ONE launch each.
+# The leading grid dim walks batch blocks of size bb; per-batch vectors ride
+# as (B, n) operands, the optional per-batch alpha/beta as one (B, 2) block.
+# ---------------------------------------------------------------------------
+
+def tvc3_batched(
+    a3: jax.Array,
+    x: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    bb: int = 1,
+    bu: int = 8,
+    bk: int = 128,
+    bv: int = 128,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    ab: jax.Array | None = None,
+    y_in: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y[z,u,v] = alpha_z * sum_k A[z,u,k,v] x[z,k] + beta_z * y_in[z,u,v]
+    for all B batch rows in ONE launch; ragged dims stream with no padding
+    copies, the batch dim needs no masking at all (out-of-bounds batch rows
+    only feed discarded out-of-bounds output rows)."""
+    prec = get_policy(prec)
+    B, u, nk, v = a3.shape
+    grid = (_cdiv(B, bb), _cdiv(u, bu), _cdiv(v, bv), _cdiv(nk, bk))
+    out_spec = pl.BlockSpec((bb, bu, bv), lambda z, i, j, kk: (z, i, j))
+    ab_spec = pl.BlockSpec((bb, 2), lambda z, i, j, kk: (z, 0))
+    extra_in, extra_specs, has_ab, has_y = _update_operands_batched(
+        ab, y_in, alpha, beta, ab_spec, out_spec)
+    kernel = functools.partial(
+        _tvc3_body, nk=nk, bk=bk, k_blocks=grid[3], mask_k=nk % bk != 0,
+        alpha=alpha, beta=beta, has_y=has_y, has_ab=has_ab, batched=True,
+    )
+    params = _compiler_params(3)
+    kwargs = {"compiler_params": params} if (params and not interpret) else {}
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda z, i, j, kk: (z, kk)),
+            pl.BlockSpec((bb, bu, bk, bv), lambda z, i, j, kk: (z, i, kk, j)),
+            *extra_specs,
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, u, v), prec.storage),
+        scratch_shapes=[pltpu.VMEM((bb, bu, bv), prec.compute)],
+        interpret=interpret,
+        **kwargs,
+    )(x, a3, *extra_in)
+
+
+def tvc2_batched(
+    a2: jax.Array,
+    x: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    bb: int = 1,
+    bu: int = 8,
+    bk: int = 512,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    ab: jax.Array | None = None,
+    y_in: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched k = d-1 matvec: Y[z,u] = alpha_z * sum_k A[z,u,k] x[z,k]
+    + beta_z * y_in[z,u], ONE launch for all B rows."""
+    prec = get_policy(prec)
+    B, u, nk = a2.shape
+    grid = (_cdiv(B, bb), _cdiv(u, bu), _cdiv(nk, bk))
+    out_spec = pl.BlockSpec((bb, bu, 1), lambda z, i, kk: (z, i, 0))
+    ab_spec = pl.BlockSpec((bb, 2), lambda z, i, kk: (z, 0))
+    extra_in, extra_specs, has_ab, has_y = _update_operands_batched(
+        ab, y_in, alpha, beta, ab_spec, out_spec)
+    kernel = functools.partial(
+        _tvc2_body, nk=nk, bk=bk, k_blocks=grid[2], mask_k=nk % bk != 0,
+        alpha=alpha, beta=beta, has_y=has_y, has_ab=has_ab, batched=True,
+    )
+    params = _compiler_params(2)
+    kwargs = {"compiler_params": params} if (params and not interpret) else {}
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda z, i, kk: (z, kk)),
+            pl.BlockSpec((bb, bu, bk), lambda z, i, kk: (z, i, kk)),
+            *extra_specs,
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, u, 1), prec.storage),
+        scratch_shapes=[pltpu.VMEM((bb, bu, 1), prec.compute)],
+        interpret=interpret,
+        **kwargs,
+    )(x, a2, *extra_in)
+
+
+def tvc4_batched(
+    a4: jax.Array,
+    x1: jax.Array,
+    x2: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    bb: int = 1,
+    bu: int = 8,
+    b1: int = 8,
+    b2: int = 8,
+    bv: int = 128,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    ab: jax.Array | None = None,
+    y_in: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched fused pair: Y[z,u,v] = sum_{a,b} A[z,u,a,b,v] x1[z,a] x2[z,b]
+    (+ per-batch alpha/beta/y epilogue), ONE launch for all B rows."""
+    prec = get_policy(prec)
+    B, u, n1, n2, v = a4.shape
+    grid = (_cdiv(B, bb), _cdiv(u, bu), _cdiv(v, bv),
+            _cdiv(n1, b1), _cdiv(n2, b2))
+    out_spec = pl.BlockSpec((bb, bu, bv), lambda z, i, j, a, b: (z, i, j))
+    ab_spec = pl.BlockSpec((bb, 2), lambda z, i, j, a, b: (z, 0))
+    extra_in, extra_specs, has_ab, has_y = _update_operands_batched(
+        ab, y_in, alpha, beta, ab_spec, out_spec)
+    kernel = functools.partial(
+        _tvc4_body, n1=n1, b1=b1, n2=n2, b2=b2,
+        k1_blocks=grid[3], k2_blocks=grid[4],
+        mask_1=n1 % b1 != 0, mask_2=n2 % b2 != 0,
+        alpha=alpha, beta=beta, has_y=has_y, has_ab=has_ab, batched=True,
+    )
+    params = _compiler_params(3, 2)
+    kwargs = {"compiler_params": params} if (params and not interpret) else {}
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, b1), lambda z, i, j, a, b: (z, a)),
+            pl.BlockSpec((bb, b2), lambda z, i, j, a, b: (z, b)),
+            pl.BlockSpec((bb, bu, b1, b2, bv),
+                         lambda z, i, j, a, b: (z, i, a, b, j)),
+            *extra_specs,
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, u, v), prec.storage),
+        scratch_shapes=[pltpu.VMEM((bb, bu, bv), prec.compute)],
+        interpret=interpret,
+        **kwargs,
+    )(x1, x2, a4, *extra_in)
+
+
+def tvc2_pair_batched(
+    a3: jax.Array,
+    x1: jax.Array,
+    x2: jax.Array,
+    *,
+    prec: Precision | str = F32,
+    bb: int = 1,
+    bu: int = 8,
+    b1: int = 8,
+    b2: int = 128,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    ab: jax.Array | None = None,
+    y_in: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched fused-pair chain tail (v == 1): Y[z,u] = sum_{a,b} A[z,u,a,b]
+    x1[z,a] x2[z,b] (+ per-batch alpha/beta/y), ONE launch for all B rows."""
+    prec = get_policy(prec)
+    B, u, n1, n2 = a3.shape
+    grid = (_cdiv(B, bb), _cdiv(u, bu), _cdiv(n1, b1), _cdiv(n2, b2))
+    out_spec = pl.BlockSpec((bb, bu, 1), lambda z, i, a, b: (z, i, 0))
+    ab_spec = pl.BlockSpec((bb, 2), lambda z, i, a, b: (z, 0))
+    extra_in, extra_specs, has_ab, has_y = _update_operands_batched(
+        ab, y_in, alpha, beta, ab_spec, out_spec)
+    kernel = functools.partial(
+        _tvc2_pair_body, n1=n1, b1=b1, n2=n2, b2=b2,
+        k1_blocks=grid[2], k2_blocks=grid[3],
+        mask_1=n1 % b1 != 0, mask_2=n2 % b2 != 0,
+        alpha=alpha, beta=beta, has_y=has_y, has_ab=has_ab, batched=True,
+    )
+    params = _compiler_params(2, 2)
+    kwargs = {"compiler_params": params} if (params and not interpret) else {}
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, b1), lambda z, i, a, b: (z, a)),
+            pl.BlockSpec((bb, b2), lambda z, i, a, b: (z, b)),
+            pl.BlockSpec((bb, bu, b1, b2), lambda z, i, a, b: (z, i, a, b)),
+            *extra_specs,
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, u, 1), prec.storage),
+        scratch_shapes=[pltpu.VMEM((bb, bu, 1), prec.compute)],
+        interpret=interpret,
+        **kwargs,
+    )(x1, x2, a3, *extra_in)

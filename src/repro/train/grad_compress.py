@@ -23,7 +23,7 @@ from functools import reduce
 import jax
 import jax.numpy as jnp
 
-from repro.core.dhopm import hopm3_partial
+from repro.core.dhopm import hopm3_batched, hopm3_partial
 from repro.core.mixed_precision import F32 as PREC_F32, Precision, get_policy
 from repro.dist import collectives as coll
 
@@ -38,6 +38,10 @@ class CompressorCfg:
     max_order: int = 4           # flatten higher-order leaves down to this
     prec: str | Precision = "bf16"   # wire/storage policy for collectives
     ef_dtype: str = "float32"    # error-feedback buffer dtype
+    bucket: bool = True          # batch same-view leaves through ONE
+    #                              hopm3_batched chain per bucket (same
+    #                              iterates as the per-leaf loop; False
+    #                              forces the per-leaf reference path)
 
 
 def _eligible(shape, cfg: CompressorCfg) -> bool:
@@ -114,43 +118,119 @@ def _rank1_outer(xs, lam):
     return lam * out
 
 
+def _compress_leaf(g, s, cfg: CompressorCfg, axis_name: str, prec, p):
+    """The per-leaf reference path: rank-r deflation through
+    :func:`hopm3_partial`, one chain (and one B=1 launch sequence) per
+    leaf."""
+    vshape = _tensor_view(g.shape, cfg)
+    resid = g.astype(F32) + s["e"].astype(F32)       # error feedback
+    resid_v = resid.reshape(vshape)
+    approx = jnp.zeros(vshape, F32)
+    new_xs = []
+    for r in range(cfg.rank):
+        xs0 = [x for x in s["xs"][r]]
+        # local addend of the deflated global tensor: each rank owns 1/p
+        # of the already-extracted components.
+        # impl="mulsum": the bitwise-batchable contraction engine, so the
+        # bucketed scheduler reproduces this path exactly (see
+        # core.tvc._mulsum)
+        xs_r, lam = hopm3_partial(
+            resid_v - approx / p, xs0, axis_name=axis_name,
+            sweeps=cfg.sweeps, impl="mulsum", prec=prec)
+        # lam is the magnitude of the GLOBAL sum; each rank reconstructs
+        # identically and owns 1/p of it for the mean.
+        contrib = _rank1_outer(xs_r, lam)
+        approx = approx + contrib
+        new_xs.append(tuple(x.astype(F32) for x in xs_r))
+    ghat_mean = (approx / p).astype(g.dtype).reshape(g.shape)
+    e_new = (resid_v - approx / p).reshape(g.shape)
+    return ghat_mean, {"xs": tuple(new_xs), "e": e_new.astype(s["e"].dtype)}
+
+
+def _compress_bucket(gs, ss, cfg: CompressorCfg, axis_name: str, prec, p):
+    """One shape bucket of B >= 2 same-view leaves, stacked and compressed
+    through ONE :func:`hopm3_batched` chain per deflation rank — one
+    (batched) contraction launch per chain step for the whole bucket
+    instead of B per-leaf chains.  The batched walker runs the exact same
+    schedule as B per-leaf walkers (stacked delayed reductions dispatch
+    their wire algo on the per-leaf vector size), so the unstacked results
+    match the per-leaf loop bit for bit whenever the reduction is
+    elementwise — psum (storage == compute), recursive doubling, or p == 1;
+    only the ring schedule's payload chunking perturbs the last bit (its
+    chunk boundaries move when B leaves stack)."""
+    B = len(gs)
+    vshape = _tensor_view(gs[0].shape, cfg)
+    resid_b = jnp.stack([
+        (g.astype(F32) + s["e"].astype(F32)).reshape(vshape)
+        for g, s in zip(gs, ss)])
+    approx_b = jnp.zeros((B,) + tuple(vshape), F32)
+    new_xs_b = []
+    for r in range(cfg.rank):
+        xs0 = [jnp.stack([s["xs"][r][m] for s in ss])
+               for m in range(len(vshape))]
+        xs_r, lam = hopm3_batched(
+            resid_b - approx_b / p, xs0, axis_name=axis_name,
+            sweeps=cfg.sweeps, impl="mulsum", prec=prec, partial=True)
+        contrib = jax.vmap(_rank1_outer)(xs_r, lam)
+        approx_b = approx_b + contrib
+        new_xs_b.append([x.astype(F32) for x in xs_r])
+    outs = []
+    for i, (g, s) in enumerate(zip(gs, ss)):
+        ghat_mean = (approx_b[i] / p).astype(g.dtype).reshape(g.shape)
+        e_new = (resid_b[i] - approx_b[i] / p).reshape(g.shape)
+        new_xs = tuple(
+            tuple(new_xs_b[r][m][i] for m in range(len(vshape)))
+            for r in range(cfg.rank))
+        outs.append((ghat_mean,
+                     {"xs": new_xs, "e": e_new.astype(s["e"].dtype)}))
+    return outs
+
+
 def compress_and_sync(grads, state, cfg: CompressorCfg, axis_name: str):
     """grads: local (per-DP-rank) gradient pytree.  Returns
     (synced_mean_grads, new_state, stats).  Must run inside shard_map over
-    ``axis_name``."""
+    ``axis_name``.
+
+    With ``cfg.bucket`` (the default) eligible leaves are grouped by their
+    ``_tensor_view`` shape (and dtypes), each bucket is stacked, and the
+    per-leaf compression loop collapses into one :func:`hopm3_batched` call
+    per bucket — one launch per chain step for dozens of gradient leaves.
+    Single-leaf buckets keep the per-leaf path.  Bucketed results equal the
+    per-leaf loop bitwise whenever the delayed reduction is elementwise
+    (psum when storage == compute, recursive doubling, or p == 1); the ring
+    schedule's payload chunking moves when B leaves stack, so with a
+    low-precision wire on ring-dispatched cells (non-power-of-two p, or
+    n_j past the doubling cutoff) the two paths agree only to rounding."""
     prec = get_policy(cfg.prec)
     p = jax.lax.axis_size(axis_name)
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
     flat_s = treedef.flatten_up_to(state)
-    out_g, out_s = [], []
-    for g, s in zip(flat_g, flat_s):
+    n = len(flat_g)
+    out_g, out_s = [None] * n, [None] * n
+
+    buckets: dict = {}   # view-key -> list of leaf indices, in tree order
+    for i, (g, s) in enumerate(zip(flat_g, flat_s)):
         if not s:  # exact path: mixed-precision all-reduce (paper §5.5)
             total = coll.mp_allreduce(g, axis_name, prec)
-            out_g.append((total / p).astype(g.dtype))
-            out_s.append(s)
+            out_g[i] = (total / p).astype(g.dtype)
+            out_s[i] = s
             continue
-        vshape = _tensor_view(g.shape, cfg)
-        resid = g.astype(F32) + s["e"].astype(F32)       # error feedback
-        resid_v = resid.reshape(vshape)
-        approx = jnp.zeros(vshape, F32)
-        new_xs = []
-        for r in range(cfg.rank):
-            xs0 = [x for x in s["xs"][r]]
-            # local addend of the deflated global tensor: each rank owns 1/p
-            # of the already-extracted components.
-            xs_r, lam = hopm3_partial(
-                resid_v - approx / p, xs0, axis_name=axis_name,
-                sweeps=cfg.sweeps, impl="native", prec=prec)
-            # lam is the magnitude of the GLOBAL sum; each rank reconstructs
-            # identically and owns 1/p of it for the mean.
-            contrib = _rank1_outer(xs_r, lam)
-            approx = approx + contrib
-            new_xs.append(tuple(x.astype(F32) for x in xs_r))
-        ghat_mean = (approx / p).astype(g.dtype).reshape(g.shape)
-        e_new = (resid_v - approx / p).reshape(g.shape)
-        out_g.append(ghat_mean)
-        out_s.append({"xs": tuple(new_xs), "e": e_new.astype(s["e"].dtype)})
+        key = (_tensor_view(g.shape, cfg), jnp.dtype(g.dtype).name,
+               jnp.dtype(s["e"].dtype).name)
+        buckets.setdefault(key, []).append(i)
+
+    for idxs in buckets.values():
+        if cfg.bucket and len(idxs) > 1:
+            results = _compress_bucket(
+                [flat_g[i] for i in idxs], [flat_s[i] for i in idxs],
+                cfg, axis_name, prec, p)
+        else:
+            results = [_compress_leaf(flat_g[i], flat_s[i], cfg, axis_name,
+                                      prec, p) for i in idxs]
+        for i, (ghat, new_s) in zip(idxs, results):
+            out_g[i] = ghat
+            out_s[i] = new_s
 
     new_grads = jax.tree_util.tree_unflatten(treedef, out_g)
     new_state = jax.tree_util.tree_unflatten(treedef, out_s)

@@ -110,6 +110,76 @@ def test_gate_time_implied_traffic_is_engine_and_dispatch_aware():
                 ratio_native=64.0) == []
 
 
+def _batched_cell(B=64, shape=(16, 16, 16), mode=2, dtype="f32", us=100.0,
+                  sep_us=400.0, peak=10.0, **over):
+    itemsize = 4 if dtype == "f32" else 2
+    u = int(np.prod(shape[:mode]))
+    v = int(np.prod(shape[mode + 1:]))
+    one = mm.tvc_streamed_elems(u, shape[mode], v) * itemsize
+    nbytes = B * one
+    gbs = nbytes / (us * 1e-6) / 1e9
+    cell = {
+        "kind": "tvc_batched", "order": len(shape), "mode": mode,
+        "dtype": dtype, "layout": "aligned", "shape": list(shape),
+        "engine": "native-xla", "batch": B, "blocks": [8, 8, 8, 128],
+        "streamed_bytes": nbytes, "us": us, "sep_us": sep_us, "gbs": gbs,
+        "pct_peak": gbs / peak * 100.0, "batched_speedup": sep_us / us,
+        "predicted_speedup": mm.launch_amortized_speedup(B, one, peak,
+                                                         200.0),
+    }
+    cell.update(over)
+    return cell
+
+
+def test_gate_green_with_batched_cells():
+    p = _payload([_cell(), _batched_cell()])
+    assert _run(p, ref=p) == []
+
+
+def test_gate_batched_speedup_geomean():
+    # geomean of (0.5, 0.9) < 1: the batched path lost to B separate
+    # launches -> fail, and the message names both cells' speedups
+    losing = [_batched_cell(us=200.0, sep_us=100.0),
+              _batched_cell(mode=1, us=100.0, sep_us=90.0)]
+    fails = _run(_payload(losing))
+    assert any("geomean" in f for f in fails)
+    # one noisy cell is tolerated as long as the aggregate still wins
+    mixed = [_batched_cell(us=200.0, sep_us=100.0),
+             _batched_cell(mode=1, us=100.0, sep_us=500.0)]
+    assert _run(_payload(mixed)) == []
+    # small-B cells are never speedup-gated (noise-prone)
+    small = [_batched_cell(B=8, us=200.0, sep_us=100.0)]
+    assert _run(_payload(small)) == []
+
+
+def test_gate_batched_predicted_speedup_and_keys():
+    c = _batched_cell(predicted_speedup=0.9)
+    assert any("predicts no win" in f for f in _run(_payload([c])))
+    c = _batched_cell()
+    del c["sep_us"]
+    assert any("missing keys" in f for f in _run(_payload([c])))
+
+
+def test_gate_batched_cells_use_their_own_engine_tag():
+    """A batched cell is ceiling-checked with its OWN engine even inside an
+    interpret-mode smoke payload, and gets exactly ONE dispatch allowance."""
+    # 10 ms on a ~1 MB batched cell (100 MB implied at 10 GB/s) busts the
+    # 32x ceiling with one 200 us (2 MB) allowance
+    slow = _batched_cell(us=10_000.0, sep_us=50_000.0)
+    fails = _run(_payload([slow], engine="pallas-interpret"))
+    assert any("time-implied" in f and "native-xla" in f for f in fails)
+    # B allowances would have forgiven it: 64 * 200 us * 10 GB/s = 128 MB
+    assert _run(_payload([slow], engine="pallas-interpret"),
+                dispatch_us=64 * 200.0) == []
+
+
+def test_gate_batched_predicted_bytes():
+    c = _batched_cell()
+    assert check_bench.predicted_bytes(c) == c["streamed_bytes"]
+    assert check_bench.predicted_bytes(c) == \
+        mm.tvc_batched_streamed_elems(64, 256, 16, 1) * 4
+
+
 def test_gate_runs_green_on_committed_trajectory():
     path = ROOT / "BENCH_TVC.json"
     payload = json.loads(path.read_text())

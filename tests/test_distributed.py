@@ -28,6 +28,7 @@ EXPECTED = [
     "dhopm3_bf16",
     "dp_explicit_matches_gspmd",
     "grad_compression_lowrank_and_ef",
+    "grad_compression_bucketed_bitwise",
     "elastic_reshard_restore",
 ]
 

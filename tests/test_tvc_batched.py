@@ -1,0 +1,322 @@
+"""Batched TVC subsystem coverage: batched-vs-vmap-native allclose oracles
+(orders 3-4, every mode class, f32 + bf16, prime/odd ragged shapes), the
+one-launch-per-chain-step jaxpr guarantee of hopm3_batched (launch count
+independent of B), the per-batch alpha/beta/y epilogue vs the per-leaf
+oracle, batched autotuner/block-table plumbing, batched streamed-bytes
+accounting + the launch-amortization predictor, and the grad_compress
+regression proving bucketed compression is bitwise-equal to the per-leaf
+loop.  No optional deps."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import dhopm as dh
+from repro.core import memory_model as mm
+from repro.core.tvc import tvc as core_tvc, tvc2_batched, tvc_batched
+from repro.kernels import autotune, block_table, ops
+from repro.train import grad_compress as gc
+
+RNG = np.random.default_rng(23)
+
+
+def rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+def _count_pallas(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for item in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(item, "jaxpr", item)
+                if hasattr(inner, "eqns"):
+                    n += _count_pallas(inner)
+    return n
+
+
+# ---- correctness: batched pallas vs the vmap'd native oracle --------------
+
+BATCHED_CASES = [
+    # (B, shape, k): orders 3-4, prime/odd ragged extents, every mode class
+    # (leading, inner, matvec tail) -- odd B exercises partial batch blocks
+    (3, (5, 7, 129), 0),
+    (3, (5, 7, 129), 1),
+    (3, (5, 7, 129), 2),       # tail: batched matvec kernel
+    (5, (3, 5, 7, 2), 0),
+    (5, (3, 5, 7, 2), 2),
+    (5, (3, 5, 7, 2), 3),      # tail
+    (2, (1, 17, 257), 1),      # u = 1 ragged
+    (7, (37, 2, 3), 2),        # singleton-ish dims, tail
+]
+
+
+@pytest.mark.parametrize("B,shape,k", BATCHED_CASES)
+@pytest.mark.parametrize("polname", ["f32", "bf16"])
+def test_tvc_batched_vs_vmap_native(B, shape, k, polname):
+    A = rand((B,) + shape)
+    x = rand((B, shape[k]))
+    if polname == "bf16":
+        A, x = A.astype(jnp.bfloat16), x.astype(jnp.bfloat16)
+    got = tvc_batched(A, x, k, impl="pallas", prec=polname)
+    want = tvc_batched(A, x, k, impl="native", prec=polname)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    tol = 1e-4 if polname == "f32" else 6e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+PAIR_CASES = [
+    (3, (5, 7, 129), 0),       # leading pair, v > 1 (batched tvc4 kernel)
+    (3, (5, 7, 129), 1),       # tail pair, v == 1 (batched chain tail)
+    (5, (3, 5, 7, 2), 0),
+    (5, (3, 5, 7, 2), 2),      # order-4 tail
+]
+
+
+@pytest.mark.parametrize("B,shape,k1", PAIR_CASES)
+@pytest.mark.parametrize("polname", ["f32", "bf16"])
+def test_tvc2_batched_vs_vmap_native(B, shape, k1, polname):
+    A = rand((B,) + shape)
+    x1, x2 = rand((B, shape[k1])), rand((B, shape[k1 + 1]))
+    if polname == "bf16":
+        A, x1, x2 = (t.astype(jnp.bfloat16) for t in (A, x1, x2))
+    got = tvc2_batched(A, x1, k1, x2, k1 + 1, impl="pallas", prec=polname)
+    want = tvc2_batched(A, x1, k1, x2, k1 + 1, impl="native", prec=polname)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    tol = 1e-4 if polname == "f32" else 8e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_mulsum_impl_matches_native():
+    """The bitwise-batchable mulsum engine is the same math as native."""
+    A, x = rand((5, 7, 9)), rand((7,))
+    np.testing.assert_allclose(
+        np.asarray(core_tvc(A, x, 1, impl="mulsum")),
+        np.asarray(core_tvc(A, x, 1, impl="native")), rtol=1e-5, atol=1e-5)
+
+
+# ---- per-batch alpha/beta/y epilogue vs the per-leaf oracle ---------------
+
+@pytest.mark.parametrize("shape,k", [((5, 7, 9), 1), ((5, 7, 9), 2),
+                                     ((3, 5, 7, 2), 1)])
+def test_per_batch_epilogue_vs_per_leaf(shape, k):
+    B = 4
+    A = rand((B,) + shape)
+    x = rand((B, shape[k]))
+    yshape = tuple(s for i, s in enumerate(shape) if i != k)
+    y = rand((B,) + yshape)
+    al = rand((B,))
+    be = rand((B,))
+    got = tvc_batched(A, x, k, alpha=al, beta=be, y=y, impl="pallas")
+    for i in range(B):
+        want = core_tvc(A[i], x[i], k, alpha=float(al[i]), beta=float(be[i]),
+                        y=y[i], impl="native")
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_batched_static_epilogue_and_beta_requires_y():
+    B, shape = 3, (5, 7, 9)
+    A, x, y = rand((B,) + shape), rand((B, 7)), rand((B, 5, 9))
+    got = tvc_batched(A, x, 1, alpha=2.0, beta=-0.5, y=y, impl="pallas")
+    want = tvc_batched(A, x, 1, alpha=2.0, beta=-0.5, y=y, impl="native")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError):
+        ops.tvc_pallas_batched(A.reshape(B, 5, 7, 9), x, beta=1.0)
+    with pytest.raises(ValueError):
+        # per-batch beta cannot be proven zero -> y is required
+        ops.tvc_pallas_batched(A.reshape(B, 5, 7, 9), x, beta=rand((B,)))
+
+
+def test_axpby_batched_per_row():
+    B, n = 5, 37            # ragged, larger than one lane run? keep small
+    x, y = rand((B, n)), rand((B, n))
+    al, be = rand((B,)), rand((B,))
+    got = ops.axpby_pallas_batched(al, x, be, y)
+    want = al[:, None] * x + be[:, None] * y
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # scalar broadcast path
+    got = ops.axpby_pallas_batched(2.0, x, -0.5, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(2.0 * x - 0.5 * y),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---- one launch per chain step, independent of B --------------------------
+
+def _hopm3_batched_launches(B, shape, fuse_pairs):
+    A = rand((B,) + shape)
+    xs = [rand((B, n)) for n in shape]
+    jaxpr = jax.make_jaxpr(lambda A, *xs: dh.hopm3_batched(
+        A, list(xs), sweeps=1, impl="pallas", fuse_pairs=fuse_pairs
+    )[0])(A, *xs)
+    return _count_pallas(jaxpr.jaxpr)
+
+
+def test_hopm3_batched_one_launch_per_chain_step():
+    """Acceptance: the launch count of a batched sweep equals the unbatched
+    hopm3 schedule (9 for d = 4; 7 fused) and is INDEPENDENT of B."""
+    shape = (5, 4, 6, 3)
+    counts = {B: _hopm3_batched_launches(B, shape, False) for B in (1, 2, 5)}
+    assert set(counts.values()) == {9}, counts
+    fused = {B: _hopm3_batched_launches(B, shape, True) for B in (1, 2, 5)}
+    assert set(fused.values()) == {7}, fused
+
+
+def test_hopm3_batched_matches_vmap_hopm3():
+    B, shape = 4, (5, 4, 6, 3)
+    A = rand((B,) + shape)
+    xs0 = [rand((B, n)) for n in shape]
+    for fuse in (False, True):
+        xsb, lamb = dh.hopm3_batched(A, xs0, sweeps=2, impl="pallas",
+                                     fuse_pairs=fuse)
+
+        def one(A_, *x_):
+            xs_, lam_ = dh.hopm3(A_, list(x_), sweeps=2, impl="native",
+                                 fuse_pairs=fuse)
+            return tuple(xs_), lam_
+
+        xsv, lamv = jax.vmap(one)(A, *xs0)
+        np.testing.assert_allclose(np.asarray(lamb), np.asarray(lamv),
+                                   rtol=1e-5, atol=1e-5)
+        for a, b in zip(xsb, xsv):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4)
+
+
+# ---- autotuner: bb dimension + batched table kinds ------------------------
+
+@pytest.mark.parametrize("storage", [jnp.float32, jnp.bfloat16])
+def test_batched_blocks_quanta_and_budget(storage):
+    q = autotune.sublane_quantum(storage)
+    ssz = jnp.dtype(storage).itemsize
+    for B, dims in [(8, (7, 13, 129)), (64, (16, 16, 16)), (3, (1, 1, 1))]:
+        bb, bu, bk, bv = autotune.pick_tvc3_batched_blocks(
+            B, *dims, storage=storage)
+        assert 1 <= bb <= B
+        assert bu % 8 == 0 and bk % q == 0 and bv % autotune.LANE == 0
+        assert 2 * bb * bu * bk * bv * ssz <= autotune.vmem_budget()
+        bb2, bu2, bk2 = autotune.pick_tvc2_batched_blocks(
+            B, dims[0], dims[1], storage=storage)
+        assert 1 <= bb2 <= B and bu2 % q == 0 and bk2 % autotune.LANE == 0
+
+
+def test_batched_bb_grows_with_budget():
+    """The whole VMEM budget is spent across bb tiles: a small cell gets a
+    large batch block, and a tiny budget collapses bb back to 1."""
+    bb, *_ = autotune.pick_tvc3_batched_blocks(64, 8, 8, 16)
+    assert bb > 1
+    bb_small, *rest = autotune.pick_tvc3_batched_blocks(
+        64, 8, 8, 16, budget=16 * 1024)
+    assert bb_small <= bb
+
+
+@pytest.fixture
+def clean_table():
+    block_table.clear()
+    yield
+    block_table.clear()
+
+
+def test_batched_table_kind_is_consulted(clean_table):
+    dims = (8, 8, 8, 16)
+    heur = autotune.pick_tvc3_batched_blocks(*dims, table=False)
+    pinned = (2, 8, 8, 128)
+    assert pinned != heur
+    block_table.pin(block_table.entry("tvc3_batched", dims, pinned,
+                                      jnp.float32, gbs=99.0))
+    assert autotune.pick_tvc3_batched_blocks(*dims) == pinned
+    # unbatched lookups never see batched entries
+    assert autotune.pick_tvc3_blocks(8, 8, 16) == \
+        autotune.pick_tvc3_blocks(8, 8, 16, table=False)
+
+
+# ---- memory model: batched accounting + launch amortization ---------------
+
+def test_batched_streamed_elems_scale_linearly():
+    for (b, u, nk, v) in [(8, 16, 16, 16), (64, 5, 7, 1), (1, 3, 4, 5)]:
+        assert mm.tvc_batched_streamed_elems(b, u, nk, v) == \
+            b * mm.tvc_streamed_elems(u, nk, v)
+        assert mm.tvc2_batched_streamed_elems(b, u, nk, v, 3) == \
+            b * mm.tvc2_streamed_elems(u, nk, v, 3)
+
+
+def test_launch_amortized_speedup_regimes():
+    # dispatch-dominated small cell: speedup -> B
+    tiny = mm.launch_amortized_speedup(64, 16 * 1024, 10.0, 200.0)
+    assert tiny > 10.0
+    # stream-dominated big cell: speedup -> 1
+    big = mm.launch_amortized_speedup(64, 4 * 1024 ** 3, 10.0, 200.0)
+    assert 1.0 < big < 1.05
+    # monotone in B
+    s8 = mm.launch_amortized_speedup(8, 1024 ** 2, 10.0, 200.0)
+    s64 = mm.launch_amortized_speedup(64, 1024 ** 2, 10.0, 200.0)
+    assert 1.0 < s8 < s64 < 64.0
+
+
+# ---- grad_compress: bucketed == per-leaf, bitwise -------------------------
+
+def _run_compress(cfg, grads, state, mesh):
+    def body(g, s):
+        ng, ns, _ = gc.compress_and_sync(g, s, cfg, "dp")
+        return ng, ns
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                       out_specs=(P(), P()), check_vma=False)
+    return jax.jit(fn)(grads, state)
+
+
+def test_grad_compress_bucketed_is_bitwise_equal():
+    """Acceptance: the shape-bucketed scheduler (one hopm3_batched chain per
+    bucket) reproduces the per-leaf loop bit for bit — same seeds, same
+    factors, same error-feedback state."""
+    cfg = gc.CompressorCfg(rank=2, sweeps=2, min_size=16, prec="f32")
+    rng = np.random.default_rng(7)
+
+    def r(s):
+        return jnp.asarray(rng.normal(size=s).astype(np.float32))
+
+    params = {
+        "wq": r((8, 12)), "wk": r((8, 12)), "wv": r((8, 12)),   # bucket of 3
+        "mlp": r((6, 5, 4)),                                    # singleton
+        "bias": r((3,)),                                        # exact path
+    }
+    grads = {k: r(v.shape) for k, v in params.items()}
+    state = gc.init_state(params, cfg, seed=0)
+    mesh = jax.make_mesh((1,), ("dp",))
+
+    g1, s1 = _run_compress(cfg, grads, state, mesh)
+    g0, s0 = _run_compress(dataclasses.replace(cfg, bucket=False),
+                           grads, state, mesh)
+    for a, b in zip(jax.tree.leaves((g1, s1)), jax.tree.leaves((g0, s0))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_compress_bucketed_compresses():
+    """Bucketed compression still actually compresses: the rank-r
+    reconstruction plus error feedback is exact (g_hat + e == resid)."""
+    cfg = gc.CompressorCfg(rank=2, sweeps=2, min_size=16, prec="f32")
+    rng = np.random.default_rng(9)
+
+    def r(s):
+        return jnp.asarray(rng.normal(size=s).astype(np.float32))
+
+    params = {"a": r((8, 12)), "b": r((8, 12))}
+    grads = {k: r(v.shape) for k, v in params.items()}
+    state = gc.init_state(params, cfg, seed=1)
+    mesh = jax.make_mesh((1,), ("dp",))
+    g1, s1 = _run_compress(cfg, grads, state, mesh)
+    for k in params:
+        recon = np.asarray(g1[k]) + np.asarray(s1[k]["e"])
+        np.testing.assert_allclose(recon, np.asarray(grads[k]),
+                                   rtol=1e-5, atol=1e-5)
