@@ -40,6 +40,18 @@ even under ``--smoke``, and each carries its own ``engine`` tag.  The CI
 gate requires the geometric mean of ``batched_speedup`` over the B >= 16
 cells to exceed 1: one batched launch must measurably beat B separate
 launches where the launch-amortization model says it must.
+
+Schema 4 adds *whole-algorithm batched* cells (``kind: "dhopm3_batched"``):
+B complete split dHOPM_3 power-iteration chains run in lockstep through the
+split-aware batched walker — ``launches`` batched contraction launches per
+sweep (:func:`repro.core.memory_model.dhopm_launches_per_sweep`,
+independent of B and jaxpr-asserted in the tests) — timed against B
+separate ``dhopm3`` runs inside one jit.  ``streamed_bytes`` comes from the
+:func:`repro.core.memory_model.simulate_sweep` closed form (B x the
+per-tensor sweep, ``split_alive=True`` — the split schedule is structural
+even at p = 1), and the gate grants these cells ``launches`` dispatch
+allowances instead of one (their unbatched equivalent would get
+B x launches).
 """
 from __future__ import annotations
 
@@ -53,10 +65,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tvc, tvc2, tvc2_bytes, tvc_batched, tvc_bytes
+from repro.core.dhopm import dhopm3, dhopm3_batched
 from repro.core.memory_model import (
+    dhopm_launches_per_sweep,
     fused_pair_saving,
     launch_amortized_speedup,
     pad_overhead,
+    simulate_sweep,
 )
 from repro.core.mixed_precision import get_policy
 from repro.core.tvc import mode_uv
@@ -87,6 +102,20 @@ SMOKE_BATCH_SHAPES = {"aligned": (8, 8, 16), "ragged": (5, 7, 9)}
 BATCH_SIZES = (8, 64)
 BATCH_MODES = (1, 2)
 SMOKE_BATCH_DTYPES = ("f32",)
+
+# dhopm3_batched cells (schema 4): B whole split dHOPM_3 chains per mesh in
+# ONE launch sequence (launch count per sweep independent of B) vs B
+# separate dhopm3 runs inside one jit.  Hypersquare shapes so the
+# simulate_sweep closed form prices the streamed bytes; deliberately small
+# (the dispatch-dominated regime the batched walker exists for); split at
+# the paper-recommended s = d-1; p = 1 mesh so the cells run on any host
+# (the split schedule is structural — it gates fusion and takes the Eq. 2
+# slice path even at p = 1, priced with split_alive=True).
+DHOPM_SHAPE = (8, 8, 8, 8)
+SMOKE_DHOPM_SHAPE = (4, 4, 4, 4)
+DHOPM_BATCH_SIZES = (8, 64)
+SMOKE_DHOPM_BATCH_SIZES = (8,)
+DHOPM_SWEEPS = 1
 
 
 def _engine(smoke: bool) -> str:
@@ -268,9 +297,77 @@ def run(smoke: bool = False, out_path=None):
                         f"tvckB{B}_d{d}m{k}_{polname}_{layout}", t * 1e6,
                         f"{gbs:.2f}GB/s;x{t_sep / t:.1f}vs{B}sep"))
 
+    # dhopm3_batched cells: B whole split dHOPM_3 power-iteration chains in
+    # lockstep — one (batched) contraction launch per chain position — vs B
+    # separate dhopm3 runs in one jit (the per-tensor loop the batched
+    # walker replaces).  Same engine policy as the batched TVC cells.
+    mesh1 = jax.make_mesh((1,), ("x",))
+    d_shape = SMOKE_DHOPM_SHAPE if smoke else DHOPM_SHAPE
+    d_batches = SMOKE_DHOPM_BATCH_SIZES if smoke else DHOPM_BATCH_SIZES
+    dd = len(d_shape)
+    s_split = dd - 1
+    prec_f32 = get_policy("f32")
+    algo_of = {False: "hopm3", True: "hopm3_fused"}
+    for B in d_batches:
+        Ab = rand_tensor((B,) + d_shape, dtype=prec_f32.storage, seed=dd)
+        xsb = [rand_tensor((B, n), dtype=prec_f32.storage, seed=400 + j)
+               for j, n in enumerate(d_shape)]
+        for fused in (False, True):
+            fn_b = jax.jit(lambda A, *xs, f=fused: dhopm3_batched(
+                A, list(xs), mesh1, "x", s=s_split, sweeps=DHOPM_SWEEPS,
+                impl=impl_b, fuse_pairs=f)[0])
+
+            def sep(A, *xs, f=fused, B=B):
+                outs = []
+                for i in range(B):
+                    o, _ = dhopm3(A[i], [x[i] for x in xs], mesh1, "x",
+                                  s=s_split, sweeps=DHOPM_SWEEPS,
+                                  impl=impl_b, fuse_pairs=f)
+                    outs.append(o)
+                return outs
+
+            fn_sep = jax.jit(sep)
+            t = time_fn(fn_b, Ab, *xsb, reps=3 if smoke else 5)
+            t_sep = time_fn(fn_sep, Ab, *xsb, reps=3 if smoke else 5,
+                            warmup=1)
+            launches = DHOPM_SWEEPS * dhopm_launches_per_sweep(
+                dd, s_split, fused)
+            one_chain = int(DHOPM_SWEEPS * simulate_sweep(
+                d_shape[0], dd, 1, s_split, algo_of[fused],
+                split_alive=True)) * prec_f32.storage_bytes
+            nbytes = B * one_chain
+            gbs = nbytes / t / 1e9
+            cells.append({
+                "kind": "dhopm3_batched",
+                "order": dd,
+                "mode": s_split,
+                "dtype": "f32",
+                "layout": "aligned",
+                "shape": list(d_shape),
+                "engine": engine_b,
+                "batch": B,
+                "sweeps": DHOPM_SWEEPS,
+                "p": 1,
+                "split": s_split,
+                "fused": fused,
+                "launches": launches,
+                "blocks": [],
+                "streamed_bytes": nbytes,
+                "us": t * 1e6,
+                "sep_us": t_sep * 1e6,
+                "gbs": gbs,
+                "pct_peak": gbs / peak * 100.0,
+                "batched_speedup": t_sep / t,
+                "predicted_speedup": launch_amortized_speedup(
+                    B, one_chain, peak, launches * dispatch_us),
+            })
+            lines.append(emit(
+                f"dhopm3B{B}_d{dd}s{s_split}{'f' if fused else 'u'}",
+                t * 1e6, f"{launches}launches;x{t_sep / t:.1f}vs{B}sep"))
+
     payload = {
         "meta": {
-            "schema": 3,
+            "schema": 4,
             "engine": engine,
             "backend": jax.default_backend(),
             "jax": jax.__version__,

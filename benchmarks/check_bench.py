@@ -33,9 +33,10 @@ Three checks, strictest first:
    (``--dispatch-us * peak`` — the ROADMAP caveat: small-tensor cells are
    dispatch-dominated and must not be judged as bandwidth), must not exceed
    ``prediction * ratio``.  Batched cells get exactly ONE dispatch
-   allowance for the whole batch — the per-launch ceiling of the unbatched
-   equivalent would grant B of them, so a batched cell that needs more than
-   one is slower than B separate launches and fails.  The ratio is per engine: ``--ratio-pallas``
+   allowance per launch (one for a ``tvc_batched`` cell; ``launches`` for a
+   whole-algorithm ``dhopm3_batched`` cell) — the per-launch ceiling of the
+   unbatched equivalent would grant B times as many, so a batched cell that
+   needs more is slower than B separate launches and fails.  The ratio is per engine: ``--ratio-pallas``
    (default 2.0: at least 50% of STREAM, the paper's native-algorithm
    floor) on TPU, ``--ratio-native`` (default 32.0: the XLA einsum proxy is
    not the kernel — this only catches catastrophic regressions; the
@@ -57,6 +58,7 @@ import pathlib
 import sys
 
 from repro.core.memory_model import (
+    simulate_sweep_batched,
     tvc2_streamed_elems,
     tvc_batched_streamed_elems,
     tvc_streamed_elems,
@@ -74,7 +76,13 @@ KIND_KEYS = {
     # untimed run-level engine and dodge the time-implied ceiling
     "tvc_batched": ("engine", "batch", "sep_us", "batched_speedup",
                     "predicted_speedup"),
+    # whole-algorithm batched cells: B split dHOPM_3 chains per launch
+    # sequence; "launches" feeds the per-cell dispatch allowance
+    "dhopm3_batched": ("engine", "batch", "sweeps", "p", "split", "fused",
+                       "launches", "sep_us", "batched_speedup",
+                       "predicted_speedup"),
 }
+BATCHED_KINDS = ("tvc_batched", "dhopm3_batched")
 TIMED_ENGINES = ("pallas", "native-xla")
 
 #: per-launch dispatch allowance shared by the gate's --dispatch-us default
@@ -88,6 +96,14 @@ def predicted_bytes(cell: dict) -> int:
     shape = tuple(cell["shape"])
     k = cell["mode"]
     itemsize = get_policy(cell["dtype"]).storage_bytes
+    if cell["kind"] == "dhopm3_batched":
+        # hypersquare closed form; split_alive=True — the runtime walkers
+        # keep the split schedule even at p = 1
+        per_sweep = simulate_sweep_batched(
+            cell["batch"], shape[0], cell["order"], cell["p"],
+            cell["split"], "hopm3_fused" if cell["fused"] else "hopm3",
+            split_alive=True)
+        return int(cell["sweeps"] * per_sweep) * itemsize
     if cell["kind"] == "tvc2":
         u = math.prod(shape[:k])
         n1, n2 = shape[k], shape[k + 1]
@@ -152,7 +168,7 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                 f"(fused_saving={c['fused_saving']})")
         if c["kind"] == "tvc" and c["pad_overhead"] < 1.0:
             fails.append(f"{name}: pad_overhead {c['pad_overhead']} < 1")
-        if c["kind"] == "tvc_batched":
+        if c["kind"] in BATCHED_KINDS:
             if not c["predicted_speedup"] > 1.0:
                 fails.append(
                     f"{name}: launch-amortization model predicts no win "
@@ -169,11 +185,12 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
             if cell_engine == "native-xla" and c["dtype"] not in ("f32",):
                 cell_ratio *= lowprec_factor   # CPU XLA emulates bf16/f16
             implied = c["us"] * 1e-6 * peak * 1e9       # bytes at STREAM peak
-            # ONE dispatch allowance per cell — for a batched cell that is
-            # the whole point: the unbatched equivalent of its B launches
-            # would be granted B allowances, so fitting under one proves
-            # the batch amortized the other B-1 away.
-            allowance = dispatch_us * 1e-6 * peak * 1e9
+            # ONE dispatch allowance per LAUNCH in the cell — for a batched
+            # cell that is the whole point: the unbatched equivalent of its
+            # B launches would be granted B allowances (B x launches for a
+            # whole-algorithm dhopm3_batched cell), so fitting under the
+            # batched launch count proves the batch amortized the rest away.
+            allowance = c.get("launches", 1) * dispatch_us * 1e-6 * peak * 1e9
             if implied - allowance > pred * cell_ratio:
                 fails.append(
                     f"{name}: time-implied traffic {implied / 1e6:.2f} MB "
@@ -185,7 +202,7 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
     # (one batched launch vs B separate ones, same engine per cell;
     # aggregated so a single timer-noise cell cannot flip CI)
     sp = [c["batched_speedup"] for c in cells
-          if c.get("kind") == "tvc_batched"
+          if c.get("kind") in BATCHED_KINDS
           and c.get("batch", 0) >= speedup_min_batch]
     if sp:
         geomean = math.exp(sum(math.log(max(s, 1e-9)) for s in sp) / len(sp))

@@ -98,12 +98,39 @@ def _install_partitionable_threefry() -> None:
         pass
 
 
+def _install_optimization_barrier_batching() -> None:
+    # ``lax.optimization_barrier`` is the identity on values, but on jax
+    # versions in our support range it has no vmap batching rule, so any
+    # barriered code path (the mulsum engine's fusion islands, dHOPM's
+    # iterate barriers) would crash under jax.vmap.  The rule is trivial:
+    # apply the barrier to the batched values, pass the batch dims through.
+    try:
+        from jax._src.interpreters import batching
+        from jax._src.lax import control_flow
+        prim = control_flow.optimization_barrier_p
+    except (ImportError, AttributeError):  # pragma: no cover
+        try:
+            from jax.interpreters import batching
+            from jax._src import lax as _lax_src
+            prim = _lax_src.optimization_barrier_p
+        except (ImportError, AttributeError):
+            return
+    if prim in batching.primitive_batchers:
+        return
+
+    def _rule(args, dims, **params):
+        return prim.bind(*args, **params), dims
+
+    batching.primitive_batchers[prim] = _rule
+
+
 def install() -> None:
     _install_shard_map()
     _install_axis_type()
     _install_make_mesh()
     _install_axis_size()
     _install_partitionable_threefry()
+    _install_optimization_barrier_batching()
 
 
 install()

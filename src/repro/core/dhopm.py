@@ -28,13 +28,19 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import collectives as coll
-from .dtvc import ShardState, dtvc2_local, dtvc_local
+from .dtvc import (
+    ShardState,
+    dtvc2_local,
+    dtvc2_local_batched,
+    dtvc_local,
+    dtvc_local_batched,
+)
 from .mixed_precision import F32, Precision, get_policy
-from .tvc import tvc2_batched, tvc_batched
+from .tvc import _tree_sum_last
 
 __all__ = [
-    "hopm_classic", "hopm3", "dhopm3", "hopm3_partial", "hopm3_batched",
-    "rank1", "rank1_residual",
+    "hopm_classic", "hopm3", "dhopm3", "hopm3_partial", "hopm3_sharded",
+    "hopm3_batched", "dhopm3_batched", "rank1", "rank1_residual",
 ]
 
 _EPS = 1e-30
@@ -42,15 +48,17 @@ _EPS = 1e-30
 
 def _norm(v, compute):
     v = v.astype(compute)
-    return jnp.sqrt(jnp.sum(v * v) + _EPS)
+    return jnp.sqrt(_tree_sum_last(v * v) + _EPS)
 
 
 def _norm_batched(v, compute):
-    """Per-batch-row norms of a (B, n) stack — same summation order per row
-    as :func:`_norm` on each row alone (the bucketed/per-leaf bitwise
-    oracle depends on that)."""
+    """Per-batch-row norms of a (B, n) stack — literally the same
+    elementwise add tree per row as :func:`_norm` on each row alone (the
+    batched/per-leaf bitwise oracles depend on that; see
+    :func:`repro.core.tvc._tree_sum_last` for why ``jnp.sum`` cannot give
+    it)."""
     v = v.astype(compute)
-    return jnp.sqrt(jnp.sum(v * v, axis=1) + _EPS)
+    return jnp.sqrt(_tree_sum_last(v * v) + _EPS)
 
 
 def _hopm_sweeps(
@@ -136,8 +144,16 @@ def _hopm_sweeps(
                 vec = coll.mp_allreduce(vec, axis_name, prec)       # Σ_p
             elif st.split is not None:
                 vec = coll.all_gather_tiled(vec, axis_name, axis=0)  # ⊔_p
+            # The barrier pins the external-iteration boundary: without it
+            # XLA may fuse the reduction/normalization into its producers
+            # differently in the batched and per-sample programs, drifting
+            # the last bit — the cross-walker bitwise oracle (and the
+            # bucketed-vs-per-leaf grad_compress guarantee) depends on both
+            # walkers normalizing an identically-isolated vector.
+            vec = lax.optimization_barrier(vec)
             lam = _norm(vec, prec.compute)
-            xs[j] = (vec.astype(prec.compute) / lam).astype(prec.storage)
+            xs[j] = lax.optimization_barrier(
+                (vec.astype(prec.compute) / lam).astype(prec.storage))
     return xs, lam
 
 
@@ -181,6 +197,7 @@ def _hopm_sweeps_batched(
     xs: Sequence[jax.Array],
     *,
     sweeps: int,
+    split: int | None,
     partial_in: bool,
     axis_name: str | None,
     impl: str,
@@ -188,45 +205,54 @@ def _hopm_sweeps_batched(
     fuse_pairs: bool = False,
 ):
     """The three-buffer chain walker over a stacked batch ``A_b[B, n_0..]``
-    of independent same-shape tensors: identical schedule to
+    of independent same-shape tensors (or shards): identical schedule to
     :func:`_hopm_sweeps` (three buffers, W prefix cache, optional fused
-    pairs), but every contraction is ONE *batched* TVC — with
-    ``impl="pallas"`` one kernel launch per chain position covers all B
-    tensors, so a sweep's launch count is independent of B.
+    pairs, 1-D split state machine), but every contraction is ONE *batched*
+    TVC — with ``impl="pallas"`` one kernel launch per chain position covers
+    all B tensors, so a sweep's launch count is independent of B.
 
-    No 1-D split support (batched consumers stack full-shape leaves); the
-    Eq. 2 *partial-summand* mode is supported — ``partial_in=True`` runs the
-    delayed reduction as one stacked ``mp_allreduce`` per external
-    iteration, dispatched on the **per-leaf** vector size so the schedule
-    (and its rounding behaviour) matches B separate per-leaf reductions.
-    Returns (xs[B, n_j] list, lam[B]).
+    ``split`` is the per-sample 1-D split dim of Algorithm 1 (each process
+    holds B stacked same-shape slices of B global tensors): the split-mode
+    chain takes the Eq. 2 slice path (one stacked ``dynamic_slice`` of the
+    per-batch vectors), split/partial liveness rides the same
+    :class:`~repro.core.dtvc.ShardState` machine as the unbatched walker —
+    including the W-cache boundary — and the delayed reduction per external
+    iteration is ONE stacked collective: ``mp_allreduce`` when the chain
+    consumed the split (or for ``partial_in`` Eq. 2 summands), a tiled
+    all-gather of the ``(B, n_j/p)`` stack when iteration j *is* the split.
+    Reduction algos are dispatched on the **per-leaf** vector size n_j, not
+    B * n_j, so the wire schedule (and its rounding behaviour) matches B
+    separate per-leaf reductions.  Returns (xs[B, n_j] list, lam[B]).
 
-    NOTE: the chain schedule below (three buffers, W capture, fused-pair
-    gating) deliberately mirrors :func:`_hopm_sweeps` minus the split
-    bookkeeping; a change to either walker's schedule predicates must be
-    mirrored in the other — ``test_hopm3_batched_matches_vmap_hopm3`` and
-    the grad_compress bitwise regressions are the drift canaries."""
+    NOTE: the chain schedule below (three buffers, W capture, fused-pair /
+    split gating) deliberately mirrors :func:`_hopm_sweeps`; a change to
+    either walker's schedule predicates must be mirrored in the other —
+    ``test_hopm3_batched_matches_vmap_hopm3``, the dhopm3_batched bitwise
+    dist checks, and the grad_compress bitwise regressions are the drift
+    canaries."""
     d = A_b.ndim - 1
     xs = list(xs)
+    st0 = ShardState(split=split, partial=partial_in)
     A_modes = tuple(range(d))
     B = A_b.shape[0]
     lam = jnp.ones((B,), prec.compute)
-    W = None  # (array, modes): A_b contracted along 0..j-1
+    W = None  # (array, modes, state): A_b contracted along 0..j-1
 
     p = None
-    if partial_in:
+    if partial_in or split is not None:
         if axis_name is None:
-            raise ValueError("partial summands need a mesh axis to reduce")
+            raise ValueError(
+                "partial summands / a 1-D split need a mesh axis to reduce")
         p = coll._axis_size(axis_name)
 
     for _ in range(sweeps):
         W = None
         for j in range(d):
             if j >= 2 and W is not None:
-                cur, modes = W
+                cur, modes, st = W
                 chain = [j - 1] + list(range(j + 1, d))
             else:
-                cur, modes = A_b, A_modes
+                cur, modes, st = A_b, A_modes, st0
                 chain = [m for m in range(d) if m != j]
 
             new_W = None
@@ -235,39 +261,78 @@ def _hopm_sweeps_batched(
                 m = chain[idx]
                 nxt = chain[idx + 1] if idx + 1 < len(chain) else None
                 k_local = modes.index(m)
-                do_fuse = fuse_pairs and nxt == m + 1
+                hit_m = st.split is not None and k_local == st.split
+                do_fuse = fuse_pairs and nxt == m + 1 and not hit_m
                 if do_fuse:
+                    hit_n = st.split is not None and \
+                        modes.index(nxt) == st.split
                     done_after_first = (set(range(d)) - set(modes)) | {m}
-                    do_fuse = not (j >= 1 and done_after_first
-                                   == set(range(j)))
+                    captures_W = j >= 1 and done_after_first == set(range(j))
+                    do_fuse = not hit_n and not captures_W
                 if do_fuse:
-                    cur = tvc2_batched(cur, xs[m], k_local, xs[nxt],
-                                       k_local + 1, impl=impl, prec=prec)
+                    # ONE batched launch for the adjacent pair of all B shards
+                    cur, st = dtvc2_local_batched(
+                        cur, xs[m], k_local, xs[nxt], st, impl=impl,
+                        prec=prec)
                     modes = tuple(mm for mm in modes if mm not in (m, nxt))
                     idx += 2
                 else:
-                    cur = tvc_batched(cur, xs[m], k_local, impl=impl,
-                                      prec=prec)
+                    cur, st = dtvc_local_batched(
+                        cur, xs[m], k_local, st, axis_name=axis_name,
+                        impl=impl, prec=prec)
                     modes = tuple(mm for mm in modes if mm != m)
                     idx += 1
                 if j >= 1 and set(range(d)) - set(modes) == set(range(j)):
-                    new_W = (cur, modes)
+                    new_W = (cur, modes, st)
             W = new_W if new_W is not None else W
 
             # Delayed reduction: ONE stacked collective for the whole batch
             # (algo picked from the per-leaf size n_j, not B * n_j, so the
             # wire schedule matches B separate per-leaf reductions).
-            vec = cur  # (B, n_j)
-            if partial_in:
+            vec = cur  # (B, n_j) — or (B, n_j/p) local slices when j == split
+            if st.partial:
                 vec = coll.mp_allreduce(
                     vec, axis_name, prec,
                     algo=("auto" if jnp.dtype(prec.storage)
                           == jnp.dtype(prec.compute)
                           else coll.allreduce_algo(vec.shape[-1], p)))
+            elif st.split is not None:
+                vec = coll.all_gather_tiled(vec, axis_name, axis=1)  # ⊔_p
+            # Same external-iteration barrier as _hopm_sweeps (see there):
+            # both walkers must normalize an identically-isolated vector or
+            # cross-program fusion drifts the last bit of the iterates.
+            vec = lax.optimization_barrier(vec)
             lam = _norm_batched(vec, prec.compute)
-            xs[j] = (vec.astype(prec.compute)
-                     / lam[:, None]).astype(prec.storage)
+            xs[j] = lax.optimization_barrier(
+                (vec.astype(prec.compute)
+                 / lam[:, None]).astype(prec.storage))
     return xs, lam
+
+
+def hopm3_sharded(
+    A_loc: jax.Array,
+    xs: Sequence[jax.Array],
+    *,
+    axis_name: str,
+    split: int,
+    sweeps: int = 1,
+    impl: str = "native",
+    prec: Precision | str = F32,
+    fuse_pairs: bool = False,
+):
+    """The per-shard body of :func:`dhopm3` (Algorithm 1 over a 1-D split)
+    for callers already *inside* a shard_map manual region over
+    ``axis_name``: ``A_loc`` is this process's slice of the global tensor
+    along local dim ``split``.  Communication per external iteration: one
+    delayed n_j-sized collective (``mp_allreduce`` for j != split, tiled
+    all-gather for j == split).  This is the split-leaf engine of
+    ``train.grad_compress`` (sharded gradients compressed in place)."""
+    prec = get_policy(prec)
+    return _hopm_sweeps(
+        A_loc, xs, sweeps=sweeps, split=split, partial_in=False,
+        axis_name=axis_name, impl=impl, prec=prec, three_buffer=True,
+        fuse_pairs=fuse_pairs,
+    )
 
 
 def hopm3_batched(
@@ -279,6 +344,7 @@ def hopm3_batched(
     prec: Precision | str = F32,
     fuse_pairs: bool = False,
     partial: bool = False,
+    split: int | None = None,
     axis_name: str | None = None,
 ):
     """dHOPM_3 over a *batch* of B stacked order-d tensors
@@ -292,11 +358,24 @@ def hopm3_batched(
     ``partial=True`` is the stacked Eq. 2 setting (every rank holds one
     addend of each tensor in the batch): one ``mp_allreduce`` of the stacked
     ``(B, n_j)`` vector per external iteration, inside a shard_map region
-    over ``axis_name``.  Returns (xs, lam[B])."""
+    over ``axis_name``.
+
+    ``split=s`` is the stacked *1-D split* setting of Algorithm 1 proper
+    (every rank holds B same-shape slices along per-sample dim ``s``): the
+    batched walker runs the Eq. 2 slice path at the split mode, tracks the
+    split across the W-cache boundary exactly like the unbatched
+    :func:`_hopm_sweeps`, and gathers the j == s iterate with one tiled
+    all-gather of the ``(B, n_j/p)`` stack.  Mutually exclusive with
+    ``partial``; must run inside a shard_map region over ``axis_name``
+    (:func:`dhopm3_batched` is the global-array wrapper).
+    Returns (xs, lam[B])."""
     prec = get_policy(prec)
+    if partial and split is not None:
+        raise ValueError(
+            "partial summands and a 1-D split are mutually exclusive modes")
     return _hopm_sweeps_batched(
-        A_b, xs, sweeps=sweeps, partial_in=partial, axis_name=axis_name,
-        impl=impl, prec=prec, fuse_pairs=fuse_pairs,
+        A_b, xs, sweeps=sweeps, split=split, partial_in=partial,
+        axis_name=axis_name, impl=impl, prec=prec, fuse_pairs=fuse_pairs,
     )
 
 
@@ -343,6 +422,61 @@ def dhopm3(
         check_vma=False,
     )
     return jax.jit(fn)(A, *xs)
+
+
+def dhopm3_batched(
+    A_b: jax.Array,
+    xs: Sequence[jax.Array],
+    mesh: jax.sharding.Mesh,
+    axis_name: str = "model",
+    s: int | None = None,
+    *,
+    sweeps: int = 1,
+    impl: str = "native",
+    prec: Precision | str = F32,
+    fuse_pairs: bool = False,
+):
+    """The paper's distributed HOPM (Algorithm 1) over a *batch* of B
+    stacked order-d tensors ``A_b[B, n_0..n_{d-1}]``, each 1-D split along
+    per-sample dim ``s`` over the mesh axis: dHOPM_3 itself batches B
+    same-shape split tensors per mesh, one (batched) contraction launch per
+    chain position — launch count per sweep independent of B (the
+    :func:`~repro.core.memory_model.dhopm_launches_per_sweep` schedule),
+    while communication stays at Algorithm 1's one delayed n_j-sized
+    collective per external iteration (stacked: ``(B, n_j)`` payloads, algo
+    dispatched on the per-leaf n_j).
+
+    ``s`` defaults to d-1 — the paper's recommendation (minimal streamed
+    memory, Eq. 6).  ``A_b.shape[s + 1]`` (the per-sample extent of dim
+    ``s``) must divide the axis size.  Iterates match B independent
+    :func:`dhopm3` runs — bitwise under the ``mulsum`` engine, whose batched
+    accumulation order is identical to the per-sample one."""
+    prec = get_policy(prec)
+    d = A_b.ndim - 1
+    if s is None:
+        s = d - 1
+    p = mesh.shape[axis_name]
+    if A_b.shape[s + 1] % p:
+        raise ValueError(
+            f"per-sample dim {s} ({A_b.shape[s + 1]}) not divisible by p={p}")
+
+    in_A = P(*([None] + [axis_name if i == s else None for i in range(d)]))
+
+    def body(a_loc, *xs_in):
+        out_xs, lam = _hopm_sweeps_batched(
+            a_loc, list(xs_in), sweeps=sweeps, split=s, partial_in=False,
+            axis_name=axis_name, impl=impl, prec=prec, fuse_pairs=fuse_pairs,
+        )
+        return tuple(out_xs), lam
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(in_A,) + tuple(P() for _ in xs),
+        out_specs=(tuple(P() for _ in xs), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)(A_b, *xs)
 
 
 def rank1(xs: Sequence[jax.Array], lam=1.0):

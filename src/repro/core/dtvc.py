@@ -25,9 +25,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist import collectives as coll
 from .mixed_precision import F32, Precision, get_policy
-from .tvc import tvc, tvc2, tvc_shape
+from .tvc import tvc, tvc2, tvc2_batched, tvc_batched, tvc_shape
 
-__all__ = ["ShardState", "dtvc_local", "dtvc2_local", "dtvc"]
+__all__ = [
+    "ShardState", "dtvc_local", "dtvc2_local", "dtvc_local_batched",
+    "dtvc2_local_batched", "dtvc",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +68,17 @@ class ShardState:
             if split > k + 1:
                 split = split - 2
         return ShardState(split=split, partial=self.partial)
+
+
+def _fusion_island(out: jax.Array, impl: str) -> jax.Array:
+    """The ``mulsum`` engine's bitwise-batchability contract: every
+    contraction is its own XLA fusion island, so the stacked and per-sample
+    programs compile each multiply+reduce identically (cross-program fusion
+    into surrounding collectives/chains would drift the last bit).  Applied
+    here rather than in :func:`~repro.core.tvc._mulsum` because
+    ``optimization_barrier`` has no vmap batching rule and the batched tvc
+    wrappers vmap the per-sample oracle.  No-op for every other engine."""
+    return lax.optimization_barrier(out) if impl == "mulsum" else out
 
 
 def dtvc_local(
@@ -108,7 +122,7 @@ def dtvc_local(
             )
         x_use = x
     out = tvc(A_loc, x_use, k, alpha=alpha, beta=beta, y=y, impl=impl, prec=prec)
-    return out, state.after_contraction(k, hit_split)
+    return _fusion_island(out, impl), state.after_contraction(k, hit_split)
 
 
 def dtvc2_local(
@@ -147,7 +161,90 @@ def dtvc2_local(
     f_impl = impl if impl in ("native", "mulsum", "pallas") else "native"
     out = tvc2(A_loc, x1, k, x2, k + 1, alpha=alpha, beta=beta, y=y,
                impl=f_impl, prec=prec)
-    return out, new_state
+    return _fusion_island(out, f_impl), new_state
+
+
+def dtvc_local_batched(
+    A_b: jax.Array,
+    x: jax.Array,
+    k: int,
+    state: ShardState,
+    *,
+    axis_name: str | None,
+    impl: str = "native",
+    prec: Precision | str = F32,
+    alpha=1.0,
+    beta=0.0,
+    y: jax.Array | None = None,
+) -> tuple[jax.Array, ShardState]:
+    """Batched counterpart of :func:`dtvc_local`: ONE contraction launch over
+    a stacked batch ``A_b[B, ...]`` of B same-shape local shards, with
+    per-batch vectors ``x[B, n_k]``.  ``k`` and ``state.split`` index the
+    *per-sample* (local) shape, exactly like the unbatched op — the batch dim
+    is invisible to the distribution bookkeeping, because batching changes
+    launch counts, never the split/partial semantics.
+
+    When ``k == state.split`` (Eq. 2) every batch row's vector is sliced to
+    this process's range (one ``dynamic_slice`` on axis 1 covers the whole
+    stack) and the output is marked partial — the global Σ is delayed until
+    the caller reduces, as ONE stacked collective for all B tensors.
+    ``alpha``/``beta`` may be scalars or per-batch ``[B]`` arrays; with
+    ``impl="pallas"`` they ride in the batched kernels' fused epilogue."""
+    prec = get_policy(prec)
+    B = A_b.shape[0]
+    hit_split = state.split is not None and k == state.split
+    if hit_split:
+        if axis_name is None:
+            raise ValueError("split contraction requires a mesh axis")
+        chunk = A_b.shape[k + 1]
+        idx = lax.axis_index(axis_name)
+        x_use = lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=1)
+    else:
+        if x.shape != (B, A_b.shape[k + 1]):
+            raise ValueError(
+                f"x shape {x.shape} != (batch {B}, local mode extent "
+                f"{A_b.shape[k + 1]})"
+            )
+        x_use = x
+    out = tvc_batched(A_b, x_use, k, alpha=alpha, beta=beta, y=y, impl=impl,
+                      prec=prec)
+    return _fusion_island(out, impl), state.after_contraction(k, hit_split)
+
+
+def dtvc2_local_batched(
+    A_b: jax.Array,
+    x1: jax.Array,
+    k: int,
+    x2: jax.Array,
+    state: ShardState,
+    *,
+    impl: str = "native",
+    prec: Precision | str = F32,
+    alpha=1.0,
+    beta=0.0,
+    y: jax.Array | None = None,
+) -> tuple[jax.Array, ShardState]:
+    """Batched fused-pair shard op: ONE launch contracts the adjacent local
+    modes (k, k+1) of all B stacked shards (the single-launch counterpart of
+    two :func:`dtvc_local_batched` calls, skipping the order-(d-1)
+    intermediate).  The fused kernel cannot take the Eq. 2 slice path, so the
+    split dim must not be part of the pair —
+    :meth:`ShardState.after_pair_contraction` raises otherwise and the
+    batched chain walker gates fusion on exactly that, mirroring the
+    unbatched :func:`dtvc2_local`."""
+    prec = get_policy(prec)
+    new_state = state.after_pair_contraction(k)  # raises on split-in-pair
+    B = A_b.shape[0]
+    if x1.shape != (B, A_b.shape[k + 1]) or \
+            x2.shape != (B, A_b.shape[k + 2]):
+        raise ValueError(
+            f"vector shapes ({x1.shape}, {x2.shape}) != batched local pair "
+            f"extents {(B,) + tuple(A_b.shape[k + 1:k + 3])}"
+        )
+    f_impl = impl if impl in ("native", "mulsum", "pallas") else "native"
+    out = tvc2_batched(A_b, x1, k, x2, k + 1, alpha=alpha, beta=beta, y=y,
+                       impl=f_impl, prec=prec)
+    return _fusion_island(out, f_impl), new_state
 
 
 def _out_split_dim(k: int, s: int) -> int:

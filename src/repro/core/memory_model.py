@@ -24,7 +24,9 @@ __all__ = [
     "tvc_streamed_elems", "tvc_padded_copy_elems", "pad_overhead",
     "tvc2_streamed_elems", "tvc2_unfused_streamed_elems", "fused_pair_saving",
     "tvc_batched_streamed_elems", "tvc2_batched_streamed_elems",
-    "launch_amortized_speedup",
+    "launch_amortized_speedup", "simulate_sweep_batched",
+    "dhopm_launches_per_sweep", "dhopm_wire_bytes_sweep",
+    "dhopm_batched_wire_bytes_sweep",
 ]
 
 
@@ -244,14 +246,23 @@ def simulate_sweep(
     s: int,
     algo: Literal["classic", "hopm3", "hopm3_fused"] = "classic",
     include_comm: bool = False,
+    split_alive: bool | None = None,
 ) -> float:
     """Elements streamed per process for one full sweep of d external
     iterations.  ``classic`` = canonical two-buffer distributed HOPM
     (Pawlowski et al. style chains, always restart from A); ``hopm3`` =
     Algorithm 1 with the three-buffer prefix cache; ``hopm3_fused`` =
     beyond-paper variant that additionally contracts adjacent-mode pairs in
-    one streaming pass (never across the W boundary or the split mode)."""
-    A = _T(tuple(range(d)), split=p > 1, partial=False)
+    one streaming pass (never across the W boundary or the split mode).
+
+    ``split_alive`` overrides whether the 1-D split state machine is active:
+    the default (None = ``p > 1``) matches the paper's setting, but the
+    runtime walkers keep the split schedule even at p = 1 (the split is
+    structural — it blocks pair fusion and takes the Eq. 2 slice path with a
+    full-extent chunk), so single-process accounting of a *split* run must
+    pass ``split_alive=True``."""
+    A = _T(tuple(range(d)), split=(p > 1 if split_alive is None
+                                   else split_alive), partial=False)
     total = 0.0
     W: _T | None = None   # hopm3 prefix cache: A contracted along 0..j-2
     three = algo in ("hopm3", "hopm3_fused")
@@ -307,3 +318,111 @@ def H_inv(n: int, d: int, p: int, s: int) -> float:
 def saved_contractions(d: int) -> int:
     """dHOPM_3 skips (d-1)(d-2)/2 contractions per sweep (paper §4.2)."""
     return (d - 1) * (d - 2) // 2
+
+
+# --------------------------------------------------------------------------
+# Split-aware batched dHOPM_3 accounting (dhopm3_batched): streamed bytes,
+# launch schedule, and wire traffic.  Batching B tensors changes the LAUNCH
+# COUNT only — never streamed bytes (B x the per-tensor traffic) and never
+# wire bytes (stacked collectives carry B x the per-leaf payload).
+# --------------------------------------------------------------------------
+
+def simulate_sweep_batched(
+    b: int,
+    n: int,
+    d: int,
+    p: int,
+    s: int,
+    algo: Literal["classic", "hopm3", "hopm3_fused"] = "hopm3",
+    split_alive: bool | None = None,
+) -> float:
+    """Elements streamed per process for one sweep of ``dhopm3_batched``
+    over B stacked split tensors: exactly B times the per-tensor
+    :func:`simulate_sweep` — the batched walker reads every stacked shard
+    row, every per-batch vector, and writes every stacked intermediate, so
+    batching amortizes dispatch, never traffic."""
+    if b <= 0:
+        raise ValueError(f"batch must be positive, got {b}")
+    return b * simulate_sweep(n, d, p, s, algo, split_alive=split_alive)
+
+
+def dhopm_launches_per_sweep(d: int, s: int | None = None,
+                             fuse_pairs: bool = False) -> int:
+    """Contraction-launch count of ONE dHOPM_3 sweep (the three-buffer
+    walker of ``hopm3`` / ``dhopm3`` / their batched twins): d chains with
+    the W prefix cache skipping (d-1)(d-2)/2 contractions, minus one launch
+    per fused adjacent pair when ``fuse_pairs`` — fusion is gated off at the
+    W-cache capture point and wherever the pair touches the 1-D split mode
+    ``s`` (``None`` = no split).  The batched walker issues exactly this
+    many *batched* launches per sweep, independent of B — the jaxpr-asserted
+    guarantee the bench's dispatch-allowance accounting builds on."""
+    modes_A = tuple(range(d))
+    launches = 0
+    W = None  # (modes, split_alive)
+    for j in range(d):
+        if j >= 2 and W is not None:
+            modes, split_alive = W
+            chain = [j - 1] + list(range(j + 1, d))
+        else:
+            modes, split_alive = modes_A, s is not None
+            chain = [m for m in range(d) if m != j]
+        new_W = None
+        idx = 0
+        while idx < len(chain):
+            m = chain[idx]
+            nxt = chain[idx + 1] if idx + 1 < len(chain) else None
+            hit = split_alive and (m == s or nxt == s)
+            done_after_first = (set(range(d)) - set(modes)) | {m}
+            captures_W = j >= 1 and done_after_first == set(range(j))
+            if fuse_pairs and nxt == m + 1 and not hit and not captures_W:
+                modes = tuple(mm for mm in modes if mm not in (m, nxt))
+                idx += 2
+            else:
+                if split_alive and m == s:
+                    split_alive = False
+                modes = tuple(mm for mm in modes if mm != m)
+                idx += 1
+            launches += 1
+            if j >= 1 and set(range(d)) - set(modes) == set(range(j)):
+                new_W = (modes, split_alive)
+        W = new_W if new_W is not None else W
+    return launches
+
+
+def dhopm_wire_bytes_sweep(shape, p: int, itemsize: int,
+                           split: int | None = None) -> float:
+    """Per-process wire bytes of ONE dHOPM_3 sweep over an order-d tensor
+    with extents ``shape``: Algorithm 1's delayed reduction is one small
+    collective per external iteration j — an n_j-sized ``mp_allreduce``
+    whose ring/doubling schedule is dispatched on n_j (matching the
+    runtime's per-iteration dispatch, NOT one dispatch on Σ n_j), except
+    the split iteration j == ``split``, which all-gathers the n_j/p local
+    slice.  ``split=None`` is the Eq. 2 partial-summand setting (every
+    iteration reduces) — the schedule ``train.grad_compress`` runs per
+    deflation rank per sweep.  Batching multiplies this by B
+    (:func:`dhopm_batched_wire_bytes_sweep`); stacked collectives keep the
+    per-leaf dispatch."""
+    from repro.dist.collectives import (
+        allreduce_algo,
+        wire_bytes_allgather,
+        wire_bytes_allreduce,
+    )
+    total = 0.0
+    for j, nj in enumerate(shape):
+        if split is not None and j == split:
+            total += wire_bytes_allgather(nj, p, itemsize)
+        else:
+            total += wire_bytes_allreduce(nj, p, itemsize,
+                                          allreduce_algo(nj, p))
+    return total
+
+
+def dhopm_batched_wire_bytes_sweep(b: int, shape, p: int, itemsize: int,
+                                   split: int | None = None) -> float:
+    """Wire bytes of one *batched* dHOPM_3 sweep over B stacked tensors:
+    exactly B times :func:`dhopm_wire_bytes_sweep` — the stacked (B, n_j)
+    collectives carry B per-leaf payloads on the same per-leaf-dispatched
+    schedule, so batching never changes wire traffic."""
+    if b <= 0:
+        raise ValueError(f"batch must be positive, got {b}")
+    return b * dhopm_wire_bytes_sweep(shape, p, itemsize, split)

@@ -116,6 +116,50 @@ def _native(a3, x, prec):
     return _contract_core(a3, x, prec)
 
 
+def _tree_sum_axis(t: jax.Array, axis: int) -> jax.Array:
+    """Sum along ``axis`` with an *order-explicit, contraction-proof*
+    doubling tree, used by the bitwise-batchable ``mulsum`` engine and
+    dHOPM's iterate norms.  Two cross-program drift sources are closed:
+
+    1. **Reduce order** — XLA's reduce emitter picks its accumulation order
+       per fusion context, and the same ``jnp.sum`` can compile with a
+       *different* order in a batched program than in the per-sample one.
+       Here the order is an explicit fold: zero-pad to the next power of
+       two (IEEE-exact — x + 0 == x) and halve with elementwise adds, which
+       cannot be reassociated, in any context, for any leading batch dims.
+
+    2. **FMA contraction** — LLVM may contract a multiply feeding an add
+       into a single-rounding fmuladd in one program but not the other
+       (``optimization_barrier`` does not survive the CPU pipeline, and the
+       contraction is value-changing whenever the product is inexact).
+       The callers' products enter the first fold adds, so the tree scales
+       every input by 0.5 and the result by 2.0 — both exact (power-of-two
+       exponent shifts), and an fmuladd of an *exact* product rounds
+       identically to the plain multiply-then-add, making any contraction
+       harmless by construction.
+
+    The price is materializing the fold intermediates (~2x the streamed
+    traffic of a fused multiply+reduce) — the documented cost of the
+    engine's bitwise guarantee."""
+    n = t.shape[axis]
+    m = 1 << max(n - 1, 0).bit_length()
+    if m != n:
+        pad = [(0, 0)] * t.ndim
+        pad[axis] = (0, m - n)
+        t = jnp.pad(t, pad)
+    t = t * jnp.asarray(0.5, t.dtype)
+    while t.shape[axis] > 1:
+        h = t.shape[axis] // 2
+        t = lax.slice_in_dim(t, 0, h, axis=axis) + \
+            lax.slice_in_dim(t, h, 2 * h, axis=axis)
+    return lax.squeeze(t, (axis % t.ndim,)) * jnp.asarray(2.0, t.dtype)
+
+
+def _tree_sum_last(t: jax.Array) -> jax.Array:
+    """:func:`_tree_sum_axis` over the trailing axis."""
+    return _tree_sum_axis(t, t.ndim - 1)
+
+
 def _mulsum(a3, x, prec):
     """Bitwise-batchable native variant: broadcast-multiply + axis
     reduction instead of a ``dot_general``.  Same math and streamed traffic
@@ -123,10 +167,22 @@ def _mulsum(a3, x, prec):
     per-output-element accumulation order does not change when a leading
     batch dim is stacked in front — ``dot_general``'s does on CPU.  This is
     the engine :mod:`repro.train.grad_compress` runs so its bucketed
-    (stacked) scheduler reproduces the per-leaf loop bit for bit."""
+    (stacked) scheduler reproduces the per-leaf loop bit for bit.
+
+    The multiply+reduce itself is bitwise-stable under batching, but when
+    XLA fuses it into *surrounding* producers/consumers (collectives,
+    chained contractions in a shard_map region) the fusion shape — and with
+    it the last bit — can differ between the stacked and per-sample
+    programs; the dtvc shard ops therefore wrap every mulsum contraction in
+    an ``optimization_barrier`` fusion island (the barrier lives there, not
+    here, because it has no vmap batching rule and ``tvc_batched`` vmaps
+    this function).  Every reduce runs through the order-explicit
+    :func:`_tree_sum_axis` — ``jnp.sum`` would leave the accumulation order
+    to the fusion context, which differs between the stacked and per-sample
+    programs."""
     a = a3.astype(prec.compute)
     xv = x.astype(prec.compute)
-    return jnp.sum(a * xv[None, :, None], axis=1)
+    return _tree_sum_axis(a * xv[None, :, None], 1)
 
 
 def _looped(a3, x, prec):
@@ -276,11 +332,14 @@ def tvc2(
             return out.reshape(out_shape).astype(_out_dtype(A, prec))
         out = kops.tvc2_pallas(a4, x1, x2, prec=prec)
     elif impl == "mulsum":
-        # bitwise-batchable fused pair (see _mulsum)
+        # bitwise-batchable fused pair: the (n1, n2) reduce runs as ONE
+        # order-explicit tree over the row-major-flattened pair axis (the
+        # fusion-island barrier is applied by the dtvc shard ops; see
+        # _mulsum / _tree_sum_axis)
         a = a4.astype(prec.compute)
         w = x1.astype(prec.compute)[None, :, None, None] * \
             x2.astype(prec.compute)[None, None, :, None]
-        out = jnp.sum(a * w, axis=(1, 2))
+        out = _tree_sum_axis((a * w).reshape(u, n1 * n2, v), 1)
     else:
         out = jnp.einsum("uabv,a,b->uv", a4, x1, x2,
                          preferred_element_type=prec.compute)

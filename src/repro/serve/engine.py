@@ -22,9 +22,11 @@ from .sampling import sample
 
 @dataclasses.dataclass
 class GenerationResult:
-    tokens: np.ndarray          # (B, steps)
+    tokens: np.ndarray          # (B, steps); rows are eos_id-padded past EOS
     steps: int
     prefill_tokens: int
+    lengths: np.ndarray = None  # (B,) true generated length per sequence
+    #                             (including the EOS token itself)
 
 
 class DecodeEngine:
@@ -72,19 +74,27 @@ class DecodeEngine:
         rng = jax.random.PRNGKey(seed)
         out = []
         alive = np.ones((B,), bool)
+        lengths = np.zeros((B,), np.int64)
         cur = sample(logits, rng, vocab_size=self.cfg.vocab_size,
                      temperature=temperature, top_k=top_k)
         for t in range(steps):
-            out.append(np.asarray(cur)[:, 0])
+            tok = np.asarray(cur)[:, 0].copy()
             if self.eos_id is not None:
-                alive &= out[-1] != self.eos_id
+                # EOS-retired slots keep stepping (static batch), but their
+                # sampled tokens are garbage — freeze the record at eos_id
+                # so callers never see post-EOS tokens.
+                tok[~alive] = self.eos_id
+            out.append(tok)
+            lengths += alive
+            if self.eos_id is not None:
+                alive &= tok != self.eos_id
                 if not alive.any():
                     break
             cache, logits = self._step(self.params, cache, cur)
             rng, sub = jax.random.split(rng)
             cur = sample(logits, sub, vocab_size=self.cfg.vocab_size,
                          temperature=temperature, top_k=top_k)
-        return GenerationResult(np.stack(out, 1), len(out), S * B)
+        return GenerationResult(np.stack(out, 1), len(out), S * B, lengths)
 
     def serve_queue(self, requests, steps_per_req: int, **kw):
         """Continuous-batching-lite: consume a list of (B, S) prompt batches,

@@ -18,12 +18,15 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from functools import reduce
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
-from repro.core.dhopm import hopm3_batched, hopm3_partial
+from repro.core import memory_model as mm
+from repro.core.dhopm import hopm3_batched, hopm3_partial, hopm3_sharded
 from repro.core.mixed_precision import F32 as PREC_F32, Precision, get_policy
 from repro.dist import collectives as coll
 
@@ -42,10 +45,29 @@ class CompressorCfg:
     #                              hopm3_batched chain per bucket (same
     #                              iterates as the per-leaf loop; False
     #                              forces the per-leaf reference path)
+    splits: tuple[tuple[str, int], ...] = ()
+    #   1-D split annotations: (leaf path string -> split dim in *view*
+    #   coordinates).  An annotated leaf is a per-rank SLICE of an
+    #   already-summed global gradient along that dim (ZeRO-style sharded
+    #   leaf) rather than an Eq. 2 partial summand; its chains run the
+    #   paper's Algorithm 1 split schedule (hopm3_sharded / the split-aware
+    #   batched walker) and its factors live at GLOBAL extents.
+    split_world: int = 1
+    #   shard count along the split axis (== the DP axis size at runtime;
+    #   needed statically by init_state/wire accounting to size global
+    #   factor vectors).
 
 
-def _eligible(shape, cfg: CompressorCfg) -> bool:
-    return len(shape) >= 2 and math.prod(shape) >= cfg.min_size
+def _split_for(path_str: str, cfg: CompressorCfg) -> int | None:
+    for key, s_dim in cfg.splits:
+        if key == path_str:
+            return s_dim
+    return None
+
+
+def _eligible(shape, cfg: CompressorCfg, split: int | None = None) -> bool:
+    n = math.prod(shape) * (cfg.split_world if split is not None else 1)
+    return len(shape) >= 2 and n >= cfg.min_size
 
 
 def _tensor_view(shape, cfg: CompressorCfg):
@@ -57,17 +79,42 @@ def _tensor_view(shape, cfg: CompressorCfg):
     return (lead,) + tuple(shape[len(shape) - cfg.max_order + 1:])
 
 
+def _factor_view(local_vshape, cfg: CompressorCfg, split: int | None):
+    """Factor-vector extents for a leaf: the local view, with the split dim
+    scaled to its GLOBAL extent (a split leaf's factors span the whole
+    tensor; only its slice of dim ``split`` is local)."""
+    if split is None:
+        return tuple(local_vshape)
+    if not 0 <= split < len(local_vshape):
+        raise ValueError(
+            f"split dim {split} out of range for view {tuple(local_vshape)}")
+    return tuple(n * cfg.split_world if m == split else n
+                 for m, n in enumerate(local_vshape))
+
+
 def init_state(params, cfg: CompressorCfg, seed: int = 0,
                stack: int | None = None):
     """Factor vectors (warm start) + error-feedback buffers, per leaf.
     ``stack``: leading DP-axis dim for the per-rank error buffers (the
     buffers are genuinely rank-local state; outside shard_map they live
-    stacked and sharded over the DP axis)."""
+    stacked and sharded over the DP axis).  Leaves annotated in
+    ``cfg.splits`` get GLOBAL-extent factors along their split dim
+    (:func:`_factor_view`); their error buffers stay local-shard shaped.
+
+    Seeding is ``zlib.crc32`` of the leaf path — NOT Python ``hash``, whose
+    string hashing is salted per process (``PYTHONHASHSEED``): salted seeds
+    would draw different warm-start factors on every host/restart, silently
+    breaking multi-host reproducibility and any resume-from-checkpoint
+    comparison (the same bug class as the decode-batch flake fixed in the
+    model smoke tests)."""
     def leaf(path, p):
-        if not _eligible(p.shape, cfg):
+        s_dim = _split_for(jax.tree_util.keystr(path), cfg)
+        if not _eligible(p.shape, cfg, s_dim):
             return {}
-        vshape = _tensor_view(p.shape, cfg)
-        key = jax.random.PRNGKey((seed + hash(str(path))) % (2 ** 31))
+        vshape = _factor_view(_tensor_view(p.shape, cfg), cfg, s_dim)
+        key = jax.random.PRNGKey(
+            (seed + zlib.crc32(jax.tree_util.keystr(path).encode()))
+            % (2 ** 31))
         keys = jax.random.split(key, cfg.rank * len(vshape))
         xs = []
         i = 0
@@ -90,25 +137,40 @@ def init_state(params, cfg: CompressorCfg, seed: int = 0,
 
 def wire_bytes_summary(params, cfg: CompressorCfg, p_dp: int) -> dict:
     """Analytic wire traffic per step (per device): compressed vs dense.
-    Uses the same size-based ring/doubling dispatch as ``mp_allreduce``
-    (``coll.allreduce_algo``), so the accounting matches the runtime
-    schedule."""
+
+    The compressed path is priced at the *per-sweep ordering the runtime
+    actually uses* (:func:`repro.core.memory_model.dhopm_wire_bytes_sweep`):
+    one n_j-sized collective per external iteration, its ring/doubling
+    schedule dispatched on each n_j separately — NOT one dispatch on the
+    concatenated Σ n_j vector, whose algo choice can differ from every
+    per-iteration choice and mis-price the wire.  Split-annotated leaves
+    (``cfg.splits``) swap the j == split iteration's all-reduce for the
+    Eq. 1 all-gather of the n_j/p slice, and their dense baseline is the
+    all-gather that would assemble the sharded gradient.  The closed form
+    is regression-tested against a counted trace of the runtime's
+    collective calls (``_dist_checks``)."""
     prec = get_policy(cfg.prec)
     dense = compressed = 0
-    for leaf in jax.tree.leaves(params):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        s_dim = _split_for(jax.tree_util.keystr(path), cfg)
         n = math.prod(leaf.shape)
-        dense += coll.wire_bytes_allreduce(n, p_dp, prec.storage_bytes,
-                                           coll.allreduce_algo(n, p_dp))
-        if _eligible(leaf.shape, cfg):
-            vshape = _tensor_view(leaf.shape, cfg)
-            vec = sum(vshape)
-            compressed += (cfg.rank * cfg.sweeps
-                           * coll.wire_bytes_allreduce(
-                               vec, p_dp, prec.storage_bytes,
-                               coll.allreduce_algo(vec, p_dp)))
+        if s_dim is None:
+            dense += coll.wire_bytes_allreduce(
+                n, p_dp, prec.storage_bytes, coll.allreduce_algo(n, p_dp))
         else:
+            # sharded leaf: the dense baseline assembles the global tensor
+            dense += coll.wire_bytes_allgather(
+                n * cfg.split_world, p_dp, prec.storage_bytes)
+        if _eligible(leaf.shape, cfg, s_dim):
+            vshape = _factor_view(_tensor_view(leaf.shape, cfg), cfg, s_dim)
+            compressed += (cfg.rank * cfg.sweeps
+                           * mm.dhopm_wire_bytes_sweep(
+                               vshape, p_dp, prec.storage_bytes,
+                               split=s_dim))
+        elif s_dim is None:
             compressed += coll.wire_bytes_allreduce(
                 n, p_dp, prec.storage_bytes, coll.allreduce_algo(n, p_dp))
+        # ineligible split leaves are already-synced shards: no wire at all
     return {"dense_bytes": dense, "compressed_bytes": compressed,
             "ratio": dense / max(1, compressed)}
 
@@ -145,6 +207,83 @@ def _compress_leaf(g, s, cfg: CompressorCfg, axis_name: str, prec, p):
     ghat_mean = (approx / p).astype(g.dtype).reshape(g.shape)
     e_new = (resid_v - approx / p).reshape(g.shape)
     return ghat_mean, {"xs": tuple(new_xs), "e": e_new.astype(s["e"].dtype)}
+
+
+def _local_factors(xs, s_dim: int, chunk: int, axis_name: str):
+    """Slice the split dim's GLOBAL factor vector(s) to this process's
+    range (rank-1 reconstruction of a split leaf touches only the local
+    slice).  Works for both (n,) per-leaf and (B, n) stacked factors — the
+    slice rides on the last axis."""
+    idx = lax.axis_index(axis_name)
+    return [x if m != s_dim else
+            lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=x.ndim - 1)
+            for m, x in enumerate(xs)]
+
+
+def _compress_leaf_split(g, s, cfg: CompressorCfg, axis_name: str, prec, p,
+                         s_dim: int):
+    """Per-leaf reference path for a *split-annotated* leaf: ``g`` is this
+    rank's slice (along view dim ``s_dim``) of an already-summed global
+    gradient, so the deflation chains run the paper's Algorithm 1 split
+    schedule (:func:`hopm3_sharded` — Eq. 2 slice path at the split mode,
+    one delayed n_j collective per external iteration, all-gather at
+    j == split).  The returned gradient is the compressed LOCAL slice (no
+    1/p mean — the values are already global), and error feedback stays
+    rank-local on the slice."""
+    vshape = _tensor_view(g.shape, cfg)
+    resid = g.astype(F32) + s["e"].astype(F32)       # error feedback
+    resid_v = resid.reshape(vshape)
+    approx = jnp.zeros(vshape, F32)
+    new_xs = []
+    for r in range(cfg.rank):
+        xs0 = [x for x in s["xs"][r]]
+        xs_r, lam = hopm3_sharded(
+            resid_v - approx, xs0, axis_name=axis_name, split=s_dim,
+            sweeps=cfg.sweeps, impl="mulsum", prec=prec)
+        loc = _local_factors(xs_r, s_dim, vshape[s_dim], axis_name)
+        approx = approx + _rank1_outer(loc, lam)
+        new_xs.append(tuple(x.astype(F32) for x in xs_r))
+    ghat = approx.astype(g.dtype).reshape(g.shape)
+    e_new = (resid_v - approx).reshape(g.shape)
+    return ghat, {"xs": tuple(new_xs), "e": e_new.astype(s["e"].dtype)}
+
+
+def _compress_bucket_split(gs, ss, cfg: CompressorCfg, axis_name: str, prec,
+                           p, s_dim: int):
+    """One bucket of B >= 2 same-view *split-annotated* leaves, stacked and
+    compressed through ONE split-aware :func:`hopm3_batched` chain per
+    deflation rank — the batched walker runs the identical Algorithm 1
+    schedule as B per-leaf :func:`hopm3_sharded` chains (stacked Eq. 2
+    slices, stacked delayed reductions dispatched on the per-leaf n_j,
+    stacked j == split all-gather), so the unstacked results match the
+    per-leaf loop bit for bit under the ``mulsum`` engine whenever the
+    reduction is elementwise (psum when storage == compute, recursive
+    doubling, or p == 1) — the same guarantee as the partial-mode buckets."""
+    B = len(gs)
+    vshape = _tensor_view(gs[0].shape, cfg)
+    resid_b = jnp.stack([
+        (g.astype(F32) + s["e"].astype(F32)).reshape(vshape)
+        for g, s in zip(gs, ss)])
+    approx_b = jnp.zeros((B,) + tuple(vshape), F32)
+    new_xs_b = []
+    for r in range(cfg.rank):
+        xs0 = [jnp.stack([s["xs"][r][m] for s in ss])
+               for m in range(len(vshape))]
+        xs_r, lam = hopm3_batched(
+            resid_b - approx_b, xs0, axis_name=axis_name, split=s_dim,
+            sweeps=cfg.sweeps, impl="mulsum", prec=prec)
+        loc = _local_factors(xs_r, s_dim, vshape[s_dim], axis_name)
+        approx_b = approx_b + jax.vmap(_rank1_outer)(loc, lam)
+        new_xs_b.append([x.astype(F32) for x in xs_r])
+    outs = []
+    for i, (g, s) in enumerate(zip(gs, ss)):
+        ghat = approx_b[i].astype(g.dtype).reshape(g.shape)
+        e_new = (resid_b[i] - approx_b[i]).reshape(g.shape)
+        new_xs = tuple(
+            tuple(new_xs_b[r][m][i] for m in range(len(vshape)))
+            for r in range(cfg.rank))
+        outs.append((ghat, {"xs": new_xs, "e": e_new.astype(s["e"].dtype)}))
+    return outs
 
 
 def _compress_bucket(gs, ss, cfg: CompressorCfg, axis_name: str, prec, p):
@@ -192,42 +331,67 @@ def compress_and_sync(grads, state, cfg: CompressorCfg, axis_name: str):
     ``axis_name``.
 
     With ``cfg.bucket`` (the default) eligible leaves are grouped by their
-    ``_tensor_view`` shape (and dtypes), each bucket is stacked, and the
-    per-leaf compression loop collapses into one :func:`hopm3_batched` call
-    per bucket — one launch per chain step for dozens of gradient leaves.
-    Single-leaf buckets keep the per-leaf path.  Bucketed results equal the
-    per-leaf loop bitwise whenever the delayed reduction is elementwise
-    (psum when storage == compute, recursive doubling, or p == 1); the ring
-    schedule's payload chunking moves when B leaves stack, so with a
-    low-precision wire on ring-dispatched cells (non-power-of-two p, or
-    n_j past the doubling cutoff) the two paths agree only to rounding."""
+    ``_tensor_view`` shape (and dtypes, and split annotation), each bucket
+    is stacked, and the per-leaf compression loop collapses into one
+    :func:`hopm3_batched` call per bucket — one launch per chain step for
+    dozens of gradient leaves.  Single-leaf buckets keep the per-leaf path.
+    Bucketed results equal the per-leaf loop bitwise whenever the delayed
+    reduction is elementwise (psum when storage == compute, recursive
+    doubling, or p == 1); the ring schedule's payload chunking moves when B
+    leaves stack, so with a low-precision wire on ring-dispatched cells
+    (non-power-of-two p, or n_j past the doubling cutoff) the two paths
+    agree only to rounding.
+
+    Leaves annotated in ``cfg.splits`` are per-rank *slices* of
+    already-summed global gradients (ZeRO-style): their buckets route
+    through the split-aware batched walker
+    (:func:`_compress_bucket_split` / :func:`_compress_leaf_split`), and
+    ineligible split leaves pass through untouched (they are already
+    synced — an all-reduce would double-count the shards)."""
     prec = get_policy(cfg.prec)
     p = jax.lax.axis_size(axis_name)
 
-    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_wp, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    paths = [jax.tree_util.keystr(pth) for pth, _ in flat_wp]
+    flat_g = [g for _, g in flat_wp]
     flat_s = treedef.flatten_up_to(state)
     n = len(flat_g)
     out_g, out_s = [None] * n, [None] * n
 
-    buckets: dict = {}   # view-key -> list of leaf indices, in tree order
+    buckets: dict = {}   # (view, dtypes, split)-key -> leaf indices, in order
     for i, (g, s) in enumerate(zip(flat_g, flat_s)):
-        if not s:  # exact path: mixed-precision all-reduce (paper §5.5)
+        s_dim = _split_for(paths[i], cfg)
+        if not s:
+            if s_dim is not None:
+                # already-synced shard of a global gradient: nothing to do
+                out_g[i] = g
+                out_s[i] = s
+                continue
+            # exact path: mixed-precision all-reduce (paper §5.5)
             total = coll.mp_allreduce(g, axis_name, prec)
             out_g[i] = (total / p).astype(g.dtype)
             out_s[i] = s
             continue
         key = (_tensor_view(g.shape, cfg), jnp.dtype(g.dtype).name,
-               jnp.dtype(s["e"].dtype).name)
+               jnp.dtype(s["e"].dtype).name, s_dim)
         buckets.setdefault(key, []).append(i)
 
-    for idxs in buckets.values():
+    for key, idxs in buckets.items():
+        s_dim = key[-1]
+        gs = [flat_g[i] for i in idxs]
+        ss = [flat_s[i] for i in idxs]
         if cfg.bucket and len(idxs) > 1:
-            results = _compress_bucket(
-                [flat_g[i] for i in idxs], [flat_s[i] for i in idxs],
-                cfg, axis_name, prec, p)
+            if s_dim is None:
+                results = _compress_bucket(gs, ss, cfg, axis_name, prec, p)
+            else:
+                results = _compress_bucket_split(gs, ss, cfg, axis_name,
+                                                 prec, p, s_dim)
+        elif s_dim is None:
+            results = [_compress_leaf(g, s, cfg, axis_name, prec, p)
+                       for g, s in zip(gs, ss)]
         else:
-            results = [_compress_leaf(flat_g[i], flat_s[i], cfg, axis_name,
-                                      prec, p) for i in idxs]
+            results = [_compress_leaf_split(g, s, cfg, axis_name, prec, p,
+                                            s_dim) for g, s in zip(gs, ss)]
         for i, (ghat, new_s) in zip(idxs, results):
             out_g[i] = ghat
             out_s[i] = new_s

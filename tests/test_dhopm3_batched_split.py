@@ -1,0 +1,312 @@
+"""Split-aware batched dHOPM_3 coverage (single device, p = 1 mesh): the
+launch-count guarantee (one batched contraction launch per chain step,
+independent of B, equal to the unbatched dhopm3 schedule and to the
+memory_model launch closed form, unfused and fused), the bitwise oracle
+(dhopm3_batched == B independent dhopm3 runs under the mulsum engine), the
+batched shard ops' split bookkeeping (Eq. 2 slice path, split-in-pair
+rejection), and the grad_compress split-leaf routing (bucketed == per-leaf
+bitwise; split mode == partial mode at p = 1).  The p = 8 halves of these
+acceptance criteria live in tests/_dist_checks.py."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import dhopm as dh
+from repro.core import memory_model as mm
+from repro.core.dtvc import ShardState, dtvc2_local_batched, dtvc_local_batched
+from repro.train import grad_compress as gc
+
+RNG = np.random.default_rng(41)
+
+
+def rand(shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+def mesh1():
+    return jax.make_mesh((1,), ("x",))
+
+
+def _count_pallas(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for item in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(item, "jaxpr", item)
+                if hasattr(inner, "eqns"):
+                    n += _count_pallas(inner)
+    return n
+
+
+# ---- launch schedule: one batched launch per chain step, any B -----------
+
+@pytest.mark.parametrize("shape,s", [((5, 4, 6, 3), 1), ((5, 4, 6, 3), 3),
+                                     ((4, 6, 8), 2)])
+@pytest.mark.parametrize("fuse", [False, True])
+def test_dhopm3_batched_launches_match_model_and_unbatched(shape, s, fuse):
+    """Acceptance: a split batched sweep issues exactly the unbatched
+    dhopm3 schedule's launch count — independent of B and equal to
+    memory_model.dhopm_launches_per_sweep."""
+    mesh = mesh1()
+    d = len(shape)
+    want = mm.dhopm_launches_per_sweep(d, s, fuse)
+
+    counts = set()
+    for B in (1, 2, 5):
+        A = rand((B,) + shape)
+        xs = [rand((B, n)) for n in shape]
+        jx = jax.make_jaxpr(lambda A, *x: dh.dhopm3_batched(
+            A, list(x), mesh, "x", s=s, sweeps=1, impl="pallas",
+            fuse_pairs=fuse)[0])(A, *xs)
+        counts.add(_count_pallas(jx.jaxpr))
+    A1 = rand(shape)
+    x1 = [rand((n,)) for n in shape]
+    j1 = jax.make_jaxpr(lambda A, *x: dh.dhopm3(
+        A, list(x), mesh, "x", s=s, sweeps=1, impl="pallas",
+        fuse_pairs=fuse)[0])(A1, *x1)
+    assert counts == {want} == {_count_pallas(j1.jaxpr)}, (counts, want)
+
+
+def test_split_blocks_pair_fusion_in_model():
+    # no split: d=4 fuses two pairs (9 -> 7); split at the chain tail
+    # blocks one of them (9 -> 8); d=3 split at s=2 blocks the only pair
+    assert mm.dhopm_launches_per_sweep(4) == 9
+    assert mm.dhopm_launches_per_sweep(4, fuse_pairs=True) == 7
+    assert mm.dhopm_launches_per_sweep(4, 3, True) == 8
+    assert mm.dhopm_launches_per_sweep(3, 2, True) == \
+        mm.dhopm_launches_per_sweep(3, 2) == 5
+
+
+# ---- bitwise oracle at p = 1 ---------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 6, 8, 2), (7, 5, 3)])
+@pytest.mark.parametrize("fuse", [False, True])
+def test_dhopm3_batched_bitwise_vs_independent_runs(shape, fuse):
+    """Acceptance (p = 1 half): dhopm3_batched matches B independent
+    dhopm3 runs BITWISE under the mulsum engine, for every split."""
+    mesh = mesh1()
+    B, d = 3, len(shape)
+    A = rand((B,) + shape)
+    xs = [rand((B, n)) for n in shape]
+    for s in range(d):
+        xb, lb = dh.dhopm3_batched(A, xs, mesh, "x", s=s, sweeps=2,
+                                   impl="mulsum", fuse_pairs=fuse)
+        for i in range(B):
+            xi, li = dh.dhopm3(A[i], [x[i] for x in xs], mesh, "x", s=s,
+                               sweeps=2, impl="mulsum", fuse_pairs=fuse)
+            assert np.array_equal(np.asarray(lb)[i], np.asarray(li))
+            for a, b in zip(xb, xi):
+                assert np.array_equal(np.asarray(a)[i], np.asarray(b))
+
+
+def test_dhopm3_batched_matches_unbatched_allclose_native():
+    """The native engine agrees to tolerance (bitwise is mulsum-only)."""
+    mesh = mesh1()
+    shape, B = (5, 4, 6), 4
+    A = rand((B,) + shape)
+    xs = [rand((B, n)) for n in shape]
+    xb, lb = dh.dhopm3_batched(A, xs, mesh, "x", s=2, sweeps=3,
+                               impl="native")
+    for i in range(B):
+        xi, li = dh.dhopm3(A[i], [x[i] for x in xs], mesh, "x", s=2,
+                           sweeps=3, impl="native")
+        np.testing.assert_allclose(np.asarray(lb)[i], np.asarray(li),
+                                   rtol=1e-5)
+        for a, b in zip(xb, xi):
+            np.testing.assert_allclose(np.asarray(a)[i], np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_dhopm3_batched_rejects_indivisible_split():
+    mesh = jax.make_mesh((1,), ("x",))
+    A = rand((2, 4, 6))
+    xs = [rand((2, 4)), rand((2, 6))]
+    with pytest.raises(ValueError):
+        # per-sample dim extent must divide p; build a fake 2-mesh check by
+        # asking for a split dim whose extent can't match axis size... at
+        # p=1 everything divides, so check the partial/split exclusivity
+        dh.hopm3_batched(A, xs, partial=True, split=0, axis_name="x")
+
+
+# ---- batched shard ops ----------------------------------------------------
+
+def test_dtvc_local_batched_split_slice_path():
+    """k == split takes the Eq. 2 slice path: each batch row contracts
+    against this process's slice of its global vector, and the result is
+    marked partial."""
+    mesh = mesh1()
+    B, shape = 3, (4, 6, 5)
+    A = rand((B,) + shape)
+    xg = rand((B, 6))
+
+    def body(a, x):
+        out, st = dtvc_local_batched(a, x, 1, ShardState(split=1),
+                                     axis_name="x", impl="mulsum")
+        assert st.partial and st.split is None
+        return out
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+                       check_vma=False)
+    got = jax.jit(fn)(A, xg)
+    for i in range(B):
+        want = np.tensordot(np.asarray(A[i]), np.asarray(xg[i]), axes=(1, 0))
+        np.testing.assert_allclose(np.asarray(got)[i], want, rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_dtvc2_local_batched_rejects_split_in_pair():
+    B, shape = 2, (4, 6, 5)
+    A = rand((B,) + shape)
+    x1, x2 = rand((B, 6)), rand((B, 5))
+    for split in (1, 2):
+        with pytest.raises(ValueError):
+            dtvc2_local_batched(A, x1, 1, x2, ShardState(split=split),
+                                impl="mulsum")
+    # split below the pair survives, shifted down by two
+    out, st = dtvc2_local_batched(A, x1, 1, x2, ShardState(split=0),
+                                  impl="mulsum")
+    assert st.split == 0 and out.shape == (B, 4)
+
+
+# ---- grad_compress split routing at p = 1 --------------------------------
+
+def _run_compress(cfg, grads, state, mesh, axis):
+    def body(g, s):
+        ng, ns, _ = gc.compress_and_sync(g, s, cfg, axis)
+        return ng, ns
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                       out_specs=(P(), P()), check_vma=False)
+    return jax.jit(fn)(grads, state)
+
+
+def test_grad_compress_split_bucketed_bitwise_p1():
+    """Acceptance (p = 1 half): split-annotated buckets through the
+    split-aware batched walker reproduce the per-leaf hopm3_sharded loop
+    bit for bit."""
+    splits = (("['wa']", 1), ("['wb']", 1))
+    cfg = gc.CompressorCfg(rank=2, sweeps=2, min_size=32, prec="f32",
+                           splits=splits, split_world=1)
+    params = {"wa": jnp.zeros((8, 12)), "wb": jnp.zeros((8, 12)),
+              "solo": jnp.zeros((6, 7))}
+    grads = {k: rand(v.shape) for k, v in params.items()}
+    state = gc.init_state(params, cfg, seed=5)
+    mesh = jax.make_mesh((1,), ("dp",))
+    g1, s1 = _run_compress(cfg, grads, state, mesh, "dp")
+    g0, s0 = _run_compress(dataclasses.replace(cfg, bucket=False),
+                           grads, state, mesh, "dp")
+    for a, b in zip(jax.tree.leaves((g1, s1)), jax.tree.leaves((g0, s0))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_compress_split_equals_partial_at_p1():
+    """At p = 1 a 'slice' is the whole tensor and a 'summand' is the whole
+    sum, so the split path and the Eq. 2 partial path must coincide
+    bitwise — a cheap cross-mode oracle for the split schedule."""
+    params = {"w": jnp.zeros((10, 16))}
+    grads = {"w": rand((10, 16))}
+    cfg_split = gc.CompressorCfg(rank=2, sweeps=2, min_size=32, prec="f32",
+                                 splits=(("['w']", 1),), split_world=1)
+    cfg_part = gc.CompressorCfg(rank=2, sweeps=2, min_size=32, prec="f32")
+    mesh = jax.make_mesh((1,), ("dp",))
+    gs, ss = _run_compress(cfg_split, grads,
+                           gc.init_state(params, cfg_split), mesh, "dp")
+    gp, sp = _run_compress(cfg_part, grads,
+                           gc.init_state(params, cfg_part), mesh, "dp")
+    for a, b in zip(jax.tree.leaves((gs, ss)), jax.tree.leaves((gp, sp))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_compress_ineligible_split_leaf_passes_through():
+    """An ineligible split leaf is an already-synced shard: it must come
+    back untouched (an all-reduce would double-count the slices)."""
+    params = {"tiny": jnp.zeros((4, 4))}
+    grads = {"tiny": rand((4, 4))}
+    cfg = gc.CompressorCfg(rank=2, sweeps=1, min_size=10_000, prec="f32",
+                           splits=(("['tiny']", 1),), split_world=1)
+    mesh = jax.make_mesh((1,), ("dp",))
+    g, s = _run_compress(cfg, grads, gc.init_state(params, cfg), mesh, "dp")
+    assert np.array_equal(np.asarray(g["tiny"]), np.asarray(grads["tiny"]))
+
+
+def test_init_state_split_factors_are_global_extent():
+    cfg = gc.CompressorCfg(rank=1, sweeps=1, min_size=16, prec="f32",
+                           splits=(("['w']", 1),), split_world=8)
+    st = gc.init_state({"w": jnp.zeros((8, 4))}, cfg)
+    assert tuple(x.shape for x in st["w"]["xs"][0]) == ((8,), (32,))
+    assert st["w"]["e"].shape == (8, 4)   # error feedback stays local
+    with pytest.raises(ValueError):
+        gc.init_state({"w": jnp.zeros((8, 4))}, dataclasses.replace(
+            cfg, splits=(("['w']", 5),)))
+
+
+# ---- wire accounting ------------------------------------------------------
+
+def test_wire_summary_split_vs_partial_pricing():
+    """Split leaves price the j == split iteration as the Eq. 1 all-gather
+    (cheaper than an all-reduce) and their dense baseline as assembling the
+    global tensor; per-iteration dispatch is priced on each n_j."""
+    from repro.dist import collectives as coll
+    p = 8
+    params = {"w": jnp.zeros((64, 128))}
+    cfg_p = gc.CompressorCfg(rank=2, sweeps=2, min_size=64, prec="f32")
+    cfg_s = gc.CompressorCfg(rank=2, sweeps=2, min_size=64, prec="f32",
+                             splits=(("['w']", 1),), split_world=p)
+    sp_ = gc.wire_bytes_summary(params, cfg_p, p)
+    ss_ = gc.wire_bytes_summary(params, cfg_s, p)
+    # closed form reproduced with explicit per-iteration events
+    want_p = 2 * 2 * sum(
+        coll.wire_bytes_allreduce(n, p, 4, coll.allreduce_algo(n, p))
+        for n in (64, 128))
+    assert sp_["compressed_bytes"] == want_p
+    want_s = 2 * 2 * (
+        coll.wire_bytes_allreduce(64, p, 4, coll.allreduce_algo(64, p))
+        + coll.wire_bytes_allgather(128 * p, p, 4))
+    assert ss_["compressed_bytes"] == want_s
+    assert ss_["compressed_bytes"] < 2 * 2 * sum(
+        coll.wire_bytes_allreduce(n, p, 4, coll.allreduce_algo(n, p))
+        for n in (64, 128 * p))
+
+
+def test_wire_summary_per_iteration_dispatch_differs_from_concat():
+    """The old accounting dispatched ONE algo on Σ n_j; the runtime
+    dispatches per n_j.  Pick extents where the two disagree (each n_j
+    under the doubling cutoff, the concatenation above it) and check the
+    summary prices the per-iteration schedule."""
+    from repro.dist import collectives as coll
+    p = 8
+    n = 40_000   # < 2**16 cutoff; 2n > cutoff
+    params = {"w": jnp.zeros((n, n))}
+    cfg = gc.CompressorCfg(rank=1, sweeps=1, min_size=64, prec="f32")
+    got = gc.wire_bytes_summary(params, cfg, p)["compressed_bytes"]
+    per_iter = 2 * coll.wire_bytes_allreduce(n, p, 4, "doubling")
+    concat = coll.wire_bytes_allreduce(2 * n, p, 4,
+                                       coll.allreduce_algo(2 * n, p))
+    assert got == per_iter != concat
+
+
+def test_batched_wire_and_streamed_accounting_scale_linearly():
+    for b in (1, 8, 64):
+        assert mm.dhopm_batched_wire_bytes_sweep(b, (8, 24, 16), 8, 4, 2) \
+            == b * mm.dhopm_wire_bytes_sweep((8, 24, 16), 8, 4, 2)
+        assert mm.simulate_sweep_batched(b, 16, 3, 8, 2, "hopm3") \
+            == b * mm.simulate_sweep(16, 3, 8, 2, "hopm3")
+    with pytest.raises(ValueError):
+        mm.simulate_sweep_batched(0, 16, 3, 8, 2)
+
+
+def test_simulate_sweep_split_alive_override():
+    """The runtime walkers keep the split schedule at p = 1 (blocks pair
+    fusion -> more streamed traffic than the fused no-split schedule)."""
+    forced = mm.simulate_sweep(8, 4, 1, 3, "hopm3_fused", split_alive=True)
+    auto = mm.simulate_sweep(8, 4, 1, 3, "hopm3_fused")
+    assert forced > auto
+    # unfused hypersquare accounting is split-agnostic at p = 1
+    assert mm.simulate_sweep(8, 4, 1, 3, "hopm3", split_alive=True) == \
+        mm.simulate_sweep(8, 4, 1, 3, "hopm3")

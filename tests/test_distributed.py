@@ -26,9 +26,13 @@ EXPECTED = [
     "dhopm3_rank1_recovery",
     "hopm3_partial_implicit_sum",
     "dhopm3_bf16",
+    "dhopm3_batched_split_bitwise",
+    "dhopm3_batched_pallas_split",
     "dp_explicit_matches_gspmd",
     "grad_compression_lowrank_and_ef",
     "grad_compression_bucketed_bitwise",
+    "grad_compression_split_leaves",
+    "wire_summary_matches_counted_trace",
     "elastic_reshard_restore",
 ]
 

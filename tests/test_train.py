@@ -1,5 +1,9 @@
 """Training substrate tests: optimizer, schedule, checkpointing, data
 pipeline determinism, end-to-end loss descent, serve engine."""
+import os
+import pathlib
+import subprocess
+import sys
 import tempfile
 
 import numpy as np
@@ -154,3 +158,80 @@ def test_serve_engine_eos_retires():
     prompts = np.zeros((2, 4), np.int32)
     r = eng.generate(prompts, steps=4, temperature=1.0, top_k=8, seed=3)
     assert r.tokens.shape[1] == 4
+    np.testing.assert_array_equal(r.lengths, [4, 4])   # no EOS: full length
+
+
+def test_serve_engine_eos_masks_retired_slots():
+    """Bugfix regression: an EOS-retired slot's recorded tokens must be
+    frozen at eos_id (the engine keeps stepping the static batch, but its
+    post-EOS samples are garbage and must never be reported), and lengths
+    must report the true per-sequence generated length."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    from repro.models import registry
+    params = registry.get(cfg.family).init(cfg, jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8))
+    steps = 8
+
+    # pick an eos_id the greedy decode actually emits mid-stream: run once
+    # without EOS and choose sequence 0's token at step 2
+    free = DecodeEngine(cfg, params, max_seq=64, batch_size=2,
+                        eos_id=None).generate(prompts, steps=steps)
+    eos = int(free.tokens[0, 2])
+
+    eng = DecodeEngine(cfg, params, max_seq=64, batch_size=2, eos_id=eos)
+    r = eng.generate(prompts, steps=steps)
+    assert r.tokens.shape == (2, r.steps)
+    for i in range(2):
+        row = r.tokens[i]
+        hits = np.flatnonzero(row == eos)
+        if hits.size:
+            first = int(hits[0])
+            # greedy decode is deterministic up to retirement
+            np.testing.assert_array_equal(row[:first],
+                                          free.tokens[i, :first])
+            assert (row[first:] == eos).all(), row
+            assert int(r.lengths[i]) == first + 1
+        else:
+            assert int(r.lengths[i]) == r.steps
+    # sequence 0 retires by construction (its greedy stream emits eos at
+    # step 2 at the latest), so the masking path genuinely ran
+    assert int(r.lengths[0]) <= 3 < steps
+
+
+# ---- determinism: warm-start factor seeding is PYTHONHASHSEED-proof ----
+
+_INIT_STATE_DIGEST = r"""
+import zlib
+import numpy as np
+import jax.numpy as jnp
+from repro.train import grad_compress as gc
+
+cfg = gc.CompressorCfg(rank=2, sweeps=1, min_size=16, prec="f32")
+params = {"wq": jnp.zeros((8, 12)), "nested": {"wk": jnp.zeros((6, 5, 4))}}
+st = gc.init_state(params, cfg, seed=3)
+buf = b"".join(
+    np.asarray(x).tobytes()
+    for leaf in [st["wq"], st["nested"]["wk"]]
+    for r in leaf["xs"] for x in r)
+print(zlib.crc32(buf))
+"""
+
+
+def test_init_state_deterministic_across_hash_seeds():
+    """Bugfix regression: warm-start factors were seeded with
+    ``hash(str(path))``, which is salted per process via PYTHONHASHSEED —
+    every host/restart drew different factors, silently breaking multi-host
+    reproducibility.  Two subprocesses with different salts must now
+    produce identical factors."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    digests = []
+    for salt in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = salt
+        env["PYTHONPATH"] = str(root / "src")
+        proc = subprocess.run(
+            [sys.executable, "-c", _INIT_STATE_DIGEST],
+            capture_output=True, text=True, env=env, timeout=300)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        digests.append(proc.stdout.strip())
+    assert digests[0] == digests[1], digests
