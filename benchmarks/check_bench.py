@@ -26,6 +26,13 @@ Three checks, strictest first:
    must exceed 1 — a same-engine relative measure (batched cells always run
    a timed engine and carry their own ``engine`` tag), aggregated so one
    timer-noise cell cannot flip CI while a real regression still fails.
+   Sync-vs-pipelined ``dhopm3_overlap`` cells must carry launch counts that
+   exactly match ``dhopm_launches_per_sweep`` (with and without
+   ``overlap_chunks``), a ``dhopm_time_sweep`` prediction reproducible
+   bit-for-bit from the recorded model inputs that predicts real wire
+   hiding (``predicted_hidden_us > 0``), and a geomean ``overlap_speedup``
+   above ``--overlap-speedup-min`` (a calibrated floor: the p = 1 cells pay
+   the chunked-launch cost with no wire to hide).
 
 3. **Time-implied traffic** (engines with real timings only) — the bytes a
    cell's wall time would stream at the measured STREAM peak,
@@ -58,6 +65,9 @@ import pathlib
 import sys
 
 from repro.core.memory_model import (
+    dhopm_launches_per_sweep,
+    dhopm_time_sweep,
+    simulate_sweep,
     simulate_sweep_batched,
     tvc2_streamed_elems,
     tvc_batched_streamed_elems,
@@ -81,6 +91,14 @@ KIND_KEYS = {
     "dhopm3_batched": ("engine", "batch", "sweeps", "p", "split", "fused",
                        "launches", "sep_us", "batched_speedup",
                        "predicted_speedup"),
+    # sync-vs-pipelined cells: one split chain through both walkers, plus
+    # the dhopm_time_sweep prediction at the reference distributed config
+    "dhopm3_overlap": ("engine", "sweeps", "p", "split", "fused",
+                       "overlap_chunks", "launches", "sync_launches",
+                       "sync_us", "overlap_speedup", "model_p",
+                       "model_wire_gbs", "model_dispatch_us",
+                       "predicted_wire_us", "predicted_exposed_us",
+                       "predicted_hidden_us"),
 }
 BATCHED_KINDS = ("tvc_batched", "dhopm3_batched")
 TIMED_ENGINES = ("pallas", "native-xla")
@@ -104,6 +122,13 @@ def predicted_bytes(cell: dict) -> int:
             cell["split"], "hopm3_fused" if cell["fused"] else "hopm3",
             split_alive=True)
         return int(cell["sweeps"] * per_sweep) * itemsize
+    if cell["kind"] == "dhopm3_overlap":
+        # overlap-aware form: (C-1) extra vector re-reads per pipelined tail
+        per_sweep = simulate_sweep(
+            shape[0], cell["order"], cell["p"], cell["split"],
+            "hopm3_fused" if cell["fused"] else "hopm3",
+            split_alive=True, overlap_chunks=cell["overlap_chunks"])
+        return int(cell["sweeps"] * per_sweep) * itemsize
     if cell["kind"] == "tvc2":
         u = math.prod(shape[:k])
         n1, n2 = shape[k], shape[k + 1]
@@ -125,7 +150,8 @@ def _cell_name(c: dict) -> str:
 def check(payload: dict, ref: dict | None, *, acct_tol: float,
           dispatch_us: float, ratio_pallas: float,
           ratio_native: float, lowprec_factor: float = 3.0,
-          speedup_min_batch: int = 16) -> list[str]:
+          speedup_min_batch: int = 16,
+          overlap_speedup_min: float = 0.25) -> list[str]:
     """All failure messages for one trajectory payload ([] = green)."""
     fails: list[str] = []
     meta = payload.get("meta", {})
@@ -173,6 +199,39 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                 fails.append(
                     f"{name}: launch-amortization model predicts no win "
                     f"(predicted_speedup={c['predicted_speedup']})")
+        if c["kind"] == "dhopm3_overlap":
+            # launch schedule: both walkers must match the closed form
+            want = c["sweeps"] * dhopm_launches_per_sweep(
+                c["order"], c["split"], c["fused"],
+                overlap_chunks=c["overlap_chunks"])
+            want_sync = c["sweeps"] * dhopm_launches_per_sweep(
+                c["order"], c["split"], c["fused"])
+            if c["launches"] != want or c["sync_launches"] != want_sync:
+                fails.append(
+                    f"{name}: launch counts ({c['launches']}, "
+                    f"{c['sync_launches']}) != model ({want}, {want_sync})")
+            # the dhopm_time_sweep prediction must be exactly reproducible
+            # from the cell's recorded model inputs ...
+            model = dhopm_time_sweep(
+                tuple(c["shape"]), c["model_p"],
+                get_policy(c["dtype"]).storage_bytes, split=c["split"],
+                overlap_chunks=c["overlap_chunks"], peak_gbs=peak,
+                wire_gbs=c["model_wire_gbs"],
+                dispatch_us=c["model_dispatch_us"])
+            for key, mk in (("predicted_wire_us", "wire_us"),
+                            ("predicted_exposed_us", "exposed_wire_us"),
+                            ("predicted_hidden_us", "hidden_wire_us")):
+                want_us = c["sweeps"] * model[mk]
+                if not math.isclose(c[key], want_us,
+                                    rel_tol=1e-9, abs_tol=1e-12):
+                    fails.append(
+                        f"{name}: {key}={c[key]} != recomputed "
+                        f"dhopm_time_sweep {want_us}")
+            # ... and must predict real hiding at the reference config
+            if not c["predicted_hidden_us"] > 0.0:
+                fails.append(
+                    f"{name}: overlap model predicts no wire hiding "
+                    f"(predicted_hidden_us={c['predicted_hidden_us']})")
 
         # -- 3. time-implied traffic ---------------------------------------
         # batched cells always run a timed engine and carry their own tag;
@@ -212,6 +271,22 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                 f"batched_speedup {geomean:.2f} <= 1 over {len(sp)} cells "
                 f"({', '.join(f'{s:.2f}' for s in sp)}) — one batched "
                 f"launch is not beating B separate launches")
+
+    # -- overlap speedup: geomean floor over sync-vs-pipelined cells --------
+    # (p = 1 cells measure the pipeline's launch cost — (C-1) extra, smaller
+    # launches and re-read vectors with no wire to hide — so the floor is a
+    # calibrated catastrophic-regression bound, not > 1; the wire-hiding win
+    # itself is pinned by the recomputed dhopm_time_sweep prediction above)
+    ov = [c["overlap_speedup"] for c in cells
+          if c.get("kind") == "dhopm3_overlap"]
+    if ov:
+        geomean = math.exp(sum(math.log(max(s, 1e-9)) for s in ov) / len(ov))
+        if not geomean > overlap_speedup_min:
+            fails.append(
+                f"dhopm3_overlap cells: geomean overlap_speedup "
+                f"{geomean:.2f} <= floor {overlap_speedup_min} over "
+                f"{len(ov)} cells ({', '.join(f'{s:.2f}' for s in ov)}) — "
+                f"the pipelined walker is pathologically slower than sync")
     return fails
 
 
@@ -240,6 +315,11 @@ def main(argv=None) -> int:
                     help="gate batched_speedup > 1 only on batched cells "
                          "with at least this batch size (small-B cells are "
                          "noise-prone; B = 64 is the acceptance cell)")
+    ap.add_argument("--overlap-speedup-min", type=float, default=0.25,
+                    help="geomean floor for sync/pipelined wall-time ratio "
+                         "of the dhopm3_overlap cells (p = 1 runs pay the "
+                         "chunked-launch cost with no wire to hide; this "
+                         "bounds catastrophic pipeline regressions)")
     args = ap.parse_args(argv)
 
     payload = json.loads(pathlib.Path(args.bench).read_text())
@@ -250,7 +330,8 @@ def main(argv=None) -> int:
                   ratio_pallas=args.ratio_pallas,
                   ratio_native=args.ratio_native,
                   lowprec_factor=args.lowprec_factor,
-                  speedup_min_batch=args.speedup_min_batch)
+                  speedup_min_batch=args.speedup_min_batch,
+                  overlap_speedup_min=args.overlap_speedup_min)
     engine = payload.get("meta", {}).get("engine")
     n = len(payload.get("cells", []))
     if fails:

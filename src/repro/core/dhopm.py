@@ -41,9 +41,30 @@ from .tvc import _tree_sum_last
 __all__ = [
     "hopm_classic", "hopm3", "dhopm3", "hopm3_partial", "hopm3_sharded",
     "hopm3_batched", "dhopm3_batched", "rank1", "rank1_residual",
+    "OVERLAP_CHUNKS_DEFAULT",
 ]
 
 _EPS = 1e-30
+
+#: default chunk count of the pipelined (``overlap=True``) chain tail: the
+#: delayed reduction of chunk c rides behind the contraction launch of chunk
+#: c+1.  log2(p)+1 chunks fully drain a doubling reduction inside the tail
+#: at p = 8; 4 is that sweet spot and keeps per-chunk launches coarse.
+OVERLAP_CHUNKS_DEFAULT = 4
+
+
+def _overlap_chunks(overlap) -> int:
+    """Normalize the public ``overlap`` knob (False | True | int >= 1) to a
+    chunk count; 1 means the synchronous walker."""
+    if overlap is False or overlap is None:
+        return 1
+    if overlap is True:
+        return OVERLAP_CHUNKS_DEFAULT
+    c = int(overlap)
+    if c != overlap or c < 1:
+        raise ValueError(
+            f"overlap must be False, True, or an int >= 1, got {overlap!r}")
+    return c
 
 
 def _norm(v, compute):
@@ -73,6 +94,7 @@ def _hopm_sweeps(
     prec: Precision,
     three_buffer: bool,
     fuse_pairs: bool = False,
+    overlap=False,
 ):
     """Chain walker on one shard.  Mode ids are global; local axes are looked
     up through each intermediate's `modes` tuple.  Returns (xs, lambda).
@@ -85,6 +107,22 @@ def _hopm_sweeps(
     kernels, so the ever-shrinking (and never block-multiple) chain
     intermediates stream without padding copies.
 
+    ``overlap`` (the paper's §6 task-based overlap, bitwise-safe form):
+    pipeline each external iteration's chain *tail* — the contraction that
+    produces the delayed-reduction payload.  The Gauss–Seidel dependency
+    pins everything else (xs[j] feeds iteration j+1's FIRST launch), so the
+    only overlap window that cannot reorder a single rounding is *inside*
+    the tail: chunk it along the output mode j, and walk chunk c's staged
+    reduction one ppermute hop per subsequent chunk launch
+    (:class:`~repro.dist.collectives.StagedAllreduce`).  Chunking the output
+    dim leaves every element's contraction arithmetic untouched, and
+    doubling hops are elementwise, so per-chunk reduction == whole-vector
+    reduction bitwise.  The pipeline therefore only engages in the doubling
+    regime (ring's chunk layout is payload-size-dependent) and drains to the
+    synchronous path at the j == split all-gather boundary.  To keep sync
+    and overlap hop-for-hop identical, *both* modes run the delayed Σ with
+    ``force_schedule`` explicit doubling hops instead of ``lax.psum``.
+
     NOTE: :func:`_hopm_sweeps_batched` mirrors this schedule for stacked
     batches — keep the two walkers' predicates in lockstep."""
     d = A_loc.ndim
@@ -93,6 +131,8 @@ def _hopm_sweeps(
     A_modes = tuple(range(d))
     lam = jnp.asarray(1.0, prec.compute)
     W = None  # (array, modes, state): A contracted along 0..j-1
+    chunks = _overlap_chunks(overlap)
+    p = coll._axis_size(axis_name) if axis_name is not None else 1
 
     for _ in range(sweeps):
         W = None  # vectors change every sweep; cache is intra-sweep only
@@ -106,6 +146,7 @@ def _hopm_sweeps(
 
             new_W = None
             idx = 0
+            vec = None  # set by the pipelined tail; else the sync path below
             while idx < len(chain):
                 m = chain[idx]
                 nxt = chain[idx + 1] if idx + 1 < len(chain) else None
@@ -118,6 +159,60 @@ def _hopm_sweeps(
                     captures_W = (three_buffer and j >= 1
                                   and done_after_first == set(range(j)))
                     do_fuse = not hit_n and not captures_W
+                consumed = 2 if do_fuse else 1
+                if chunks > 1 and idx + consumed == len(chain):
+                    # Chain tail.  After it the iteration ends in a gather
+                    # (j == split), a delayed Σ (partial / split consumed),
+                    # or nothing (sequential p = 1) — pipeline the Σ/nothing
+                    # cases in the doubling regime, drain at the gather.
+                    gather_end = st.split is not None and not hit_m
+                    reduce_end = st.partial or hit_m
+                    out_ax = modes.index(j)
+                    n_out = cur.shape[out_ax]
+                    C = min(chunks, n_out)
+                    algo = coll.allreduce_algo(n_out, p)
+                    if C > 1 and not gather_end and \
+                            (not reduce_end or algo == "doubling"):
+                        # balanced chunk sizes: exactly C launches for
+                        # any n_out >= C (the launch model counts on it)
+                        base, rem = divmod(n_out, C)
+                        raw = []       # pre-reduction chunks (W capture)
+                        inflight = []  # staged per-chunk reductions
+                        lo = 0
+                        for c in range(C):
+                            sz = base + (1 if c < rem else 0)
+                            if do_fuse:
+                                out_c, st_c = dtvc2_local(
+                                    cur, xs[m], k_local, xs[nxt], st,
+                                    impl=impl, prec=prec,
+                                    rows=(out_ax, lo, sz))
+                            else:
+                                out_c, st_c = dtvc_local(
+                                    cur, xs[m], k_local, st,
+                                    axis_name=axis_name, impl=impl,
+                                    prec=prec, rows=(out_ax, lo, sz))
+                            raw.append(out_c)
+                            # one wire hop per in-flight reduction per chunk
+                            # launch: hop c-1 has no dependence on launch c,
+                            # so the scheduler may put the wire behind the
+                            # compute (program order states the intent)
+                            inflight = [op.step() for op in inflight]
+                            if reduce_end:
+                                inflight.append(coll.staged_allreduce(
+                                    out_c, axis_name, prec, algo=algo))
+                            lo += sz
+                        vec = (jnp.concatenate([op.drain() for op in inflight])
+                               if reduce_end else jnp.concatenate(raw))
+                        st = st_c
+                        modes = (j,)
+                        idx += consumed
+                        if three_buffer and j >= 1 and \
+                                set(range(d)) - set(modes) == set(range(j)):
+                            # tail-position capture (j == d-1 only; the cache
+                            # dies at the sweep boundary before reuse)
+                            new_W = (vec if not reduce_end
+                                     else jnp.concatenate(raw), modes, st)
+                        continue
                 if do_fuse:
                     # ONE launch for the adjacent pair (single-launch Pallas
                     # kernel under impl="pallas", incl. the chain tail)
@@ -138,12 +233,20 @@ def _hopm_sweeps(
             if three_buffer:
                 W = new_W if new_W is not None else W
 
-            # Delayed reduction (Algorithm 1 lines 13-16): one small collective.
-            vec = cur
-            if st.partial:
-                vec = coll.mp_allreduce(vec, axis_name, prec)       # Σ_p
-            elif st.split is not None:
-                vec = coll.all_gather_tiled(vec, axis_name, axis=0)  # ⊔_p
+            # Delayed reduction (Algorithm 1 lines 13-16): one small
+            # collective — unless the pipelined tail already reduced it.
+            # The Σ runs the schedule-explicit doubling hops (not psum) in
+            # the doubling regime so the sync and overlap walkers share
+            # hop-for-hop arithmetic (see mp_allreduce force_schedule).
+            if vec is None:
+                vec = cur
+                if st.partial:
+                    algo = coll.allreduce_algo(vec.shape[-1], p)
+                    vec = coll.mp_allreduce(                         # Σ_p
+                        vec, axis_name, prec, algo=algo,
+                        force_schedule=(algo == "doubling"))
+                elif st.split is not None:
+                    vec = coll.all_gather_tiled(vec, axis_name, axis=0)  # ⊔_p
             # The barrier pins the external-iteration boundary: without it
             # XLA may fuse the reduction/normalization into its producers
             # differently in the batched and per-sample programs, drifting
@@ -168,18 +271,24 @@ def hopm_classic(A, xs, *, sweeps: int = 1, impl: str = "native",
 
 
 def hopm3(A, xs, *, sweeps: int = 1, impl: str = "native",
-          prec: Precision | str = F32, fuse_pairs: bool = False):
-    """Sequential dHOPM_3 (p = 1): the three-buffer contraction schedule."""
+          prec: Precision | str = F32, fuse_pairs: bool = False,
+          overlap=False):
+    """Sequential dHOPM_3 (p = 1): the three-buffer contraction schedule.
+    ``overlap`` chunks the chain tails exactly like the distributed walker
+    (no wire to hide at p = 1, but identical launches/iterates — the
+    sync-vs-pipelined bench baseline)."""
     prec = get_policy(prec)
     return _hopm_sweeps(
         A, xs, sweeps=sweeps, split=None, partial_in=False, axis_name=None,
         impl=impl, prec=prec, three_buffer=True, fuse_pairs=fuse_pairs,
+        overlap=overlap,
     )
 
 
 def hopm3_partial(A_partial, xs, *, axis_name: str, sweeps: int = 1,
                   impl: str = "native", prec: Precision | str = F32,
-                  three_buffer: bool = True, fuse_pairs: bool = False):
+                  three_buffer: bool = True, fuse_pairs: bool = False,
+                  overlap=False):
     """dHOPM_3 over the *implicit sum* decomposition: each process holds one
     full-shape addend A^{(p)} with A = Σ_p A^{(p)} (the k = s case of Eq. 2
     for every chain).  Must run inside a shard_map manual region over
@@ -188,7 +297,7 @@ def hopm3_partial(A_partial, xs, *, axis_name: str, sweeps: int = 1,
     return _hopm_sweeps(
         A_partial, xs, sweeps=sweeps, split=None, partial_in=True,
         axis_name=axis_name, impl=impl, prec=prec, three_buffer=three_buffer,
-        fuse_pairs=fuse_pairs,
+        fuse_pairs=fuse_pairs, overlap=overlap,
     )
 
 
@@ -203,6 +312,7 @@ def _hopm_sweeps_batched(
     impl: str,
     prec: Precision,
     fuse_pairs: bool = False,
+    overlap=False,
 ):
     """The three-buffer chain walker over a stacked batch ``A_b[B, n_0..]``
     of independent same-shape tensors (or shards): identical schedule to
@@ -222,7 +332,11 @@ def _hopm_sweeps_batched(
     all-gather of the ``(B, n_j/p)`` stack when iteration j *is* the split.
     Reduction algos are dispatched on the **per-leaf** vector size n_j, not
     B * n_j, so the wire schedule (and its rounding behaviour) matches B
-    separate per-leaf reductions.  Returns (xs[B, n_j] list, lam[B]).
+    separate per-leaf reductions.  ``overlap`` pipelines the chain tail
+    exactly like :func:`_hopm_sweeps` (chunked along the per-sample output
+    mode; staged stacked reductions — doubling hops on a ``(B, chunk)``
+    stack are elementwise, so stacking preserves the per-leaf bitwise
+    guarantee).  Returns (xs[B, n_j] list, lam[B]).
 
     NOTE: the chain schedule below (three buffers, W capture, fused-pair /
     split gating) deliberately mirrors :func:`_hopm_sweeps`; a change to
@@ -237,6 +351,7 @@ def _hopm_sweeps_batched(
     B = A_b.shape[0]
     lam = jnp.ones((B,), prec.compute)
     W = None  # (array, modes, state): A_b contracted along 0..j-1
+    chunks = _overlap_chunks(overlap)
 
     p = None
     if partial_in or split is not None:
@@ -257,6 +372,7 @@ def _hopm_sweeps_batched(
 
             new_W = None
             idx = 0
+            vec = None  # set by the pipelined tail; else the sync path below
             while idx < len(chain):
                 m = chain[idx]
                 nxt = chain[idx + 1] if idx + 1 < len(chain) else None
@@ -269,6 +385,57 @@ def _hopm_sweeps_batched(
                     done_after_first = (set(range(d)) - set(modes)) | {m}
                     captures_W = j >= 1 and done_after_first == set(range(j))
                     do_fuse = not hit_n and not captures_W
+                consumed = 2 if do_fuse else 1
+                if chunks > 1 and idx + consumed == len(chain):
+                    # Pipelined chain tail — the batched mirror of
+                    # _hopm_sweeps: chunk along the per-sample output mode,
+                    # stage each (B, chunk) stack's doubling reduction one
+                    # hop per subsequent chunk launch, drain at the gather.
+                    gather_end = st.split is not None and not hit_m
+                    reduce_end = st.partial or hit_m
+                    out_ax = modes.index(j)
+                    n_out = cur.shape[out_ax + 1]
+                    C = min(chunks, n_out)
+                    algo = coll.allreduce_algo(n_out, p or 1)
+                    if C > 1 and not gather_end and \
+                            (not reduce_end or algo == "doubling"):
+                        # balanced chunk sizes: exactly C launches for
+                        # any n_out >= C (the launch model counts on it)
+                        base, rem = divmod(n_out, C)
+                        raw = []       # pre-reduction chunks (W capture)
+                        inflight = []  # staged per-chunk stacked reductions
+                        lo = 0
+                        for c in range(C):
+                            sz = base + (1 if c < rem else 0)
+                            if do_fuse:
+                                out_c, st_c = dtvc2_local_batched(
+                                    cur, xs[m], k_local, xs[nxt], st,
+                                    impl=impl, prec=prec,
+                                    rows=(out_ax, lo, sz))
+                            else:
+                                out_c, st_c = dtvc_local_batched(
+                                    cur, xs[m], k_local, st,
+                                    axis_name=axis_name, impl=impl,
+                                    prec=prec, rows=(out_ax, lo, sz))
+                            raw.append(out_c)
+                            inflight = [op.step() for op in inflight]
+                            if reduce_end:
+                                inflight.append(coll.staged_allreduce(
+                                    out_c, axis_name, prec, algo=algo))
+                            lo += sz
+                        vec = (jnp.concatenate(
+                                   [op.drain() for op in inflight], axis=1)
+                               if reduce_end
+                               else jnp.concatenate(raw, axis=1))
+                        st = st_c
+                        modes = (j,)
+                        idx += consumed
+                        if j >= 1 and \
+                                set(range(d)) - set(modes) == set(range(j)):
+                            new_W = (vec if not reduce_end
+                                     else jnp.concatenate(raw, axis=1),
+                                     modes, st)
+                        continue
                 if do_fuse:
                     # ONE batched launch for the adjacent pair of all B shards
                     cur, st = dtvc2_local_batched(
@@ -288,16 +455,20 @@ def _hopm_sweeps_batched(
 
             # Delayed reduction: ONE stacked collective for the whole batch
             # (algo picked from the per-leaf size n_j, not B * n_j, so the
-            # wire schedule matches B separate per-leaf reductions).
-            vec = cur  # (B, n_j) — or (B, n_j/p) local slices when j == split
-            if st.partial:
-                vec = coll.mp_allreduce(
-                    vec, axis_name, prec,
-                    algo=("auto" if jnp.dtype(prec.storage)
-                          == jnp.dtype(prec.compute)
-                          else coll.allreduce_algo(vec.shape[-1], p)))
-            elif st.split is not None:
-                vec = coll.all_gather_tiled(vec, axis_name, axis=1)  # ⊔_p
+            # wire schedule matches B separate per-leaf reductions) — with
+            # schedule-explicit doubling hops, matching the pipelined tail
+            # hop-for-hop (see mp_allreduce force_schedule).
+            if vec is not None:
+                pass  # the pipelined tail already reduced it
+            else:
+                vec = cur  # (B, n_j) — or (B, n_j/p) slices when j == split
+                if st.partial:
+                    algo = coll.allreduce_algo(vec.shape[-1], p)
+                    vec = coll.mp_allreduce(
+                        vec, axis_name, prec, algo=algo,
+                        force_schedule=(algo == "doubling"))
+                elif st.split is not None:
+                    vec = coll.all_gather_tiled(vec, axis_name, axis=1)  # ⊔_p
             # Same external-iteration barrier as _hopm_sweeps (see there):
             # both walkers must normalize an identically-isolated vector or
             # cross-program fusion drifts the last bit of the iterates.
@@ -319,6 +490,7 @@ def hopm3_sharded(
     impl: str = "native",
     prec: Precision | str = F32,
     fuse_pairs: bool = False,
+    overlap=False,
 ):
     """The per-shard body of :func:`dhopm3` (Algorithm 1 over a 1-D split)
     for callers already *inside* a shard_map manual region over
@@ -331,7 +503,7 @@ def hopm3_sharded(
     return _hopm_sweeps(
         A_loc, xs, sweeps=sweeps, split=split, partial_in=False,
         axis_name=axis_name, impl=impl, prec=prec, three_buffer=True,
-        fuse_pairs=fuse_pairs,
+        fuse_pairs=fuse_pairs, overlap=overlap,
     )
 
 
@@ -346,6 +518,7 @@ def hopm3_batched(
     partial: bool = False,
     split: int | None = None,
     axis_name: str | None = None,
+    overlap=False,
 ):
     """dHOPM_3 over a *batch* of B stacked order-d tensors
     ``A_b[B, n_0..n_{d-1}]`` with per-batch factor vectors ``xs[j][B, n_j]``:
@@ -376,6 +549,7 @@ def hopm3_batched(
     return _hopm_sweeps_batched(
         A_b, xs, sweeps=sweeps, split=split, partial_in=partial,
         axis_name=axis_name, impl=impl, prec=prec, fuse_pairs=fuse_pairs,
+        overlap=overlap,
     )
 
 
@@ -391,11 +565,17 @@ def dhopm3(
     prec: Precision | str = F32,
     three_buffer: bool = True,
     fuse_pairs: bool = False,
+    overlap=False,
 ):
     """The paper's distributed HOPM over a 1-D split (Algorithm 1).
 
     ``s`` defaults to d-1 — the paper's recommendation (minimal streamed
-    memory, Eq. 6).  ``A.shape[s]`` must divide the axis size."""
+    memory, Eq. 6).  ``A.shape[s]`` must divide the axis size.
+
+    ``overlap`` (False | True | int chunks) pipelines each delayed
+    reduction behind its own chain tail (see :func:`_hopm_sweeps`) —
+    bitwise-equal iterates to the synchronous walker under the ``mulsum``
+    engine."""
     prec = get_policy(prec)
     d = A.ndim
     if s is None:
@@ -411,6 +591,7 @@ def dhopm3(
             a_loc, list(xs_in), sweeps=sweeps, split=s, partial_in=False,
             axis_name=axis_name, impl=impl, prec=prec,
             three_buffer=three_buffer, fuse_pairs=fuse_pairs,
+            overlap=overlap,
         )
         return tuple(out_xs), lam
 
@@ -435,6 +616,7 @@ def dhopm3_batched(
     impl: str = "native",
     prec: Precision | str = F32,
     fuse_pairs: bool = False,
+    overlap=False,
 ):
     """The paper's distributed HOPM (Algorithm 1) over a *batch* of B
     stacked order-d tensors ``A_b[B, n_0..n_{d-1}]``, each 1-D split along
@@ -466,6 +648,7 @@ def dhopm3_batched(
         out_xs, lam = _hopm_sweeps_batched(
             a_loc, list(xs_in), sweeps=sweeps, split=s, partial_in=False,
             axis_name=axis_name, impl=impl, prec=prec, fuse_pairs=fuse_pairs,
+            overlap=overlap,
         )
         return tuple(out_xs), lam
 

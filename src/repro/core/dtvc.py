@@ -70,6 +70,30 @@ class ShardState:
         return ShardState(split=split, partial=self.partial)
 
 
+def _apply_rows(A_loc: jax.Array, rows, contracted: tuple[int, ...],
+                state: ShardState, batch_offset: int = 0) -> jax.Array:
+    """Restrict a shard op to output rows ``rows = (axis, start, size)`` of
+    the *local, per-sample* ``axis`` — the pipelined dHOPM3 walker's chunked
+    chain tail.  Slicing an uncontracted axis leaves every surviving output
+    element's arithmetic untouched (the bitwise lemma the pipeline rests on),
+    so ``concat(chunks) == whole`` holds exactly for any engine.
+
+    ``axis`` must be neither a contracted mode (slicing it would change the
+    Σ) nor the split dim (its extent encodes this process's Eq. 2 range)."""
+    if rows is None:
+        return A_loc
+    axis, start, size = rows
+    if axis in contracted:
+        raise ValueError(
+            f"rows axis {axis} is contracted {contracted}; chunk the output "
+            "axis only")
+    if state.split is not None and axis == state.split:
+        raise ValueError(
+            f"rows axis {axis} is the split dim; drain the pipeline at the "
+            "split boundary instead of chunking it")
+    return lax.slice_in_dim(A_loc, start, start + size, axis=axis + batch_offset)
+
+
 def _fusion_island(out: jax.Array, impl: str) -> jax.Array:
     """The ``mulsum`` engine's bitwise-batchability contract: every
     contraction is its own XLA fusion island, so the stacked and per-sample
@@ -93,12 +117,18 @@ def dtvc_local(
     alpha: float = 1.0,
     beta: float = 0.0,
     y: jax.Array | None = None,
+    rows: tuple[int, int, int] | None = None,
 ) -> tuple[jax.Array, ShardState]:
     """One TVC on a local shard; ``k`` is the *local* mode index of ``A_loc``.
 
     When ``k == state.split`` (Eq. 2) the function slices ``x`` to this
     process's range and marks the output partial — the global Σ is *delayed*
     (Algorithm 1) until the caller reduces.
+
+    ``rows=(axis, start, size)`` restricts the contraction to a chunk of an
+    uncontracted output ``axis`` (see :func:`_apply_rows`) — the pipelined
+    chain tail contracts one chunk per launch so each chunk's delayed
+    reduction can start while the next chunk computes.
 
     With ``impl="pallas"`` the shard streams through the zero-copy ragged
     kernels: local extents are almost never block multiples after a 1-D
@@ -108,6 +138,7 @@ def dtvc_local(
     ``alpha``/``beta``/``y`` update is folded into the kernel epilogue.
     """
     prec = get_policy(prec)
+    A_loc = _apply_rows(A_loc, rows, (k,), state)
     hit_split = state.split is not None and k == state.split
     if hit_split:
         if axis_name is None:
@@ -137,6 +168,7 @@ def dtvc2_local(
     alpha: float = 1.0,
     beta: float = 0.0,
     y: jax.Array | None = None,
+    rows: tuple[int, int, int] | None = None,
 ) -> tuple[jax.Array, ShardState]:
     """One *fused-pair* contraction of adjacent local modes (k, k+1) on a
     shard — the single-launch counterpart of two :func:`dtvc_local` calls,
@@ -150,6 +182,7 @@ def dtvc2_local(
     ``alpha``/``beta``/``y`` update fused into its epilogue."""
     prec = get_policy(prec)
     new_state = state.after_pair_contraction(k)  # raises on split-in-pair
+    A_loc = _apply_rows(A_loc, rows, (k, k + 1), state)
     if x1.shape[0] != A_loc.shape[k] or x2.shape[0] != A_loc.shape[k + 1]:
         raise ValueError(
             f"vector sizes ({x1.shape[0]}, {x2.shape[0]}) != local pair "
@@ -176,6 +209,7 @@ def dtvc_local_batched(
     alpha=1.0,
     beta=0.0,
     y: jax.Array | None = None,
+    rows: tuple[int, int, int] | None = None,
 ) -> tuple[jax.Array, ShardState]:
     """Batched counterpart of :func:`dtvc_local`: ONE contraction launch over
     a stacked batch ``A_b[B, ...]`` of B same-shape local shards, with
@@ -191,6 +225,7 @@ def dtvc_local_batched(
     ``alpha``/``beta`` may be scalars or per-batch ``[B]`` arrays; with
     ``impl="pallas"`` they ride in the batched kernels' fused epilogue."""
     prec = get_policy(prec)
+    A_b = _apply_rows(A_b, rows, (k,), state, batch_offset=1)
     B = A_b.shape[0]
     hit_split = state.split is not None and k == state.split
     if hit_split:
@@ -223,6 +258,7 @@ def dtvc2_local_batched(
     alpha=1.0,
     beta=0.0,
     y: jax.Array | None = None,
+    rows: tuple[int, int, int] | None = None,
 ) -> tuple[jax.Array, ShardState]:
     """Batched fused-pair shard op: ONE launch contracts the adjacent local
     modes (k, k+1) of all B stacked shards (the single-launch counterpart of
@@ -234,6 +270,7 @@ def dtvc2_local_batched(
     unbatched :func:`dtvc2_local`."""
     prec = get_policy(prec)
     new_state = state.after_pair_contraction(k)  # raises on split-in-pair
+    A_b = _apply_rows(A_b, rows, (k, k + 1), state, batch_offset=1)
     B = A_b.shape[0]
     if x1.shape != (B, A_b.shape[k + 1]) or \
             x2.shape != (B, A_b.shape[k + 2]):

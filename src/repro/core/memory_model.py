@@ -26,7 +26,7 @@ __all__ = [
     "tvc_batched_streamed_elems", "tvc2_batched_streamed_elems",
     "launch_amortized_speedup", "simulate_sweep_batched",
     "dhopm_launches_per_sweep", "dhopm_wire_bytes_sweep",
-    "dhopm_batched_wire_bytes_sweep",
+    "dhopm_batched_wire_bytes_sweep", "dhopm_time_sweep",
 ]
 
 
@@ -247,6 +247,7 @@ def simulate_sweep(
     algo: Literal["classic", "hopm3", "hopm3_fused"] = "classic",
     include_comm: bool = False,
     split_alive: bool | None = None,
+    overlap_chunks: int = 1,
 ) -> float:
     """Elements streamed per process for one full sweep of d external
     iterations.  ``classic`` = canonical two-buffer distributed HOPM
@@ -260,7 +261,16 @@ def simulate_sweep(
     runtime walkers keep the split schedule even at p = 1 (the split is
     structural — it blocks pair fusion and takes the Eq. 2 slice path with a
     full-extent chunk), so single-process accounting of a *split* run must
-    pass ``split_alive=True``."""
+    pass ``split_alive=True``.
+
+    ``overlap_chunks`` > 1 accounts the pipelined walker (``overlap=``): the
+    chain tail runs as min(overlap_chunks, n) chunked launches, each
+    re-reading the contracted-mode vector(s) — (C-1) extra x reads per
+    pipelined tail (chunking the output dim partitions the tensor read and
+    the output write, so only the vectors are re-streamed).  The pipeline
+    drains at the j == s gather iteration, matching the runtime, and the
+    model assumes the doubling-reduction regime (the runtime falls back to
+    the synchronous tail for ring-regime payloads)."""
     A = _T(tuple(range(d)), split=(p > 1 if split_alive is None
                                    else split_alive), partial=False)
     total = 0.0
@@ -284,15 +294,28 @@ def simulate_sweep(
             split_hit = cur.split and (m == s or nxt == s)
             done_after_first = (set(range(d)) - set(cur.modes)) | {m}
             captures_W = three and j >= 1 and done_after_first == set(range(j))
-            if fused and nxt == m + 1 and not split_hit and not captures_W:
+            do_fuse = (fused and nxt == m + 1 and not split_hit
+                       and not captures_W)
+            consumed = 2 if do_fuse else 1
+            is_tail = idx + consumed == len(chain)
+            # Pipelined tail (mirrors the walkers' engage predicate): the
+            # gather iteration — split alive through a tail that doesn't
+            # consume it — drains; everything else chunks.
+            tail_hit = cur.split and m == s and not do_fuse
+            pipelined = (is_tail and overlap_chunks > 1
+                         and not (cur.split and not tail_hit))
+            C = min(overlap_chunks, n) if pipelined else 1
+            if do_fuse:
                 read = cur.size(n, p)
                 cur, _, x1 = _contract(cur, m, s, n, p)
                 cur, _, x2 = _contract(cur, nxt, s, n, p)
                 total += read + x1 + x2 + cur.size(n, p)
+                total += (C - 1) * (x1 + x2)    # per-chunk vector re-reads
                 idx += 2
             else:
                 cur, read, x_read = _contract(cur, m, s, n, p)
                 total += read + x_read + cur.size(n, p)
+                total += (C - 1) * x_read       # per-chunk vector re-reads
                 idx += 1
             if three and j >= 1 and \
                     set(range(d)) - set(cur.modes) == set(range(j)):
@@ -347,7 +370,8 @@ def simulate_sweep_batched(
 
 
 def dhopm_launches_per_sweep(d: int, s: int | None = None,
-                             fuse_pairs: bool = False) -> int:
+                             fuse_pairs: bool = False,
+                             overlap_chunks: int = 1) -> int:
     """Contraction-launch count of ONE dHOPM_3 sweep (the three-buffer
     walker of ``hopm3`` / ``dhopm3`` / their batched twins): d chains with
     the W prefix cache skipping (d-1)(d-2)/2 contractions, minus one launch
@@ -355,7 +379,14 @@ def dhopm_launches_per_sweep(d: int, s: int | None = None,
     W-cache capture point and wherever the pair touches the 1-D split mode
     ``s`` (``None`` = no split).  The batched walker issues exactly this
     many *batched* launches per sweep, independent of B — the jaxpr-asserted
-    guarantee the bench's dispatch-allowance accounting builds on."""
+    guarantee the bench's dispatch-allowance accounting builds on.
+
+    ``overlap_chunks`` > 1 counts the pipelined walker (``overlap=``): every
+    chain tail that doesn't end at the j == s gather boundary runs as
+    ``overlap_chunks`` chunked launches.  Assumes every n_j >=
+    ``overlap_chunks`` and the doubling-reduction regime (the runtime's
+    balanced chunking issues exactly this many launches then; it drains to
+    one launch at the gather, as counted here)."""
     modes_A = tuple(range(d))
     launches = 0
     W = None  # (modes, split_alive)
@@ -374,7 +405,14 @@ def dhopm_launches_per_sweep(d: int, s: int | None = None,
             hit = split_alive and (m == s or nxt == s)
             done_after_first = (set(range(d)) - set(modes)) | {m}
             captures_W = j >= 1 and done_after_first == set(range(j))
-            if fuse_pairs and nxt == m + 1 and not hit and not captures_W:
+            do_fuse = (fuse_pairs and nxt == m + 1 and not hit
+                       and not captures_W)
+            consumed = 2 if do_fuse else 1
+            is_tail = idx + consumed == len(chain)
+            tail_hit = split_alive and m == s and not do_fuse
+            pipelined = (is_tail and overlap_chunks > 1
+                         and not (split_alive and not tail_hit))
+            if do_fuse:
                 modes = tuple(mm for mm in modes if mm not in (m, nxt))
                 idx += 2
             else:
@@ -382,7 +420,7 @@ def dhopm_launches_per_sweep(d: int, s: int | None = None,
                     split_alive = False
                 modes = tuple(mm for mm in modes if mm != m)
                 idx += 1
-            launches += 1
+            launches += overlap_chunks if pipelined else 1
             if j >= 1 and set(range(d)) - set(modes) == set(range(j)):
                 new_W = (modes, split_alive)
         W = new_W if new_W is not None else W
@@ -426,3 +464,93 @@ def dhopm_batched_wire_bytes_sweep(b: int, shape, p: int, itemsize: int,
     if b <= 0:
         raise ValueError(f"batch must be positive, got {b}")
     return b * dhopm_wire_bytes_sweep(shape, p, itemsize, split)
+
+
+def _tail_stream_elems(shape, p: int, split: int | None, j: int) -> float:
+    """Elements the iteration-j chain *tail* streams per process under the
+    three-buffer (unfused) schedule: the tail contracts the last chain mode
+    — mode d-1, or d-2 when j == d-1 — leaving the (n_j,) payload.  Local
+    extents: the output mode is an n_j/p slice when j == split; the
+    contracted mode is an n/p slice (Eq. 2) when IT is the split and the
+    split survived the chain prefix (split == last != j)."""
+    d = len(shape)
+    last = d - 1 if j != d - 1 else d - 2
+    nj = shape[j] / p if split == j else float(shape[j])
+    nl = (shape[last] / p if (split == last and split != j)
+          else float(shape[last]))
+    return nj * nl + nl + nj      # read cur + read x (slice) + write payload
+
+
+def dhopm_time_sweep(shape, p: int, itemsize: int, *,
+                     split: int | None = None, overlap_chunks: int = 1,
+                     peak_gbs: float, wire_gbs: float,
+                     dispatch_us: float = 0.0) -> dict:
+    """Overlap-aware time model of ONE dHOPM_3 sweep, extending
+    :func:`dhopm_wire_bytes_sweep` from bytes to exposed wire *time*.
+
+    Per external iteration j the delayed collective (wire) can only overlap
+    the chain tail that produces its payload — the Gauss–Seidel dependency
+    pins every other launch (see ``_hopm_sweeps``).  The synchronous walker
+    exposes the full wire time; the pipelined walker splits the tail into C
+    = min(overlap_chunks, n_j) balanced chunks and stages chunk c's
+    reduction behind chunk c+1's launch, so per stage
+
+        exposed_c = max(0, wire_c - tail_chunk_time),   c < C-1
+        exposed_{C-1} = wire_{C-1}                      (nothing left to hide)
+
+    with ``wire_c = wire_j / C`` and ``tail_chunk_time = tail_stream_time/C
+    + dispatch_us``.  The gather iteration j == split (and ring-regime
+    payloads — not modeled, the runtime drains them) stays fully exposed.
+    Unfused tails only (``fuse_pairs`` tails chunk identically but stream a
+    3-mode view; the bench's overlap cells run both, gated on the unfused
+    accounting with the fused tail's smaller stream being conservative).
+
+    Returns totals in microseconds: ``wire_us`` (all collectives),
+    ``exposed_wire_us``, ``hidden_wire_us``, ``tail_stream_us``, and
+    ``extra_dispatch_us`` ((C-1) extra launches per pipelined tail), plus
+    the ``per_iteration`` stage list."""
+    from repro.dist.collectives import (
+        allreduce_algo,
+        wire_bytes_allgather,
+        wire_bytes_allreduce,
+    )
+    if overlap_chunks < 1:
+        raise ValueError(
+            f"overlap_chunks must be >= 1, got {overlap_chunks}")
+    to_us = lambda nbytes, gbs: nbytes / (gbs * 1e9) * 1e6
+    stages = []
+    for j, nj in enumerate(shape):
+        gather = split is not None and j == split
+        if gather:
+            wire_us = to_us(wire_bytes_allgather(nj, p, itemsize), wire_gbs)
+        else:
+            wire_us = to_us(
+                wire_bytes_allreduce(nj, p, itemsize, allreduce_algo(nj, p)),
+                wire_gbs)
+        tail_us = to_us(_tail_stream_elems(shape, p, split, j) * itemsize,
+                        peak_gbs)
+        C = min(overlap_chunks, nj)
+        pipelined = (C > 1 and not gather
+                     and allreduce_algo(nj, p) == "doubling")
+        if pipelined:
+            w_c = wire_us / C
+            t_c = tail_us / C + dispatch_us
+            exposed_us = (C - 1) * max(0.0, w_c - t_c) + w_c
+            extra_dispatch_us = (C - 1) * dispatch_us
+        else:
+            C = 1
+            exposed_us = wire_us
+            extra_dispatch_us = 0.0
+        stages.append({
+            "j": j, "chunks": C, "wire_us": wire_us, "tail_us": tail_us,
+            "exposed_us": exposed_us, "extra_dispatch_us": extra_dispatch_us,
+        })
+    return {
+        "per_iteration": stages,
+        "wire_us": sum(st["wire_us"] for st in stages),
+        "exposed_wire_us": sum(st["exposed_us"] for st in stages),
+        "hidden_wire_us": sum(st["wire_us"] - st["exposed_us"]
+                              for st in stages),
+        "tail_stream_us": sum(st["tail_us"] for st in stages),
+        "extra_dispatch_us": sum(st["extra_dispatch_us"] for st in stages),
+    }

@@ -30,6 +30,7 @@ All ``mp_*`` functions must run inside a shard_map manual region over
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
@@ -43,7 +44,11 @@ __all__ = [
     "mp_allreduce",
     "mp_allreduce_ring",
     "mp_allreduce_doubling",
+    "mp_reduce_scatter",
     "all_gather_tiled",
+    "StagedAllreduce",
+    "staged_allreduce",
+    "staged_tree_allreduce",
     "wire_bytes_allreduce",
     "wire_bytes_allgather",
 ]
@@ -72,6 +77,51 @@ def _ring_perm(p: int):
     return [(i, (i + 1) % p) for i in range(p)]
 
 
+def _rs_step(parts: jax.Array, s: int, r, axis_name: str, perm,
+             prec: Precision) -> jax.Array:
+    """One reduce-scatter hop: at step s, rank r forwards the partial sum of
+    chunk (r - s) mod p and folds the incoming chunk (r - s - 1) mod p into
+    its accumulator (demote on the wire, promote for the add)."""
+    c_send = (r - s) % len(perm)
+    c_recv = (r - s - 1) % len(perm)
+    wire = lax.dynamic_slice_in_dim(parts, c_send, 1, 0).astype(prec.storage)
+    recv = lax.ppermute(wire, axis_name, perm)
+    cur = lax.dynamic_slice_in_dim(parts, c_recv, 1, 0)
+    return lax.dynamic_update_slice_in_dim(
+        parts, cur + recv.astype(prec.compute), c_recv, 0)
+
+
+def _ring_pad(x: jax.Array, p: int, prec: Precision):
+    """Flatten + zero-pad to p equal chunks; returns ((p, m) parts, n)."""
+    flat = x.reshape(-1).astype(prec.compute)
+    n = flat.shape[0]
+    m = -(-n // p)
+    if m * p != n:
+        flat = jnp.pad(flat, (0, m * p - n))
+    return flat.reshape(p, m), n
+
+
+def mp_reduce_scatter(x: jax.Array, axis_name: str,
+                      prec: Precision | str) -> jax.Array:
+    """§5.5 reduce-scatter building block (the first half of the ring
+    all-reduce): p-1 storage-precision hops, after which this process owns
+    the fully reduced chunk (r+1) mod p of the flattened payload (zero-padded
+    to p equal chunks of ceil(n/p) elements).  Returns that chunk in
+    ``prec.compute``.  At p = 1 it degenerates to the promoted flat payload.
+    """
+    prec = get_policy(prec)
+    p = _axis_size(axis_name)
+    if p == 1:
+        return x.reshape(-1).astype(prec.compute)
+    parts, _ = _ring_pad(x, p, prec)
+    r = lax.axis_index(axis_name)
+    perm = _ring_perm(p)
+    for s in range(p - 1):
+        parts = _rs_step(parts, s, r, axis_name, perm, prec)
+    own = (r + 1) % p
+    return lax.dynamic_slice_in_dim(parts, own, 1, 0)[0]
+
+
 def mp_allreduce_ring(x: jax.Array, axis_name: str,
                       prec: Precision | str) -> jax.Array:
     """Ring all-reduce with storage-precision hops (reduce-scatter +
@@ -81,40 +131,23 @@ def mp_allreduce_ring(x: jax.Array, axis_name: str,
     reduce-scatter every partial-sum chunk is demoted to ``prec.storage``
     before each of the p-1 hops and re-promoted to ``prec.compute`` for the
     add; the final all-gather likewise moves storage-precision bytes only.
-    Total wire traffic per process: 2·(p-1)/p·n elements.
+    Total wire traffic per process: 2·(p-1)·ceil(n/p) elements (the pad
+    rides the wire too — ``wire_bytes_allreduce`` prices the same).
     """
     prec = get_policy(prec)
     p = _axis_size(axis_name)
-    flat = x.reshape(-1).astype(prec.compute)
     if p == 1:
-        return flat.reshape(x.shape)
-    n = flat.shape[0]
-    m = -(-n // p)
-    if m * p != n:
-        flat = jnp.pad(flat, (0, m * p - n))
-    parts = flat.reshape(p, m)
-    r = lax.axis_index(axis_name)
-    perm = _ring_perm(p)
-
-    # Reduce-scatter: at step s, rank r forwards the partial sum of chunk
-    # (r - s) mod p and folds the incoming chunk (r - s - 1) mod p into its
-    # accumulator.  After p-1 steps rank r owns the complete chunk (r+1)%p.
-    for s in range(p - 1):
-        c_send = (r - s) % p
-        c_recv = (r - s - 1) % p
-        wire = lax.dynamic_slice_in_dim(parts, c_send, 1, 0).astype(prec.storage)
-        recv = lax.ppermute(wire, axis_name, perm)
-        cur = lax.dynamic_slice_in_dim(parts, c_recv, 1, 0)
-        parts = lax.dynamic_update_slice_in_dim(
-            parts, cur + recv.astype(prec.compute), c_recv, 0)
-
-    own = (r + 1) % p
-    mine = lax.dynamic_slice_in_dim(parts, own, 1, 0)[0].astype(prec.storage)
+        return x.reshape(-1).astype(prec.compute).reshape(x.shape)
+    n = x.size
+    mine = mp_reduce_scatter(x, axis_name, prec).astype(prec.storage)
+    m = mine.shape[0]
     gathered = lax.all_gather(mine, axis_name, axis=0, tiled=True)  # (p*m,)
-    # Rank j contributed chunk (j+1)%p, so chunk c sits at offset ((c-1)%p)*m;
-    # one roll by m restores chunk order (== the original flat layout).
-    out = jnp.roll(gathered.astype(prec.compute), m)[:n]
-    return out.reshape(x.shape)
+    # Rank j contributed chunk (j+1)%p, so chunk c sits at offset ((c-1)%p)*m:
+    # chunk 0 is the last run and chunks 1..p-1 lead.  Restore chunk order by
+    # concatenating the two runs — a static slice/concat, not a full-payload
+    # jnp.roll copy.
+    out = jnp.concatenate([gathered[(p - 1) * m:], gathered[:(p - 1) * m]])
+    return out.astype(prec.compute)[:n].reshape(x.shape)
 
 
 def mp_allreduce_doubling(x: jax.Array, axis_name: str,
@@ -144,7 +177,7 @@ def mp_allreduce_doubling(x: jax.Array, axis_name: str,
 
 
 def mp_allreduce(x: jax.Array, axis_name: str, prec: Precision | str,
-                 algo: str = "auto") -> jax.Array:
+                 algo: str = "auto", force_schedule: bool = False) -> jax.Array:
     """The §5.5 mixed-precision Σ over ``axis_name``.
 
     Fast path: when ``prec.storage == prec.compute`` there is nothing to
@@ -155,9 +188,16 @@ def mp_allreduce(x: jax.Array, axis_name: str, prec: Precision | str,
     axes (fewer roundings *and* fewer hops for the delayed-reduction
     vectors), ``ring`` for large tensors (bandwidth-optimal) — the same rule
     the analytic ``wire_bytes_summary`` accounting applies.
+
+    ``force_schedule=True`` skips the psum fast path and runs the explicit
+    ppermute schedule even when storage == compute (no precision change —
+    demote is then the identity).  The pipelined dHOPM3 walker needs this so
+    its synchronous and overlapped modes share hop-for-hop arithmetic: the
+    staged reductions below are built from the same explicit hops, and
+    psum's schedule is XLA's to choose.
     """
     prec = get_policy(prec)
-    if jnp.dtype(prec.storage) == jnp.dtype(prec.compute):
+    if not force_schedule and jnp.dtype(prec.storage) == jnp.dtype(prec.compute):
         return lax.psum(x.astype(prec.compute), axis_name)
     p = _axis_size(axis_name)
     if algo == "auto":
@@ -176,19 +216,166 @@ def all_gather_tiled(x: jax.Array, axis_name: str, axis: int = 0) -> jax.Array:
     return lax.all_gather(x, axis_name, axis=axis, tiled=True)
 
 
+@dataclasses.dataclass(frozen=True)
+class StagedAllreduce:
+    """A resumable mp_allreduce: the same storage-precision hops, one wire
+    exchange per ``step()``.
+
+    This is the overlap seam of the pipelined dHOPM3 walker (paper §6's
+    task-based overlap of communication and contraction): the caller launches
+    an independent kernel, advances every in-flight reduction by one hop,
+    launches the next kernel, and so on — each hop's ppermute has no data
+    dependence on the interleaved launches, so XLA's latency-hiding
+    scheduler is free to put the wire behind the compute.
+
+    Hop arithmetic is identical to the monolithic schedules:
+
+    * ``doubling`` — each step is one distance-2^s exchange-and-add of the
+      full payload (elementwise, so per-chunk staging of a larger payload is
+      bitwise-equal to reducing it whole).
+    * ``ring`` — p-1 reduce-scatter steps (the ``_rs_step`` hops of
+      :func:`mp_reduce_scatter`) followed by p-1 all-gather steps that walk
+      each process's reduced chunk around the ring, scattering it straight
+      into its global slot (layout-only, value-identical to the tiled
+      all-gather + reorder epilogue of :func:`mp_allreduce_ring`).
+
+    Instances are immutable; ``step()`` returns the advanced reduction.  Use
+    within a single trace only (this is not a pytree).
+    """
+    axis_name: str
+    prec: Precision
+    algo: str
+    p: int
+    shape: tuple
+    n: int
+    hops_done: int
+    hops_total: int
+    payload: jax.Array        # doubling: compute-dtype accumulator
+    gather: jax.Array | None = None   # ring: (storage wire chunk, (p, m) out)
+
+    @property
+    def done(self) -> bool:
+        return self.hops_done >= self.hops_total
+
+    def step(self) -> "StagedAllreduce":
+        """Issue exactly one wire hop; returns the advanced reduction."""
+        if self.done:
+            return self
+        if self.algo == "doubling":
+            d = 1 << self.hops_done
+            perm = [(i, i ^ d) for i in range(self.p)]
+            recv = lax.ppermute(self.payload.astype(self.prec.storage),
+                                self.axis_name, perm)
+            nxt = self.payload + recv.astype(self.prec.compute)
+            return dataclasses.replace(self, payload=nxt,
+                                       hops_done=self.hops_done + 1)
+        # ring: reduce-scatter phase, then chunk-walk all-gather phase
+        p = self.p
+        r = lax.axis_index(self.axis_name)
+        if self.hops_done < p - 1:                      # reduce-scatter hop
+            parts = _rs_step(self.payload, self.hops_done, r, self.axis_name,
+                             _ring_perm(p), self.prec)
+            nxt = self
+            if self.hops_done + 1 == p - 1:             # RS done: seed gather
+                own = (r + 1) % p
+                mine = lax.dynamic_slice_in_dim(parts, own, 1, 0)
+                out = jnp.zeros_like(parts, dtype=self.prec.storage)
+                out = lax.dynamic_update_slice_in_dim(
+                    out, mine.astype(self.prec.storage), own, 0)
+                nxt = dataclasses.replace(
+                    nxt, gather=(mine.astype(self.prec.storage), out))
+            return dataclasses.replace(nxt, payload=parts,
+                                       hops_done=self.hops_done + 1)
+        # all-gather hop s: after s forwards rank r holds the chunk rank
+        # (r - s) contributed, whose global slot is (r - s + 1) mod p.
+        s = self.hops_done - (p - 1) + 1
+        wire, out = self.gather
+        wire = lax.ppermute(wire, self.axis_name, _ring_perm(p))
+        out = lax.dynamic_update_slice_in_dim(out, wire, (r - s + 1) % p, 0)
+        return dataclasses.replace(self, gather=(wire, out),
+                                   hops_done=self.hops_done + 1)
+
+    def result(self) -> jax.Array:
+        """The reduced value (``prec.compute``, original shape).  Requires
+        ``done``."""
+        if not self.done:
+            raise ValueError(
+                f"staged all-reduce has {self.hops_total - self.hops_done} "
+                "hops left; call step() (or drain()) first")
+        if self.algo == "doubling" or self.p == 1:
+            return self.payload.reshape(self.shape)
+        _, out = self.gather
+        return out.reshape(-1).astype(self.prec.compute)[:self.n].reshape(
+            self.shape)
+
+    def drain(self) -> jax.Array:
+        """Run every remaining hop back-to-back and return the result —
+        the synchronous tail of the pipeline (e.g. at the j == split
+        all-gather boundary, or when no launches are left to interleave)."""
+        op = self
+        while not op.done:
+            op = op.step()
+        return op.result()
+
+
+def staged_allreduce(x: jax.Array, axis_name: str, prec: Precision | str,
+                     algo: str = "auto") -> StagedAllreduce:
+    """Begin a resumable mixed-precision all-reduce of ``x`` over
+    ``axis_name`` (see :class:`StagedAllreduce`).  Dispatch mirrors
+    :func:`mp_allreduce`'s explicit schedules; drain() of the staged form is
+    value-identical to ``mp_allreduce(..., force_schedule=True)`` — and
+    bitwise-identical hop arithmetic, which is what lets the pipelined
+    walker interleave the hops without perturbing a single rounding."""
+    prec = get_policy(prec)
+    p = _axis_size(axis_name)
+    if algo == "auto":
+        algo = allreduce_algo(x.size, p)
+    if algo not in ("ring", "doubling"):
+        raise ValueError(f"unknown all-reduce algo {algo!r}; "
+                         "choose from ('auto', 'ring', 'doubling')")
+    if p == 1:
+        return StagedAllreduce(axis_name, prec, algo, p, x.shape, x.size,
+                               0, 0, x.astype(prec.compute))
+    if algo == "doubling":
+        if p & (p - 1):
+            raise ValueError(
+                f"recursive doubling needs a power-of-two axis size, got {p}")
+        return StagedAllreduce(axis_name, prec, algo, p, x.shape, x.size,
+                               0, int(math.log2(p)), x.astype(prec.compute))
+    parts, n = _ring_pad(x, p, prec)
+    return StagedAllreduce(axis_name, prec, algo, p, x.shape, n,
+                           0, 2 * (p - 1), parts)
+
+
+def staged_tree_allreduce(tree, axis_name: str, prec: Precision | str):
+    """Round-robin-stepped staged reduction over every leaf of ``tree``: all
+    leaves start their schedules, then advance one hop each in turn, so leaf
+    i's wire hop can overlap leaf j's — the adoption seam for train_loop's
+    per-leaf gradient sync (TrainConfig.staged_wire).  Values match per-leaf
+    ``mp_allreduce(..., force_schedule=True)`` with auto dispatch."""
+    leaves, treedef = jax.tree.flatten(tree)
+    ops = [staged_allreduce(leaf, axis_name, prec) for leaf in leaves]
+    while any(not op.done for op in ops):
+        ops = [op if op.done else op.step() for op in ops]
+    return jax.tree.unflatten(treedef, [op.result() for op in ops])
+
+
 def wire_bytes_allreduce(n: int, p: int, itemsize: int,
                          algo: str = "ring") -> float:
     """Per-process wire bytes of an n-element all-reduce over p processes.
 
     Closed forms (received bytes per process, the standard accounting):
 
-    * ``ring``      — 2·(p-1)/p·n·itemsize  (reduce-scatter + all-gather)
+    * ``ring``      — 2·(p-1)·ceil(n/p)·itemsize  (reduce-scatter +
+      all-gather; the payload is padded to p equal chunks and the pad rides
+      the wire, so pricing uses the padded chunk size, not n/p)
     * ``doubling``  — log2(p)·n·itemsize    (recursive doubling)
     """
     if p <= 1 or n <= 0:
         return 0.0
     if algo == "ring":
-        return 2.0 * (p - 1) / p * n * itemsize
+        m = -(-n // p)  # ceil(n / p): padded chunk length actually shipped
+        return 2.0 * (p - 1) * m * itemsize
     if algo == "doubling":
         return math.ceil(math.log2(p)) * float(n) * itemsize
     raise ValueError(f"unknown all-reduce algo {algo!r}")

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
         --steps 200 --batch 8 --seq 64 --mesh 1x1 [--mode dp_explicit]
-        [--compress] [--mp-wire bf16] [--ckpt-dir ckpts/run1]
+        [--compress] [--mp-wire bf16] [--staged-wire] [--ckpt-dir ckpts/run1]
 
 On the real cluster the same entry point runs under a (16,16) or (2,16,16)
 mesh; on this container use --mesh 1x1 (or a virtual-device XLA flag).
@@ -45,6 +45,9 @@ def main() -> None:
     ap.add_argument("--compress-sweeps", type=int, default=2)
     ap.add_argument("--mp-wire", default=None,
                     help="mixed-precision gradient collectives, e.g. bf16")
+    ap.add_argument("--staged-wire", action="store_true",
+                    help="run the mp-wire gradient sync through the staged "
+                         "(resumable per-hop) collective")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -62,6 +65,7 @@ def main() -> None:
                               warmup_steps=max(2, args.steps // 20),
                               total_steps=args.steps),
         mode=args.mode, compression=comp, mp_wire=args.mp_wire,
+        staged_wire=args.staged_wire,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
 
     extra = extra_input_key(cfg)

@@ -40,6 +40,9 @@ class TrainConfig:
     mode: str = "gspmd"                 # gspmd | dp_explicit
     compression: Optional[gc_mod.CompressorCfg] = None
     mp_wire: Optional[str] = None       # e.g. "bf16": mixed-precision grad sync
+    staged_wire: bool = False           # mp_wire via the staged (resumable)
+                                        # collective: leaf hops round-robin so
+                                        # wire time can overlap across leaves
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 200
     keep_last: int = 3
@@ -95,9 +98,16 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
             comp_state = jax.tree_util.tree_map_with_path(
                 lambda pth, v: v[None] if _is_e(pth) else v, comp_local)
         elif tcfg.mp_wire is not None:
-            grads = jax.tree.map(
-                lambda g: (coll.mp_allreduce(g, primary, tcfg.mp_wire)
-                           / p_total).astype(g.dtype), grads)
+            if tcfg.staged_wire:
+                dtypes = jax.tree.map(lambda g: g.dtype, grads)
+                summed = coll.staged_tree_allreduce(
+                    grads, primary, tcfg.mp_wire)
+                grads = jax.tree.map(
+                    lambda g, dt: (g / p_total).astype(dt), summed, dtypes)
+            else:
+                grads = jax.tree.map(
+                    lambda g: (coll.mp_allreduce(g, primary, tcfg.mp_wire)
+                               / p_total).astype(g.dtype), grads)
         else:
             grads = jax.tree.map(
                 lambda g: jax.lax.psum(g, primary) / p_total, grads)

@@ -271,6 +271,13 @@ def main():
                                    rtol=1e-3, atol=1e-4)
     ok("dhopm3_batched_pallas_split")
 
+    # ---- pipelined dHOPM3 (overlap=) ---------------------------------------
+    check_staged_allreduce(mesh)
+    check_mp_allreduce_prime_pad(mesh)
+    check_ring_wire_counted_trace(mesh)
+    check_dhopm3_overlap(mesh)
+    check_dhopm3_batched_overlap(mesh)
+
     # ---- training integration ----------------------------------------------
     check_training()
     check_grad_compression()
@@ -299,13 +306,17 @@ def check_training():
     batch = data.device_put(data.batch_at(0))
 
     results = {}
-    for mode, extra in [("gspmd", {}), ("dp_explicit", {}),
-                        ("dp_explicit", {"mp_wire": "bf16"})]:
+    for key, mode, extra in [
+        ("gspmd", "gspmd", {}),
+        ("dp_explicit", "dp_explicit", {}),
+        ("dp_explicit+mp", "dp_explicit", {"mp_wire": "bf16"}),
+        ("dp_explicit+mp+staged", "dp_explicit",
+         {"mp_wire": "bf16", "staged_wire": True}),
+    ]:
         tcfg = TrainConfig(opt=ocfg, mode=mode, **extra)
         params, opt_state, comp_state, _ = setup(cfg, mesh, tcfg)
         step_fn, _ = make_train_step(cfg, mesh, tcfg)
         p2, o2, c2, m = step_fn(params, opt_state, comp_state, batch)
-        key = mode + ("+mp" if extra else "")
         results[key] = (float(m["loss"]), p2)
     base_loss, base_p = results["gspmd"]
     expl_loss, expl_p = results["dp_explicit"]
@@ -316,8 +327,13 @@ def check_training():
                                            - b.astype(jnp.float32)))),
         base_p, expl_p)
     assert max(jax.tree.leaves(diffs)) < 5e-3, max(jax.tree.leaves(diffs))
-    mp_loss, _ = results["dp_explicit+mp"]
+    mp_loss, mp_p = results["dp_explicit+mp"]
     assert abs(base_loss - mp_loss) / base_loss < 5e-3
+    # the staged collective is leaf-for-leaf the same hops: bitwise params
+    st_loss, st_p = results["dp_explicit+mp+staged"]
+    assert st_loss == mp_loss, (st_loss, mp_loss)
+    for a, b in zip(jax.tree.leaves(mp_p), jax.tree.leaves(st_p)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
     ok("dp_explicit_matches_gspmd")
 
 
@@ -482,6 +498,156 @@ def check_grad_compression_split():
     ok("grad_compression_split_leaves")
 
 
+def check_staged_allreduce(mesh):
+    """StagedAllreduce.drain() must equal the monolithic explicit schedule
+    BITWISE — ring and doubling, f32 and bf16 wire, divisible and prime
+    payloads.  (Hop-for-hop identical arithmetic is the foundation of the
+    pipelined walker's bitwise guarantee.)"""
+    rng = np.random.default_rng(23)
+    for n in (37, 101, 128):
+        v = jnp.asarray(rng.normal(size=(8, n)).astype(np.float32))
+        for prec in (F32, BF16_F32):
+            for algo in ("ring", "doubling"):
+                def body(t, algo=algo, prec=prec):
+                    sync = coll.mp_allreduce(t[0], "x", prec, algo=algo,
+                                             force_schedule=True)
+                    staged = coll.staged_allreduce(t[0], "x", prec,
+                                                   algo=algo).drain()
+                    return sync[None], staged[None]
+                f = jax.shard_map(body, mesh=mesh, in_specs=P("x"),
+                                  out_specs=(P("x"), P("x")), check_vma=False)
+                sync, staged = jax.jit(f)(v)
+                assert np.array_equal(np.asarray(sync), np.asarray(staged)), \
+                    (n, algo, prec)
+    ok("staged_allreduce_matches_sync")
+
+
+def check_mp_allreduce_prime_pad(mesh):
+    """Payloads not divisible by p: the ring pad path must still produce the
+    exact sum (f32) for prime sizes, under both explicit ring and auto
+    dispatch."""
+    rng = np.random.default_rng(29)
+    for n in (37, 101):
+        v = jnp.asarray(rng.normal(size=(8, n)).astype(np.float32))
+        want = np.asarray(v).sum(0)
+        for algo in ("ring", "auto"):
+            def body(t, algo=algo):
+                return coll.mp_allreduce(t[0], "x", F32, algo=algo,
+                                         force_schedule=True)[None]
+            f = jax.shard_map(body, mesh=mesh, in_specs=P("x"),
+                              out_specs=P("x"), check_vma=False)
+            got = jax.jit(f)(v)
+            np.testing.assert_allclose(np.asarray(got[0]), want,
+                                       rtol=1e-5, atol=1e-5)
+    ok("mp_allreduce_prime_pad")
+
+
+def _count_wire_bytes(jaxpr) -> float:
+    """Received bytes per process from a traced collective: every ppermute
+    ships its operand; every (tiled) all_gather receives out - in."""
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "ppermute":
+            a = eqn.invars[0].aval
+            total += a.size * a.dtype.itemsize
+        elif eqn.primitive.name == "all_gather":
+            i, o = eqn.invars[0].aval, eqn.outvars[0].aval
+            total += (o.size - i.size) * i.dtype.itemsize
+        for v in eqn.params.values():
+            for item in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(item, "jaxpr", item)
+                if hasattr(inner, "eqns"):
+                    total += _count_wire_bytes(inner)
+    return total
+
+
+def check_ring_wire_counted_trace(mesh):
+    """The padded ring closed form 2·(p-1)·ceil(n/p)·itemsize must equal a
+    counted ppermute/all_gather trace of what the runtime actually ships —
+    monolithic mp_allreduce_ring AND the staged schedule, f32 (4 B hops)
+    and bf16 wire (2 B hops), prime and divisible payloads."""
+    p = 8
+    for n in (37, 101, 128):
+        for prec, itemsize in ((F32, 4), (BF16_F32, 2)):
+            want = coll.wire_bytes_allreduce(n, p, itemsize, "ring")
+            x = jnp.ones((n,), jnp.float32)
+            for fn in (
+                lambda t, prec=prec: coll.mp_allreduce_ring(t, "x", prec),
+                lambda t, prec=prec: coll.staged_allreduce(
+                    t, "x", prec, algo="ring").drain(),
+            ):
+                f = jax.shard_map(fn, mesh=mesh, in_specs=P(), out_specs=P(),
+                                  check_vma=False)
+                counted = _count_wire_bytes(jax.make_jaxpr(f)(x).jaxpr)
+                assert counted == want, (n, itemsize, counted, want)
+    ok("ring_wire_matches_counted_trace")
+
+
+def check_dhopm3_overlap(mesh):
+    """Acceptance (p = 8 half): dhopm3(overlap=True) is BITWISE equal to the
+    synchronous walker under the mulsum engine — fused and unfused, split at
+    both ends — and still converges on the sequential oracle."""
+    rng = np.random.default_rng(31)
+    shape = (8, 24, 16)
+    A = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    xs0 = [jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+           for n in shape]
+    xs_seq, lam_seq = dh.hopm3(A, xs0, sweeps=2, impl="mulsum")
+    for s in (0, 2):
+        for fuse in (False, True):
+            ref_xs, ref_lam = dh.dhopm3(A, xs0, mesh, "x", s=s, sweeps=2,
+                                        impl="mulsum", fuse_pairs=fuse)
+            got_xs, got_lam = dh.dhopm3(A, xs0, mesh, "x", s=s, sweeps=2,
+                                        impl="mulsum", fuse_pairs=fuse,
+                                        overlap=True)
+            assert np.array_equal(np.asarray(ref_lam), np.asarray(got_lam)), \
+                (s, fuse)
+            for a, b in zip(ref_xs, got_xs):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), (s, fuse)
+    # overlapped distributed run tracks the sequential oracle
+    got_xs, got_lam = dh.dhopm3(A, xs0, mesh, "x", s=2, sweeps=2,
+                                impl="mulsum", overlap=True)
+    for a, b in zip(got_xs, xs_seq):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(float(got_lam), float(lam_seq), rtol=1e-3)
+    # bf16 wire: the staged hops demote/promote exactly like the sync ones
+    ref_xs, ref_lam = dh.dhopm3(A, xs0, mesh, "x", s=0, sweeps=2,
+                                impl="mulsum", prec=BF16_F32)
+    got_xs, got_lam = dh.dhopm3(A, xs0, mesh, "x", s=0, sweeps=2,
+                                impl="mulsum", prec=BF16_F32, overlap=True)
+    assert np.array_equal(np.asarray(ref_lam), np.asarray(got_lam))
+    for a, b in zip(ref_xs, got_xs):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    ok("dhopm3_overlap_bitwise")
+
+
+def check_dhopm3_batched_overlap(mesh):
+    """Acceptance (p = 8 half, batched): dhopm3_batched(overlap=True) is
+    bitwise equal to the synchronous batched walker AND to B independent
+    overlapped dhopm3 runs under mulsum."""
+    rng = np.random.default_rng(37)
+    B, shape = 3, (8, 24, 16)
+    A_b = jnp.asarray(rng.normal(size=(B,) + shape).astype(np.float32))
+    xs_b = [jnp.asarray(rng.normal(size=(B, n)).astype(np.float32))
+            for n in shape]
+    for s in (0, 2):
+        ref = dh.dhopm3_batched(A_b, xs_b, mesh, "x", s=s, sweeps=2,
+                                impl="mulsum")
+        got = dh.dhopm3_batched(A_b, xs_b, mesh, "x", s=s, sweeps=2,
+                                impl="mulsum", overlap=True)
+        assert np.array_equal(np.asarray(ref[1]), np.asarray(got[1])), s
+        for a, b in zip(ref[0], got[0]):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), s
+    for i in range(B):
+        xi, li = dh.dhopm3(A_b[i], [x[i] for x in xs_b], mesh, "x", s=2,
+                           sweeps=2, impl="mulsum", overlap=True)
+        assert np.array_equal(np.asarray(got[1])[i], np.asarray(li))
+        for a, b in zip(got[0], xi):
+            assert np.array_equal(np.asarray(a)[i], np.asarray(b))
+    ok("dhopm3_batched_overlap_bitwise")
+
+
 def check_wire_summary_trace():
     """wire_bytes_summary's closed form == a counted trace of the
     collectives the compression actually issues: every mp_allreduce /
@@ -509,9 +675,9 @@ def check_wire_summary_trace():
     events = []
     orig_ar, orig_ag = coll.mp_allreduce, coll.all_gather_tiled
 
-    def rec_ar(x, axis_name, prec, algo="auto"):
+    def rec_ar(x, axis_name, prec, algo="auto", **kw):
         events.append(("ar", int(np.prod(x.shape)), int(x.shape[-1])))
-        return orig_ar(x, axis_name, prec, algo=algo)
+        return orig_ar(x, axis_name, prec, algo=algo, **kw)
 
     def rec_ag(x, axis_name, axis=0):
         events.append(("ag", int(np.prod(x.shape))))

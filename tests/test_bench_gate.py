@@ -180,6 +180,91 @@ def test_gate_batched_predicted_bytes():
         mm.tvc_batched_streamed_elems(64, 256, 16, 1) * 4
 
 
+def _overlap_cell(shape=(8, 8, 8, 8), fused=False, us=40.0, sync_us=36.0,
+                  peak=10.0, chunks=4, model_p=8, **over):
+    d = len(shape)
+    s = d - 1
+    nbytes = int(mm.simulate_sweep(
+        shape[0], d, 1, s, "hopm3_fused" if fused else "hopm3",
+        split_alive=True, overlap_chunks=chunks)) * 4
+    model = mm.dhopm_time_sweep(shape, model_p, 4, split=s,
+                                overlap_chunks=chunks, peak_gbs=peak,
+                                wire_gbs=peak / 8.0, dispatch_us=0.0)
+    gbs = nbytes / (us * 1e-6) / 1e9
+    cell = {
+        "kind": "dhopm3_overlap", "order": d, "mode": s, "dtype": "f32",
+        "layout": "aligned", "shape": list(shape), "engine": "native-xla",
+        "sweeps": 1, "p": 1, "split": s, "fused": fused,
+        "overlap_chunks": chunks,
+        "launches": mm.dhopm_launches_per_sweep(d, s, fused,
+                                                overlap_chunks=chunks),
+        "sync_launches": mm.dhopm_launches_per_sweep(d, s, fused),
+        "blocks": [], "streamed_bytes": nbytes, "us": us, "sync_us": sync_us,
+        "gbs": gbs, "pct_peak": gbs / peak * 100.0,
+        "overlap_speedup": sync_us / us,
+        "model_p": model_p, "model_wire_gbs": peak / 8.0,
+        "model_dispatch_us": 0.0,
+        "predicted_wire_us": model["wire_us"],
+        "predicted_exposed_us": model["exposed_wire_us"],
+        "predicted_hidden_us": model["hidden_wire_us"],
+    }
+    cell.update(over)
+    return cell
+
+
+def test_gate_green_with_overlap_cells():
+    p = _payload([_cell(), _overlap_cell(), _overlap_cell(fused=True)])
+    assert _run(p, ref=p) == []
+
+
+def test_gate_overlap_launch_count_recompute():
+    c = _overlap_cell(launches=99)
+    assert any("launch counts" in f for f in _run(_payload([c])))
+    c = _overlap_cell(sync_launches=1)
+    assert any("launch counts" in f for f in _run(_payload([c])))
+
+
+def test_gate_overlap_model_recompute_and_hiding():
+    # drifted prediction: the recorded numbers must be reproducible from
+    # the cell's model inputs bit-for-bit
+    c = _overlap_cell()
+    c["predicted_exposed_us"] *= 1.01
+    assert any("recomputed dhopm_time_sweep" in f for f in _run(_payload([c])))
+    # a config where the model predicts no hiding must fail: chunks=1 makes
+    # the whole wire exposed (hidden == 0)
+    c = _overlap_cell(chunks=1)
+    assert any("predicts no wire hiding" in f for f in _run(_payload([c])))
+
+
+def test_gate_overlap_speedup_floor():
+    # 0.1 geomean: pathological pipeline cost -> fail
+    slow = [_overlap_cell(us=400.0, sync_us=40.0),
+            _overlap_cell(fused=True, us=400.0, sync_us=40.0)]
+    fails = _run(_payload(slow))
+    assert any("overlap_speedup" in f and "floor" in f for f in fails)
+    # above the floor (even if < 1, the expected p = 1 regime) is green
+    okc = [_overlap_cell(us=50.0, sync_us=36.0)]
+    assert _run(_payload(okc)) == []
+    # the floor is tunable
+    assert _run(_payload(okc), overlap_speedup_min=0.9) != []
+
+
+def test_gate_overlap_predicted_bytes():
+    c = _overlap_cell()
+    assert check_bench.predicted_bytes(c) == c["streamed_bytes"]
+    c2 = _overlap_cell(fused=True)
+    assert check_bench.predicted_bytes(c2) == c2["streamed_bytes"]
+    # the overlap form strictly exceeds the sync form (extra vector re-reads)
+    sync = int(mm.simulate_sweep(8, 4, 1, 3, "hopm3", split_alive=True)) * 4
+    assert c["streamed_bytes"] > sync
+
+
+def test_gate_overlap_missing_keys():
+    c = _overlap_cell()
+    del c["predicted_hidden_us"]
+    assert any("missing keys" in f for f in _run(_payload([c])))
+
+
 def test_gate_runs_green_on_committed_trajectory():
     path = ROOT / "BENCH_TVC.json"
     payload = json.loads(path.read_text())

@@ -1,0 +1,255 @@
+"""Pipelined dHOPM3 coverage (single device, p = 1 mesh): the bitwise
+guarantee (overlap= chunked tails change no iterate bit vs the synchronous
+walker under the mulsum engine — sequential, split, and batched), the launch
+schedule (chunked tails issue exactly the memory_model closed form), the
+overlap_chunks normalizer, and the analytic overlap models
+(simulate_sweep(overlap_chunks=) extra vector re-reads and the
+dhopm_time_sweep exposed-wire accounting).  The p = 8 halves — actual wire
+hops staged behind launches, ring/doubling regime switching — run in the
+subprocess suite (tests/_dist_checks.py: dhopm3_overlap_bitwise and
+friends)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import dhopm as dh
+from repro.core import memory_model as mm
+from repro.dist import collectives as coll
+
+RNG = np.random.default_rng(57)
+
+
+def rand(shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+def mesh1():
+    return jax.make_mesh((1,), ("x",))
+
+
+def _count_pallas(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for item in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(item, "jaxpr", item)
+                if hasattr(inner, "eqns"):
+                    n += _count_pallas(inner)
+    return n
+
+
+# ---- overlap_chunks normalizer -------------------------------------------
+
+def test_overlap_chunks_normalizer():
+    assert dh._overlap_chunks(False) == 1
+    assert dh._overlap_chunks(None) == 1
+    assert dh._overlap_chunks(True) == dh.OVERLAP_CHUNKS_DEFAULT == 4
+    assert dh._overlap_chunks(1) == 1
+    assert dh._overlap_chunks(7) == 7
+    for bad in (0, -2, 2.5, "four"):
+        with pytest.raises(ValueError):
+            dh._overlap_chunks(bad)
+
+
+# ---- bitwise: pipelining must not move a single rounding -----------------
+
+@pytest.mark.parametrize("fuse", [False, True])
+@pytest.mark.parametrize("overlap", [True, 2, 3, 8])
+def test_hopm3_overlap_bitwise(fuse, overlap):
+    """Sequential tentpole guarantee: the chunked tail partitions the output
+    mode, leaving every element's contraction arithmetic untouched — iterates
+    and lambda identical bit-for-bit under mulsum."""
+    shape = (5, 4, 6, 3)
+    A = rand(shape)
+    xs = [rand((n,)) for n in shape]
+    ref_xs, ref_lam = dh.hopm3(A, xs, sweeps=2, impl="mulsum",
+                               fuse_pairs=fuse)
+    got_xs, got_lam = dh.hopm3(A, xs, sweeps=2, impl="mulsum",
+                               fuse_pairs=fuse, overlap=overlap)
+    assert np.array_equal(np.asarray(ref_lam), np.asarray(got_lam))
+    for a, b in zip(ref_xs, got_xs):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("fuse", [False, True])
+def test_dhopm3_overlap_bitwise_all_splits(fuse):
+    """Split walker (p = 1, split state machine still structural): overlap
+    drains at the j == s gather, chunks everywhere else — bitwise."""
+    mesh = mesh1()
+    shape = (4, 6, 8, 2)
+    A = rand(shape)
+    xs = [rand((n,)) for n in shape]
+    for s in range(len(shape)):
+        ref_xs, ref_lam = dh.dhopm3(A, xs, mesh, "x", s=s, sweeps=2,
+                                    impl="mulsum", fuse_pairs=fuse)
+        got_xs, got_lam = dh.dhopm3(A, xs, mesh, "x", s=s, sweeps=2,
+                                    impl="mulsum", fuse_pairs=fuse,
+                                    overlap=True)
+        assert np.array_equal(np.asarray(ref_lam), np.asarray(got_lam))
+        for a, b in zip(ref_xs, got_xs):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("s", [None, 0, 2])
+def test_dhopm3_batched_overlap_bitwise(s):
+    """Batched walker mirrors the unbatched engage predicate — stacked
+    chunked tails are bitwise too (and still match B independent runs)."""
+    mesh = mesh1()
+    shape, B = (5, 4, 6), 3
+    A = rand((B,) + shape)
+    xs = [rand((B, n)) for n in shape]
+    kw = dict(sweeps=2, impl="mulsum")
+    if s is None:
+        ref = dh.hopm3_batched(A, xs, **kw)
+        got = dh.hopm3_batched(A, xs, overlap=True, **kw)
+    else:
+        ref = dh.dhopm3_batched(A, xs, mesh, "x", s=s, **kw)
+        got = dh.dhopm3_batched(A, xs, mesh, "x", s=s, overlap=True, **kw)
+    assert np.array_equal(np.asarray(ref[1]), np.asarray(got[1]))
+    for a, b in zip(ref[0], got[0]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_overlap_chunks_exceeding_extent_still_bitwise():
+    """C caps at n_out (balanced chunking would otherwise emit empty
+    launches); tiny extents just run fewer chunks."""
+    shape = (3, 2, 4)
+    A = rand(shape)
+    xs = [rand((n,)) for n in shape]
+    ref = dh.hopm3(A, xs, sweeps=2, impl="mulsum")
+    got = dh.hopm3(A, xs, sweeps=2, impl="mulsum", overlap=16)
+    assert np.array_equal(np.asarray(ref[1]), np.asarray(got[1]))
+    for a, b in zip(ref[0], got[0]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---- launch schedule ------------------------------------------------------
+
+@pytest.mark.parametrize("s", [None, 0, 1, 3])
+@pytest.mark.parametrize("fuse", [False, True])
+@pytest.mark.parametrize("C", [1, 3, 4])
+def test_overlap_launch_count_matches_model(s, fuse, C):
+    """Acceptance: the pipelined walker still issues exactly
+    memory_model.dhopm_launches_per_sweep(..., overlap_chunks) Pallas
+    launches — each tail chunk is one launch, the gather tail drains to
+    one."""
+    mesh = mesh1()
+    shape = (8, 8, 8, 8)
+    A = rand(shape)
+    xs = [rand((n,)) for n in shape]
+    want = mm.dhopm_launches_per_sweep(len(shape), s, fuse, overlap_chunks=C)
+    if s is None:
+        fn = lambda A, *x: dh.hopm3(A, list(x), sweeps=1, impl="pallas",
+                                    fuse_pairs=fuse, overlap=C)[0]
+    else:
+        fn = lambda A, *x: dh.dhopm3(A, list(x), mesh, "x", s=s, sweeps=1,
+                                     impl="pallas", fuse_pairs=fuse,
+                                     overlap=C)[0]
+    jx = jax.make_jaxpr(fn)(A, *xs)
+    assert _count_pallas(jx.jaxpr) == want
+
+
+def test_overlap_launch_count_batched_independent_of_B():
+    mesh = mesh1()
+    shape, s, C = (6, 6, 6), 1, 3
+    want = mm.dhopm_launches_per_sweep(3, s, False, overlap_chunks=C)
+    counts = set()
+    for B in (1, 4):
+        A = rand((B,) + shape)
+        xs = [rand((B, n)) for n in shape]
+        jx = jax.make_jaxpr(lambda A, *x: dh.dhopm3_batched(
+            A, list(x), mesh, "x", s=s, sweeps=1, impl="pallas",
+            overlap=C)[0])(A, *xs)
+        counts.add(_count_pallas(jx.jaxpr))
+    assert counts == {want}
+
+
+# ---- analytic overlap models ---------------------------------------------
+
+def test_simulate_sweep_overlap_extra_reads():
+    """overlap_chunks=C adds exactly the per-chunk vector re-reads: (C-1)
+    extra x reads per pipelined tail, nothing else.  Hand count for n=6,
+    d=3, p=1: unfused, no split -> every tail pipelined, x read = n each ->
+    +3*(C-1)*6; fused -> tails read 2n + n + n -> +(C-1)*24."""
+    n, d = 6, 3
+    for algo, extra_per_chunk in (("hopm3", 3 * n), ("hopm3_fused", 4 * n)):
+        base = mm.simulate_sweep(n, d, 1, 0, algo, split_alive=False)
+        for C in (2, 4):
+            got = mm.simulate_sweep(n, d, 1, 0, algo, split_alive=False,
+                                    overlap_chunks=C)
+            assert got == pytest.approx(base + (C - 1) * extra_per_chunk)
+    # split alive: the j == s gather iteration drains (one tail unpipelined)
+    base = mm.simulate_sweep(n, d, 1, 2, "hopm3", split_alive=True)
+    got = mm.simulate_sweep(n, d, 1, 2, "hopm3", split_alive=True,
+                            overlap_chunks=2)
+    assert got - base < 3 * n  # strictly fewer than d pipelined tails
+
+
+def test_dhopm_time_sweep_sync_exposes_everything():
+    t = mm.dhopm_time_sweep((64, 64, 64), 8, 4, split=2, overlap_chunks=1,
+                            peak_gbs=100.0, wire_gbs=10.0)
+    assert t["exposed_wire_us"] == pytest.approx(t["wire_us"])
+    assert t["hidden_wire_us"] == pytest.approx(0.0)
+    assert t["extra_dispatch_us"] == 0.0
+    wire = sum(
+        coll.wire_bytes_allgather(64, 8, 4) if j == 2 else
+        coll.wire_bytes_allreduce(64, 8, 4, coll.allreduce_algo(64, 8))
+        for j in range(3)) / (10.0 * 1e9) * 1e6
+    assert t["wire_us"] == pytest.approx(wire)
+
+
+def test_dhopm_time_sweep_pipelined_hides_wire():
+    """Slow compute (tail chunk >= wire chunk) hides all but the last
+    chunk's wire: exposed == wire/C per pipelined stage; the j == split
+    gather stage stays fully exposed."""
+    C = 4
+    t = mm.dhopm_time_sweep((64, 64, 64), 8, 4, split=2, overlap_chunks=C,
+                            peak_gbs=0.001, wire_gbs=100.0)
+    for st in t["per_iteration"]:
+        if st["j"] == 2:
+            assert st["chunks"] == 1
+            assert st["exposed_us"] == pytest.approx(st["wire_us"])
+        else:
+            assert st["chunks"] == C
+            assert st["exposed_us"] == pytest.approx(st["wire_us"] / C)
+    assert t["hidden_wire_us"] > 0
+    # instant compute: nothing to hide behind -> fully exposed again
+    t2 = mm.dhopm_time_sweep((64, 64, 64), 8, 4, split=2, overlap_chunks=C,
+                             peak_gbs=1e12, wire_gbs=100.0)
+    assert t2["exposed_wire_us"] == pytest.approx(t2["wire_us"])
+
+
+def test_dhopm_time_sweep_ring_regime_stays_exposed():
+    """Payloads past the doubling cutoff (or non-pow2 p) dispatch to ring;
+    the runtime drains those tails, and the model prices them exposed."""
+    big = coll.DOUBLING_MAX_ELEMENTS * 2
+    t = mm.dhopm_time_sweep((big, 8, 8), 8, 4, split=None, overlap_chunks=4,
+                            peak_gbs=0.001, wire_gbs=100.0)
+    st = t["per_iteration"][0]
+    assert st["chunks"] == 1 and st["exposed_us"] == pytest.approx(
+        st["wire_us"])
+    # non-pow2 axis: every payload is ring -> nothing pipelines
+    t6 = mm.dhopm_time_sweep((64, 64, 64), 6, 4, split=None, overlap_chunks=4,
+                             peak_gbs=0.001, wire_gbs=100.0)
+    assert t6["exposed_wire_us"] == pytest.approx(t6["wire_us"])
+
+
+def test_dhopm_time_sweep_dispatch_allowance_and_validation():
+    C, disp = 4, 7.5
+    t = mm.dhopm_time_sweep((64, 64, 64), 8, 4, split=2, overlap_chunks=C,
+                            peak_gbs=100.0, wire_gbs=10.0, dispatch_us=disp)
+    pipelined = [st for st in t["per_iteration"] if st["chunks"] > 1]
+    assert t["extra_dispatch_us"] == pytest.approx(
+        len(pipelined) * (C - 1) * disp)
+    with pytest.raises(ValueError):
+        mm.dhopm_time_sweep((8, 8), 8, 4, overlap_chunks=0,
+                            peak_gbs=1.0, wire_gbs=1.0)
+
+
+def test_p1_wire_free_time_model():
+    t = mm.dhopm_time_sweep((16, 16, 16), 1, 4, overlap_chunks=4,
+                            peak_gbs=100.0, wire_gbs=10.0)
+    assert t["wire_us"] == t["exposed_wire_us"] == 0.0

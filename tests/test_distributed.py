@@ -28,6 +28,11 @@ EXPECTED = [
     "dhopm3_bf16",
     "dhopm3_batched_split_bitwise",
     "dhopm3_batched_pallas_split",
+    "staged_allreduce_matches_sync",
+    "mp_allreduce_prime_pad",
+    "ring_wire_matches_counted_trace",
+    "dhopm3_overlap_bitwise",
+    "dhopm3_batched_overlap_bitwise",
     "dp_explicit_matches_gspmd",
     "grad_compression_lowrank_and_ef",
     "grad_compression_bucketed_bitwise",

@@ -137,6 +137,31 @@ def test_loss_descends(arch):
     assert hist[-1]["loss"] < hist[0]["loss"]
 
 
+def test_staged_wire_matches_monolithic_grad_sync():
+    """TrainConfig.staged_wire routes the §5.5 gradient sync through the
+    resumable staged collective; at p = 1 (and in general, leaf-for-leaf)
+    it must reproduce the monolithic mp_allreduce path exactly."""
+    from repro.train.train_loop import make_train_step, setup
+    mesh = _mesh11()
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    ocfg = opt_mod.OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, 32, 8, seed=5), mesh)
+    batch = data.device_put(data.batch_at(0))
+
+    outs = {}
+    for staged in (False, True):
+        tcfg = TrainConfig(opt=ocfg, mode="dp_explicit", mp_wire="bf16",
+                           staged_wire=staged)
+        params, opt_state, comp_state, _ = setup(cfg, mesh, tcfg)
+        step_fn, _ = make_train_step(cfg, mesh, tcfg)
+        p2, _, _, m = step_fn(params, opt_state, comp_state, batch)
+        outs[staged] = (float(m["loss"]), p2)
+    assert outs[False][0] == outs[True][0]
+    for a, b in zip(jax.tree.leaves(outs[False][1]),
+                    jax.tree.leaves(outs[True][1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_serve_engine_greedy_deterministic():
     cfg = get_config("qwen2-1.5b", smoke=True)
     from repro.models import registry
