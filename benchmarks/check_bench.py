@@ -43,16 +43,37 @@ Three checks, strictest first:
    allowance per launch (one for a ``tvc_batched`` cell; ``launches`` for a
    whole-algorithm ``dhopm3_batched`` cell) — the per-launch ceiling of the
    unbatched equivalent would grant B times as many, so a batched cell that
-   needs more is slower than B separate launches and fails.  The ratio is per engine: ``--ratio-pallas``
-   (default 2.0: at least 50% of STREAM, the paper's native-algorithm
-   floor) on TPU, ``--ratio-native`` (default 32.0: the XLA einsum proxy is
-   not the kernel — this only catches catastrophic regressions; the
-   committed CPU trajectory's worst f32 cell sits near 18x) for
+   needs more is slower than B separate launches and fails.  The ratio is
+   per engine: ``--ratio-pallas`` on TPU, ``--ratio-native`` for
    ``native-xla``, where low-precision cells additionally get
-   ``--lowprec-factor`` (default 3.0: CPU XLA has no native bf16 and pays a
-   convert/compute/convert round trip, worst committed cell ~43x; TPU bf16
-   is native and gets no factor).  ``pallas-interpret`` timings are
-   interpreter overhead and are skipped.
+   ``--lowprec-factor`` (CPU XLA has no native bf16 and pays a
+   convert/compute/convert round trip; TPU bf16 is native and gets no
+   factor).  The defaults are no longer hand-tuned constants: they come
+   from the committed ``kernels/calibration.json`` (worst needed ratio on
+   the fitted trajectory x2 headroom — see ``benchmarks/calibrate.py``),
+   the same table the ``repro.plan`` planner prices decisions with.
+   ``pallas-interpret`` timings are interpreter overhead and are skipped.
+
+4. **Planner cross-checks** (schema >= 6) — every cell must carry the
+   ``plan`` auto would pick for its recorded inputs; the gate *recomputes*
+   it via ``repro.plan.planner.plan_for_cell`` against the committed
+   calibration table and fails on any divergence (a stale table or a moved
+   decision rule can't slip through).  Cells with an explicit-flag sweep
+   (``flags``: engine -> us) must satisfy ``auto_us <= --auto-cell-ratio
+   x best(flags)`` per cell (catastrophic mis-pick bound; a wrong engine
+   loses 2-4x on the measured margins) and geomean ``auto_us /
+   best(flags) <= --auto-ratio`` over all swept cells (the tight tie —
+   per-pair timing noise is ~10% one-sided, so it lives on the
+   aggregate), the recorded ``auto_vs_best_flag`` /
+   ``auto_vs_worst_flag`` ratios must reproduce from the recorded
+   timings, and dispatch-dominated cells (time-implied ratio >=
+   ``repro.plan.planner.DISPATCH_DOMINATED_X``) — the regime this planner
+   exists for — must carry the sweep and post a geomean
+   ``auto_vs_worst_flag`` above ``--auto-worst-min``.  Warm-start:
+   every cell records a cold and a warm fresh-jit compile against the
+   run's persistent compilation cache; geomean ``warm/cold`` must stay
+   under ``--warm-compile-max`` (the cache must actually short-circuit
+   recompilation).
 
 Exit code 0 = green; 1 = any cell failed (all failures listed).
 """
@@ -74,6 +95,8 @@ from repro.core.memory_model import (
     tvc_streamed_elems,
 )
 from repro.core.mixed_precision import get_policy
+from repro.plan import calibration as plan_calibration
+from repro.plan import planner as plan_planner
 
 CORE_KEYS = frozenset({
     "kind", "order", "mode", "dtype", "layout", "shape", "blocks",
@@ -104,9 +127,18 @@ BATCHED_KINDS = ("tvc_batched", "dhopm3_batched")
 TIMED_ENGINES = ("pallas", "native-xla")
 
 #: per-launch dispatch allowance shared by the gate's --dispatch-us default
-#: and the bench's recorded ``predicted_speedup`` (one constant so the two
-#: accountings can never drift apart)
-DEFAULT_DISPATCH_US = 200.0
+#: and the bench's recorded ``predicted_speedup`` (one value so the two
+#: accountings can never drift apart) — fitted by benchmarks/calibrate.py,
+#: falling back to the conservative constant on an uncalibrated checkout
+DEFAULT_DISPATCH_US = plan_calibration.dispatch_us()
+
+#: time-implied-traffic ceilings, from the same fitted table
+DEFAULT_CEILINGS = plan_calibration.ceilings()
+
+#: per-cell keys additionally required on schema >= 6 trajectories
+SCHEMA6_KEYS = ("plan", "compile_cold_us", "compile_warm_us")
+#: keys that must travel together whenever a cell carries a flag sweep
+AUTO_KEYS = ("auto_us", "auto_vs_best_flag", "auto_vs_worst_flag")
 
 
 def predicted_bytes(cell: dict) -> int:
@@ -151,13 +183,18 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
           dispatch_us: float, ratio_pallas: float,
           ratio_native: float, lowprec_factor: float = 3.0,
           speedup_min_batch: int = 16,
-          overlap_speedup_min: float = 0.25) -> list[str]:
+          overlap_speedup_min: float = 0.25,
+          auto_ratio: float = 1.1,
+          auto_cell_ratio: float = 1.3,
+          auto_worst_min: float = 1.0,
+          warm_compile_max: float = 0.6) -> list[str]:
     """All failure messages for one trajectory payload ([] = green)."""
     fails: list[str] = []
     meta = payload.get("meta", {})
     cells = payload.get("cells", [])
     peak = payload.get("stream_triad_gbs", 0.0)
     engine = meta.get("engine")
+    schema = meta.get("schema") or 0
 
     # -- 1. schema ----------------------------------------------------------
     if ref is not None:
@@ -174,11 +211,18 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
         for kind_key in KIND_KEYS.get(c.get("kind"), ()):
             if kind_key not in c:
                 missing = missing | {kind_key}
+        if schema >= 6:
+            missing |= {k for k in SCHEMA6_KEYS if k not in c}
+            if "flags" in c:
+                missing |= {k for k in AUTO_KEYS if k not in c}
         if missing:
             fails.append(f"{_cell_name(c)}: missing keys {sorted(missing)}")
     if fails:
         return fails  # later checks would only cascade
 
+    auto_worst_dd: list[float] = []   # auto_vs_worst_flag, dispatch-dominated
+    auto_best_all: list[float] = []   # auto_us / best(flags), every swept cell
+    warm_ratios: list[float] = []     # compile_warm_us / compile_cold_us
     for c in cells:
         name = _cell_name(c)
         pred = predicted_bytes(c)
@@ -257,6 +301,53 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                     f"{allowance / 1e6:.2f} MB) exceeds {cell_ratio}x the "
                     f"predicted {pred / 1e6:.2f} MB [{cell_engine}]")
 
+        # -- 4. planner cross-checks (schema >= 6) --------------------------
+        if "plan" in c:
+            # recompute the plan from the cell's recorded inputs against the
+            # committed calibration table — divergence means a stale table
+            # or a decision rule that moved without regenerating the bench
+            want_plan = plan_planner.plan_for_cell(c)
+            if c["plan"] != want_plan:
+                fails.append(
+                    f"{name}: recorded plan {c['plan']} != recomputed "
+                    f"{want_plan} (stale calibration.json or moved planner "
+                    f"rule — rerun benchmarks/calibrate.py + the bench)")
+        dominated = (cell_engine in ("pallas", "native-xla")
+                     and c["kind"] in ("tvc", "tvc2")
+                     and plan_planner.dispatch_dominated(c["us"], pred, peak))
+        flags = c.get("flags") or {}
+        if schema >= 6 and dominated and not flags:
+            fails.append(
+                f"{name}: dispatch-dominated (time-implied ratio >= "
+                f"{plan_planner.DISPATCH_DOMINATED_X:g}) but carries no "
+                f"explicit-flag sweep — the auto-vs-flags gate can't run")
+        if flags and all(k in c for k in AUTO_KEYS):
+            best, worst = min(flags.values()), max(flags.values())
+            # per-cell: a catastrophic-mis-pick ceiling only.  A wrong
+            # engine choice loses 2-4x on the measured margins; a right
+            # one ties within per-pair timing noise (~10% between two
+            # timings of the SAME executable), so the tight 1.1x bound
+            # is enforced on the geomean below, not per cell.
+            if c["auto_us"] > auto_cell_ratio * best:
+                fails.append(
+                    f"{name}: auto_us {c['auto_us']:.0f} exceeds "
+                    f"{auto_cell_ratio}x the best explicit flag "
+                    f"({min(flags, key=flags.get)}={best:.0f}us) — "
+                    f"auto picked a losing engine")
+            auto_best_all.append(c["auto_us"] / best)
+            for key, flag_us in (("auto_vs_best_flag", best),
+                                 ("auto_vs_worst_flag", worst)):
+                if not math.isclose(c[key], flag_us / c["auto_us"],
+                                    rel_tol=1e-9, abs_tol=1e-12):
+                    fails.append(
+                        f"{name}: {key}={c[key]} does not reproduce from "
+                        f"the recorded timings ({flag_us:.0f}us / "
+                        f"{c['auto_us']:.0f}us)")
+            if dominated:
+                auto_worst_dd.append(c["auto_vs_worst_flag"])
+        if c.get("compile_cold_us", 0) > 0 and "compile_warm_us" in c:
+            warm_ratios.append(c["compile_warm_us"] / c["compile_cold_us"])
+
     # -- batched speedup: geometric mean over the large-B cells -------------
     # (one batched launch vs B separate ones, same engine per cell;
     # aggregated so a single timer-noise cell cannot flip CI)
@@ -287,6 +378,47 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                 f"{geomean:.2f} <= floor {overlap_speedup_min} over "
                 f"{len(ov)} cells ({', '.join(f'{s:.2f}' for s in ov)}) — "
                 f"the pipelined walker is pathologically slower than sync")
+
+    # -- auto must tie the best flags in aggregate --------------------------
+    # (per-pair timing noise is ~10% one-sided, so the tight bound lives on
+    # the geomean: auto picking right on every cell sits at ~1.0 here, one
+    # systematic mis-pick on the measured 2-4x margins blows straight past
+    # the ceiling)
+    if auto_best_all:
+        geomean = math.exp(sum(math.log(max(s, 1e-9))
+                               for s in auto_best_all) / len(auto_best_all))
+        if not geomean <= auto_ratio:
+            fails.append(
+                f"flag-swept cells: geomean auto_us/best_flag "
+                f"{geomean:.3f} > ceiling {auto_ratio} over "
+                f"{len(auto_best_all)} cells "
+                f"({', '.join(f'{s:.2f}' for s in auto_best_all)}) — "
+                f"auto dispatch is losing to the best explicit flags")
+
+    # -- auto floor on the dispatch-dominated regime ------------------------
+    # (the cells this planner exists for: auto must at least beat the worst
+    # explicit flag in aggregate, or the cost model is choosing badly)
+    if auto_worst_dd:
+        geomean = math.exp(sum(math.log(max(s, 1e-9))
+                               for s in auto_worst_dd) / len(auto_worst_dd))
+        if not geomean > auto_worst_min:
+            fails.append(
+                f"dispatch-dominated cells: geomean auto_vs_worst_flag "
+                f"{geomean:.2f} <= floor {auto_worst_min} over "
+                f"{len(auto_worst_dd)} cells "
+                f"({', '.join(f'{s:.2f}' for s in auto_worst_dd)}) — "
+                f"auto dispatch is not beating the worst explicit flag")
+
+    # -- warm-start: the persistent compile cache must actually bite --------
+    if schema >= 6 and warm_ratios:
+        geomean = math.exp(sum(math.log(max(r, 1e-9))
+                               for r in warm_ratios) / len(warm_ratios))
+        if not geomean < warm_compile_max:
+            fails.append(
+                f"warm-start: geomean compile_warm/compile_cold "
+                f"{geomean:.2f} >= ceiling {warm_compile_max} over "
+                f"{len(warm_ratios)} cells — the persistent compilation "
+                f"cache is not short-circuiting recompiles")
     return fails
 
 
@@ -302,15 +434,18 @@ def main(argv=None) -> int:
     ap.add_argument("--dispatch-us", type=float, default=DEFAULT_DISPATCH_US,
                     help="per-launch dispatch-overhead allowance for the "
                          "time-implied check (ROADMAP small-cell caveat)")
-    ap.add_argument("--ratio-pallas", type=float, default=2.0,
+    ap.add_argument("--ratio-pallas", type=float,
+                    default=DEFAULT_CEILINGS["ratio_pallas"],
                     help="implied/predicted traffic ceiling on TPU "
-                         "(2.0 = the paper's >=50%%-of-STREAM floor)")
-    ap.add_argument("--ratio-native", type=float, default=32.0,
+                         "(calibrated; >= the paper's 50%%-of-STREAM floor)")
+    ap.add_argument("--ratio-native", type=float,
+                    default=DEFAULT_CEILINGS["ratio_native"],
                     help="ceiling for the CPU native-xla proxy "
-                         "(catastrophic-regression bound only)")
-    ap.add_argument("--lowprec-factor", type=float, default=3.0,
+                         "(calibrated catastrophic-regression bound)")
+    ap.add_argument("--lowprec-factor", type=float,
+                    default=DEFAULT_CEILINGS["lowprec_factor"],
                     help="extra native-xla headroom for non-f32 cells "
-                         "(CPU XLA emulates bf16/f16)")
+                         "(calibrated; CPU XLA emulates bf16/f16)")
     ap.add_argument("--speedup-min-batch", type=int, default=16,
                     help="gate batched_speedup > 1 only on batched cells "
                          "with at least this batch size (small-B cells are "
@@ -320,6 +455,21 @@ def main(argv=None) -> int:
                          "of the dhopm3_overlap cells (p = 1 runs pay the "
                          "chunked-launch cost with no wire to hide; this "
                          "bounds catastrophic pipeline regressions)")
+    ap.add_argument("--auto-ratio", type=float, default=1.1,
+                    help="geomean ceiling for auto_us over the best "
+                         "explicit-flag timing across all swept cells "
+                         "(schema >= 6)")
+    ap.add_argument("--auto-cell-ratio", type=float, default=1.3,
+                    help="per-cell ceiling for auto_us over the best "
+                         "explicit flag (catastrophic mis-pick bound; "
+                         "per-pair timing noise makes a tighter per-cell "
+                         "bound flake)")
+    ap.add_argument("--auto-worst-min", type=float, default=1.0,
+                    help="geomean floor for auto_vs_worst_flag over the "
+                         "dispatch-dominated cells")
+    ap.add_argument("--warm-compile-max", type=float, default=0.6,
+                    help="geomean ceiling for compile_warm_us / "
+                         "compile_cold_us (persistent-cache warm start)")
     args = ap.parse_args(argv)
 
     payload = json.loads(pathlib.Path(args.bench).read_text())
@@ -331,7 +481,11 @@ def main(argv=None) -> int:
                   ratio_native=args.ratio_native,
                   lowprec_factor=args.lowprec_factor,
                   speedup_min_batch=args.speedup_min_batch,
-                  overlap_speedup_min=args.overlap_speedup_min)
+                  overlap_speedup_min=args.overlap_speedup_min,
+                  auto_ratio=args.auto_ratio,
+                  auto_cell_ratio=args.auto_cell_ratio,
+                  auto_worst_min=args.auto_worst_min,
+                  warm_compile_max=args.warm_compile_max)
     engine = payload.get("meta", {}).get("engine")
     n = len(payload.get("cells", []))
     if fails:

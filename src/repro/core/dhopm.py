@@ -67,6 +67,18 @@ def _overlap_chunks(overlap) -> int:
     return c
 
 
+def _resolve_walker(impl, fuse_pairs, overlap, *, shape, p, s, batch=1,
+                    prec):
+    """Route ``impl="auto"`` (and any fuse/overlap flag left at None)
+    through the trace-time planner; explicit flags always win.  With a
+    concrete impl, None flags resolve to the legacy static defaults
+    (fuse_pairs=False, overlap=False)."""
+    from repro.plan import planner as _planner
+    return _planner.resolve_dhopm(
+        impl, fuse_pairs, overlap, shape=tuple(shape), p=p, s=s,
+        batch=batch, itemsize=prec.storage_bytes)
+
+
 def _norm(v, compute):
     v = v.astype(compute)
     return jnp.sqrt(_tree_sum_last(v * v) + _EPS)
@@ -264,6 +276,8 @@ def hopm_classic(A, xs, *, sweeps: int = 1, impl: str = "native",
                  prec: Precision | str = F32):
     """Canonical two-buffer sequential HOPM (restarts every chain from A)."""
     prec = get_policy(prec)
+    impl, _, _ = _resolve_walker(impl, False, False, shape=A.shape, p=1,
+                                 s=None, prec=prec)
     return _hopm_sweeps(
         A, xs, sweeps=sweeps, split=None, partial_in=False, axis_name=None,
         impl=impl, prec=prec, three_buffer=False,
@@ -271,13 +285,16 @@ def hopm_classic(A, xs, *, sweeps: int = 1, impl: str = "native",
 
 
 def hopm3(A, xs, *, sweeps: int = 1, impl: str = "native",
-          prec: Precision | str = F32, fuse_pairs: bool = False,
-          overlap=False):
+          prec: Precision | str = F32, fuse_pairs: bool | None = None,
+          overlap=None):
     """Sequential dHOPM_3 (p = 1): the three-buffer contraction schedule.
     ``overlap`` chunks the chain tails exactly like the distributed walker
     (no wire to hide at p = 1, but identical launches/iterates — the
-    sync-vs-pipelined bench baseline)."""
+    sync-vs-pipelined bench baseline).  ``impl="auto"`` plans the engine
+    (and any fuse/overlap flag left at None) from the cost model."""
     prec = get_policy(prec)
+    impl, fuse_pairs, overlap = _resolve_walker(
+        impl, fuse_pairs, overlap, shape=A.shape, p=1, s=None, prec=prec)
     return _hopm_sweeps(
         A, xs, sweeps=sweeps, split=None, partial_in=False, axis_name=None,
         impl=impl, prec=prec, three_buffer=True, fuse_pairs=fuse_pairs,
@@ -287,13 +304,16 @@ def hopm3(A, xs, *, sweeps: int = 1, impl: str = "native",
 
 def hopm3_partial(A_partial, xs, *, axis_name: str, sweeps: int = 1,
                   impl: str = "native", prec: Precision | str = F32,
-                  three_buffer: bool = True, fuse_pairs: bool = False,
-                  overlap=False):
+                  three_buffer: bool = True, fuse_pairs: bool | None = None,
+                  overlap=None):
     """dHOPM_3 over the *implicit sum* decomposition: each process holds one
     full-shape addend A^{(p)} with A = Σ_p A^{(p)} (the k = s case of Eq. 2
     for every chain).  Must run inside a shard_map manual region over
     ``axis_name``.  Communication: one n_j all-reduce per external iteration."""
     prec = get_policy(prec)
+    impl, fuse_pairs, overlap = _resolve_walker(
+        impl, fuse_pairs, overlap, shape=A_partial.shape,
+        p=coll._axis_size(axis_name), s=None, prec=prec)
     return _hopm_sweeps(
         A_partial, xs, sweeps=sweeps, split=None, partial_in=True,
         axis_name=axis_name, impl=impl, prec=prec, three_buffer=three_buffer,
@@ -489,8 +509,8 @@ def hopm3_sharded(
     sweeps: int = 1,
     impl: str = "native",
     prec: Precision | str = F32,
-    fuse_pairs: bool = False,
-    overlap=False,
+    fuse_pairs: bool | None = None,
+    overlap=None,
 ):
     """The per-shard body of :func:`dhopm3` (Algorithm 1 over a 1-D split)
     for callers already *inside* a shard_map manual region over
@@ -500,6 +520,9 @@ def hopm3_sharded(
     all-gather for j == split).  This is the split-leaf engine of
     ``train.grad_compress`` (sharded gradients compressed in place)."""
     prec = get_policy(prec)
+    impl, fuse_pairs, overlap = _resolve_walker(
+        impl, fuse_pairs, overlap, shape=A_loc.shape,
+        p=coll._axis_size(axis_name), s=split, prec=prec)
     return _hopm_sweeps(
         A_loc, xs, sweeps=sweeps, split=split, partial_in=False,
         axis_name=axis_name, impl=impl, prec=prec, three_buffer=True,
@@ -514,11 +537,11 @@ def hopm3_batched(
     sweeps: int = 1,
     impl: str = "native",
     prec: Precision | str = F32,
-    fuse_pairs: bool = False,
+    fuse_pairs: bool | None = None,
     partial: bool = False,
     split: int | None = None,
     axis_name: str | None = None,
-    overlap=False,
+    overlap=None,
 ):
     """dHOPM_3 over a *batch* of B stacked order-d tensors
     ``A_b[B, n_0..n_{d-1}]`` with per-batch factor vectors ``xs[j][B, n_j]``:
@@ -546,6 +569,10 @@ def hopm3_batched(
     if partial and split is not None:
         raise ValueError(
             "partial summands and a 1-D split are mutually exclusive modes")
+    impl, fuse_pairs, overlap = _resolve_walker(
+        impl, fuse_pairs, overlap, shape=A_b.shape[1:],
+        p=coll._axis_size(axis_name) if axis_name is not None else 1,
+        s=split, batch=A_b.shape[0], prec=prec)
     return _hopm_sweeps_batched(
         A_b, xs, sweeps=sweeps, split=split, partial_in=partial,
         axis_name=axis_name, impl=impl, prec=prec, fuse_pairs=fuse_pairs,
@@ -564,8 +591,8 @@ def dhopm3(
     impl: str = "native",
     prec: Precision | str = F32,
     three_buffer: bool = True,
-    fuse_pairs: bool = False,
-    overlap=False,
+    fuse_pairs: bool | None = None,
+    overlap=None,
 ):
     """The paper's distributed HOPM over a 1-D split (Algorithm 1).
 
@@ -583,6 +610,8 @@ def dhopm3(
     p = mesh.shape[axis_name]
     if A.shape[s] % p:
         raise ValueError(f"dim {s} ({A.shape[s]}) not divisible by p={p}")
+    impl, fuse_pairs, overlap = _resolve_walker(
+        impl, fuse_pairs, overlap, shape=A.shape, p=p, s=s, prec=prec)
 
     in_A = P(*[axis_name if i == s else None for i in range(d)])
 
@@ -615,8 +644,8 @@ def dhopm3_batched(
     sweeps: int = 1,
     impl: str = "native",
     prec: Precision | str = F32,
-    fuse_pairs: bool = False,
-    overlap=False,
+    fuse_pairs: bool | None = None,
+    overlap=None,
 ):
     """The paper's distributed HOPM (Algorithm 1) over a *batch* of B
     stacked order-d tensors ``A_b[B, n_0..n_{d-1}]``, each 1-D split along
@@ -641,6 +670,9 @@ def dhopm3_batched(
     if A_b.shape[s + 1] % p:
         raise ValueError(
             f"per-sample dim {s} ({A_b.shape[s + 1]}) not divisible by p={p}")
+    impl, fuse_pairs, overlap = _resolve_walker(
+        impl, fuse_pairs, overlap, shape=A_b.shape[1:], p=p, s=s,
+        batch=A_b.shape[0], prec=prec)
 
     in_A = P(*([None] + [axis_name if i == s else None for i in range(d)]))
 

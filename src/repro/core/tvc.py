@@ -241,6 +241,10 @@ def tvc(
     a3 = A.reshape(u, nk, v)
     out_dtype = _out_dtype(A, prec)
 
+    if impl == "auto":
+        from repro.plan import planner as _planner
+        impl = _planner.resolve_impl("auto", "tvc", shape, k,
+                                     itemsize=prec.storage_bytes)
     if impl == "pallas":
         from repro.kernels import ops as kops  # local import: optional dep cycle
         if isinstance(alpha, (int, float)) and isinstance(beta, (int, float)):
@@ -252,7 +256,10 @@ def tvc(
             y2 = kops.tvc_pallas(a3, x, y_in, alpha=float(alpha),
                                  beta=float(beta), prec=prec)
             return y2.reshape(tvc_shape(shape, k)).astype(out_dtype)
-        # Traced alpha/beta (rare): fall through to the generic epilogue.
+        # Traced alpha/beta (rare): fall through to the generic epilogue —
+        # a second launch, counted so the de-optimization is observable.
+        from repro.plan import planner as _planner
+        _planner.epilogue_fallback("tvc", impl)
         y2 = kops.tvc_pallas(a3, x, prec=prec)
     elif impl == "native":
         y2 = _native(a3, x, prec)
@@ -321,6 +328,11 @@ def tvc2(
     static_ab = isinstance(alpha, (int, float)) and isinstance(beta, (int, float))
     if static_ab and float(beta) != 0.0 and y is None:
         raise ValueError("beta != 0 requires y")
+    if impl == "auto":
+        from repro.plan import planner as _planner
+        impl = _planner.resolve_impl("auto", "tvc2", shape, k1,
+                                     itemsize=prec.storage_bytes,
+                                     static_ab=static_ab)
     if impl == "pallas":
         from repro.kernels import ops as kops
         if static_ab:
@@ -330,6 +342,13 @@ def tvc2(
             out = kops.tvc2_pallas(a4, x1, x2, y_in, alpha=float(alpha),
                                    beta=float(beta), prec=prec)
             return out.reshape(out_shape).astype(_out_dtype(A, prec))
+        # Traced alpha/beta: the fused epilogue cannot run and the update
+        # goes out as a SECOND launch.  The decision is routed through the
+        # planner (plan_tvc2(static_ab=False) prices pallas at two
+        # launches) and counted, so the former silent fallback is visible
+        # in plan_report().
+        from repro.plan import planner as _planner
+        _planner.epilogue_fallback("tvc2", impl)
         out = kops.tvc2_pallas(a4, x1, x2, prec=prec)
     elif impl == "mulsum":
         # bitwise-batchable fused pair: the (n1, n2) reduce runs as ONE
@@ -399,6 +418,10 @@ def tvc_batched(
             f"x shape {x.shape} incompatible with batch {B}, mode {k} of "
             f"{tuple(shape)}")
     out_shape = (B,) + tvc_shape(shape, k)
+    if impl == "auto":
+        from repro.plan import planner as _planner
+        impl = _planner.resolve_impl("auto", "batched", tuple(shape), k,
+                                     itemsize=prec.storage_bytes, batch=B)
     if impl == "pallas":
         from repro.kernels import ops as kops
         y_in = None if y is None else y.reshape(B, u, v)
@@ -444,6 +467,10 @@ def tvc2_batched(
     if x1.shape != (B, n1) or x2.shape != (B, n2):
         raise ValueError("vector shapes incompatible with batched fused modes")
     out_shape = (B,) + tuple(shape[:k1]) + tuple(shape[k2 + 1:])
+    if impl == "auto":
+        from repro.plan import planner as _planner
+        impl = _planner.resolve_impl("auto", "batched", tuple(shape), k1,
+                                     itemsize=prec.storage_bytes, batch=B)
     if impl == "pallas":
         from repro.kernels import ops as kops
         y_in = None if y is None else y.reshape(B, u, v)

@@ -1,0 +1,52 @@
+"""Trace-time execution planner (cost-model dispatch + AOT warm start).
+
+Two halves:
+
+* :mod:`repro.plan.planner` — a frozen, hashable :class:`~repro.plan.planner.Plan`
+  chosen per (shape, split, dtype, p) from the closed forms in
+  :mod:`repro.core.memory_model` plus the measured calibration table
+  (``kernels/calibration.json``).  ``impl="auto"`` on the core entry points
+  routes through it; every explicit flag still overrides.
+* :mod:`repro.plan.aot` — AOT lower+compile of the (plan, shape-signature)
+  entry points, wired to JAX's persistent compilation cache, with hit/miss
+  counters surfaced by :func:`~repro.plan.report.plan_report`.
+
+``REPRO_TVC_DISABLE_PLAN=1`` turns auto dispatch into the legacy static
+defaults (no calibration consulted); explicit impls are never affected.
+"""
+from . import aot, calibration, planner, report
+from .aot import enable_persistent_cache, warmup
+from .planner import (
+    AUTO,
+    Plan,
+    plan_batched,
+    plan_compress,
+    plan_dhopm3,
+    plan_for_cell,
+    plan_tvc,
+    plan_tvc2,
+    resolve_dhopm,
+    resolve_impl,
+)
+from .report import plan_report, reset_plan_report
+
+__all__ = [
+    "AUTO",
+    "Plan",
+    "aot",
+    "calibration",
+    "enable_persistent_cache",
+    "plan_batched",
+    "plan_compress",
+    "plan_dhopm3",
+    "plan_for_cell",
+    "plan_report",
+    "plan_tvc",
+    "plan_tvc2",
+    "planner",
+    "report",
+    "reset_plan_report",
+    "resolve_dhopm",
+    "resolve_impl",
+    "warmup",
+]

@@ -1,0 +1,178 @@
+"""Measured calibration table behind the planner's cost model.
+
+``kernels/calibration.json`` is a checked-in artifact fitted from the
+committed ``BENCH_TVC.json`` trajectory by ``benchmarks/calibrate.py`` —
+per-engine launch overhead (µs) and achieved GB/s, split by contraction
+class (a *leading*-mode contraction reduces the slowest-varying axes, where
+the XLA einsum collapses to a strided GEMV and the broadcast-multiply
+``mulsum`` engine streams several times faster; *inner*/tail contractions
+are the other way around).  ``check_bench`` derives its time-implied-traffic
+ceilings from the same file, so the CI gate and the planner share one
+source of truth.
+
+``REPRO_TVC_CALIBRATION`` overrides the table path;
+``REPRO_TVC_DISABLE_PLAN=1`` disables auto dispatch entirely (the planner
+returns the legacy static defaults without consulting the table).
+Missing file or missing fields fall back to conservative constants so the
+planner never hard-fails on an uncalibrated host.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+__all__ = [
+    "DEFAULT_PATH",
+    "cache_bytes",
+    "ceilings",
+    "disabled",
+    "dispatch_us",
+    "engine_gbs",
+    "engine_launch_us",
+    "engines",
+    "invalidate",
+    "load",
+    "peak_gbs",
+    "table_path",
+    "wire_gbs",
+]
+
+DEFAULT_PATH = (pathlib.Path(__file__).resolve().parent.parent
+                / "kernels" / "calibration.json")
+
+#: Conservative fallbacks when no table is committed / a field is missing.
+#: GB/s figures reflect the committed CPU trajectory's orderings (mulsum
+#: streams leading-mode pairs ~4x faster than the einsum; the einsum wins
+#: inner/tail modes) and deliberately understate TPU pallas so an
+#: uncalibrated accelerator host still dispatches to the compiled kernels.
+FALLBACK = {
+    "schema": 1,
+    "source": None,
+    "stream_triad_gbs": 5.0,
+    "dispatch_us": 200.0,
+    "wire_frac": 1 / 8.0,
+    # size (bytes) below which a leading-mode pair is priced with the
+    # cache-resident ``gbs_lead_small`` figures; 0 disables the regime
+    # split (uncalibrated hosts keep the single-bandwidth model)
+    "cache_bytes": 0.0,
+    "engines": {
+        "native": {"launch_us": 200.0, "gbs": 1.5,
+                   "gbs_lead": 0.15, "gbs_inner": 0.45},
+        "mulsum": {"launch_us": 200.0, "gbs": 0.9,
+                   "gbs_lead": 0.70, "gbs_inner": 0.25},
+        "pallas": {"launch_us": 30.0, "gbs": 3.0,
+                   "gbs_lead": 3.0, "gbs_inner": 3.0},
+    },
+    "ceilings": {"ratio_pallas": 2.0, "ratio_native": 32.0,
+                 "lowprec_factor": 3.0},
+}
+
+_cache: dict | None = None
+_cache_key: tuple | None = None
+
+
+def table_path(path=None) -> pathlib.Path:
+    if path is not None:
+        return pathlib.Path(path)
+    env = os.environ.get("REPRO_TVC_CALIBRATION")
+    return pathlib.Path(env) if env else DEFAULT_PATH
+
+
+def disabled() -> bool:
+    """True when auto dispatch is turned off (legacy static defaults)."""
+    return bool(os.environ.get("REPRO_TVC_DISABLE_PLAN"))
+
+
+def invalidate() -> None:
+    """Drop the in-process table cache (tests / after refitting)."""
+    global _cache, _cache_key
+    _cache = None
+    _cache_key = None
+
+
+def load(path=None) -> dict:
+    """The calibration table, merged over :data:`FALLBACK` (never raises)."""
+    global _cache, _cache_key
+    p = table_path(path)
+    key = (str(p),)
+    if _cache is not None and _cache_key == key:
+        return _cache
+    table = {k: (dict(v) if isinstance(v, dict) else v)
+             for k, v in FALLBACK.items()}
+    table["engines"] = {e: dict(prm) for e, prm in FALLBACK["engines"].items()}
+    try:
+        payload = json.loads(p.read_text())
+    except (OSError, ValueError):
+        payload = {}
+    for k, v in payload.items():
+        if k == "engines" and isinstance(v, dict):
+            for e, prm in v.items():
+                table["engines"].setdefault(e, {}).update(prm or {})
+        elif k == "ceilings" and isinstance(v, dict):
+            table["ceilings"].update(v)
+        else:
+            table[k] = v
+    _cache, _cache_key = table, key
+    return table
+
+
+def peak_gbs(path=None) -> float:
+    return float(load(path)["stream_triad_gbs"])
+
+
+def dispatch_us(path=None) -> float:
+    return float(load(path)["dispatch_us"])
+
+
+def wire_gbs(path=None) -> float:
+    """Reference interconnect bandwidth for the overlap time model."""
+    t = load(path)
+    return float(t["stream_triad_gbs"]) * float(t["wire_frac"])
+
+
+def engines(path=None) -> dict:
+    return load(path)["engines"]
+
+
+def _engine(engine: str, path=None) -> dict:
+    table = engines(path)
+    return table.get(engine) or FALLBACK["engines"]["native"]
+
+
+def engine_launch_us(engine: str, path=None) -> float:
+    prm = _engine(engine, path)
+    return float(prm.get("launch_us", load(path)["dispatch_us"]))
+
+
+def cache_bytes(path=None) -> float:
+    """Fitted cache-residency crossover for leading-mode pairs (bytes);
+    0 = no split fitted."""
+    return float(load(path).get("cache_bytes", 0.0))
+
+
+def engine_gbs(engine: str, *, leading: bool | None = None,
+               nbytes: float | None = None, path=None) -> float:
+    """Achieved GB/s for ``engine``; ``leading`` selects the contraction
+    class (None = the pooled single-mode figure).
+
+    Leading-mode bandwidth is *bimodal* on the measured trajectory: the
+    XLA einsum holds ~1 GB/s while the operand is cache-resident and
+    collapses ~5x once it streams from DRAM, while ``mulsum`` is flat —
+    so when ``nbytes`` is given and falls under the fitted
+    :func:`cache_bytes` crossover, the cache-resident ``gbs_lead_small``
+    figure is used instead of ``gbs_lead``."""
+    prm = _engine(engine, path)
+    if leading is None:
+        return float(prm.get("gbs", FALLBACK["engines"]["native"]["gbs"]))
+    key = "gbs_lead" if leading else "gbs_inner"
+    if leading and nbytes is not None:
+        cross = cache_bytes(path)
+        if 0 < nbytes < cross and "gbs_lead_small" in prm:
+            key = "gbs_lead_small"
+    return float(prm.get(key, prm.get("gbs", 1.0)))
+
+
+def ceilings(path=None) -> dict:
+    """Time-implied-traffic gate allowances shared with ``check_bench``."""
+    return dict(load(path)["ceilings"])

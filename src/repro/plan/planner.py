@@ -1,0 +1,391 @@
+"""Cost-model dispatch: a frozen, trace-stable :class:`Plan` per call site.
+
+The planner inverts the repo's flag-driven engine selection: ``impl="auto"``
+on :func:`repro.core.tvc.tvc` / ``tvc2`` / the batched variants, the
+``hopm3*``/``dhopm3*`` walkers and ``train.grad_compress`` resolves, at
+trace time, to a concrete (engine, pair-fusion, bucketing, overlap-chunk,
+allreduce-algorithm) choice computed from the closed forms in
+:mod:`repro.core.memory_model` priced with the measured calibration table
+(:mod:`repro.plan.calibration`).  Explicit flags always override — auto
+only ever fills values the caller left unset.
+
+Decision rules (each one measured on the committed trajectory, see
+``benchmarks/calibrate.py``):
+
+* **Single-mode TVC** picks among the einsum-family engines by
+  ``launch_us + bytes / gbs``.  The ``mulsum`` engine is *excluded* from
+  single-mode auto on CPU: its measured behavior is bimodal (3x faster than
+  the einsum on some shapes, 30-100x pathological on others with identical
+  byte counts), and the planner's contract is "never pathological".
+* **Fused pairs (tvc2)** price the two calibrated contraction classes: a
+  *leading* pair (``k1 == 0``) reduces the slowest-varying axes, where the
+  XLA einsum degrades to a strided pass and ``mulsum`` streams 3-6x faster
+  — but only once the operand streams from DRAM: while it is cache-resident
+  (under the fitted ``cache_bytes`` crossover) the einsum holds ~1 GB/s and
+  wins, so the lead-pair choice flips with tensor size.  *Inner* pairs go
+  to the einsum at every size.
+* **Chains** (``hopm3*``/``dhopm3*``/``grad_compress``) pin the
+  bitwise-batchable engine (``mulsum`` on CPU, ``pallas`` on TPU) — the
+  distributed / batched bitwise-reproducibility guarantees hold only there,
+  and auto never trades determinism for speed.  Pair fusion turns on when
+  :func:`~repro.core.memory_model.dhopm_launches_per_sweep` says it strictly
+  reduces launches; overlap chunks minimize the
+  :func:`~repro.core.memory_model.dhopm_time_sweep` exposed-wire +
+  extra-dispatch total (at p = 1 there is no wire to hide, so auto stays
+  synchronous rather than paying the pipeline's extra launches).
+* **Batched bucketing** turns on when
+  :func:`~repro.core.memory_model.launch_amortized_speedup` > 1.
+
+Plans are hashable frozen dataclasses computed from static (Python-level)
+shapes only, so jit tracing/caching is unaffected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+from . import calibration, report
+
+__all__ = [
+    "AUTO",
+    "Plan",
+    "dispatch_dominated",
+    "epilogue_fallback",
+    "plan_batched",
+    "plan_compress",
+    "plan_dhopm3",
+    "plan_for_cell",
+    "plan_tvc",
+    "plan_tvc2",
+    "resolve_dhopm",
+    "resolve_impl",
+    "time_implied_ratio",
+]
+
+AUTO = "auto"
+
+#: Overlap chunk counts the planner searches (the walker clamps to n_j).
+OVERLAP_CANDIDATES = (1, 2, 4, 8)
+
+#: Relative cost band inside which the earlier (more robust) candidate
+#: engine wins — keeps choices stable under calibration-fit jitter.
+TIEBREAK_BAND = 0.05
+
+#: A cell is "dispatch-dominated" when its time-implied traffic exceeds
+#: this multiple of the streamed bytes (the 18-43x cells in the committed
+#: trajectory motivating this planner).
+DISPATCH_DOMINATED_X = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Frozen, hashable execution plan for one contraction call site."""
+    kind: str                 # "tvc" | "tvc2" | "batched" | "dhopm3" | "compress"
+    impl: str                 # concrete engine (never "auto")
+    fused: bool = False       # adjacent-mode pair fusion
+    overlap_chunks: int = 1   # 1 = synchronous walker
+    bucket: bool = True       # batched bucketing (grad_compress / batched)
+    algo: str = "none"        # allreduce schedule for the dominant payload
+    two_launch: bool = False  # tvc2 epilogue ran as a second launch
+    reason: str = ""          # why the engine was picked/pinned
+
+    def as_cell_dict(self) -> dict:
+        """The bench-schema-6 per-cell plan record (what the gate recomputes)."""
+        return {"engine": self.impl, "fused": self.fused,
+                "overlap_chunks": self.overlap_chunks, "algo": self.algo}
+
+
+def _backend(backend: str | None) -> str:
+    if backend is not None:
+        return backend
+    import jax
+    return jax.default_backend()
+
+
+def time_implied_ratio(us: float, streamed_bytes: float,
+                       peak_gbs: float) -> float:
+    """Measured-time-implied traffic over modeled streamed bytes."""
+    if streamed_bytes <= 0:
+        return float("inf")
+    return us * 1e-6 * peak_gbs * 1e9 / streamed_bytes
+
+
+def dispatch_dominated(us: float, streamed_bytes: float, peak_gbs: float,
+                       factor: float = DISPATCH_DOMINATED_X) -> bool:
+    return time_implied_ratio(us, streamed_bytes, peak_gbs) >= factor
+
+
+def _cost_us(engine: str, nbytes: float, *, leading: bool | None,
+             launches: int = 1) -> float:
+    gbs = calibration.engine_gbs(engine, leading=leading, nbytes=nbytes)
+    return (launches * calibration.engine_launch_us(engine)
+            + nbytes / (gbs * 1e9) * 1e6)
+
+
+def _pick(candidates, nbytes: float, *, leading: bool | None,
+          launches=None) -> tuple[str, str]:
+    """Cheapest candidate engine; earlier candidates win inside the
+    tiebreak band (stable under fit jitter)."""
+    launches = launches or {}
+    costs = [(_cost_us(e, nbytes, leading=leading,
+                       launches=launches.get(e, 1)), e) for e in candidates]
+    best = min(c for c, _ in costs)
+    for c, e in costs:
+        if c <= best * (1.0 + TIEBREAK_BAND):
+            return e, f"cost-model({c:.0f}us)"
+    return costs[0][1], "cost-model"
+
+
+def _chain_engine(backend: str) -> tuple[str, str]:
+    """Chains pin the bitwise-batchable engine — determinism over speed."""
+    if backend == "tpu":
+        return "pallas", "bitwise-batchable engine on tpu"
+    return "mulsum", "bitwise-batchable engine (cpu)"
+
+
+def _legacy_impl(kind: str, backend: str) -> str:
+    """What auto resolves to with REPRO_TVC_DISABLE_PLAN set (the
+    pre-planner static defaults)."""
+    if kind in ("dhopm3", "compress", "batched"):
+        return "pallas" if backend == "tpu" else "mulsum"
+    return "pallas" if backend == "tpu" else "native"
+
+
+# ---------------------------------------------------------------------------
+# plan producers (cached on their static arguments)
+
+@functools.lru_cache(maxsize=4096)
+def _plan_tvc(shape, k, itemsize, backend, disabled):
+    from repro.core.tvc import tvc_bytes
+    if disabled:
+        return Plan("tvc", _legacy_impl("tvc", backend),
+                    reason="plan-disabled")
+    nbytes = tvc_bytes(shape, k, itemsize)
+    cands = (("pallas", "native") if backend == "tpu"
+             else ("native", "looped", "unfolded"))
+    impl, why = _pick(cands, nbytes, leading=None)
+    return Plan("tvc", impl, reason=why)
+
+
+def plan_tvc(shape, k: int, *, itemsize: int = 4,
+             backend: str | None = None) -> Plan:
+    report.note("plan.tvc")
+    return _plan_tvc(tuple(shape), k, itemsize, _backend(backend),
+                     calibration.disabled())
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_tvc2(shape, k1, itemsize, static_ab, backend, disabled):
+    from repro.core.tvc import tvc2_bytes
+    if disabled:
+        return Plan("tvc2", _legacy_impl("tvc2", backend), fused=True,
+                    two_launch=(backend == "tpu" and not static_ab),
+                    reason="plan-disabled")
+    nbytes = tvc2_bytes(shape, k1, k1 + 1, itemsize)
+    leading = k1 == 0
+    if backend == "tpu":
+        cands = ("pallas", "mulsum", "native")
+        # a traced alpha/beta forces the pallas epilogue into a second
+        # launch — price it so auto can route around the de-optimization
+        launches = {"pallas": 1 if static_ab else 2}
+    else:
+        cands = ("native", "mulsum")
+        launches = {}
+    impl, why = _pick(cands, nbytes, leading=leading, launches=launches)
+    return Plan("tvc2", impl, fused=True,
+                two_launch=(impl == "pallas" and not static_ab), reason=why)
+
+
+def plan_tvc2(shape, k1: int, *, itemsize: int = 4, static_ab: bool = True,
+              backend: str | None = None) -> Plan:
+    report.note("plan.tvc2")
+    return _plan_tvc2(tuple(shape), k1, itemsize, bool(static_ab),
+                      _backend(backend), calibration.disabled())
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_batched(b, shape, k, itemsize, backend, disabled):
+    from repro.core.memory_model import launch_amortized_speedup
+    from repro.core.tvc import tvc_bytes
+    impl, why = _chain_engine(backend)
+    if disabled:
+        return Plan("batched", _legacy_impl("batched", backend),
+                    reason="plan-disabled")
+    one = tvc_bytes(shape, k, itemsize)
+    bucket = b > 1 and launch_amortized_speedup(
+        b, one, calibration.peak_gbs(), calibration.dispatch_us()) > 1.0
+    return Plan("batched", impl, bucket=bucket, reason=why)
+
+
+def plan_batched(b: int, shape, k: int, *, itemsize: int = 4,
+                 backend: str | None = None) -> Plan:
+    """Plan for B same-shape single-mode contractions (one bucket)."""
+    report.note("plan.batched")
+    return _plan_batched(b, tuple(shape), k, itemsize, _backend(backend),
+                         calibration.disabled())
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_dhopm3(shape, p, s, batch, itemsize, fuse_pairs, overlap, backend,
+                 disabled):
+    from repro.core.memory_model import (
+        dhopm_launches_per_sweep,
+        dhopm_time_sweep,
+    )
+    from repro.dist.collectives import allreduce_algo
+    d = len(shape)
+    impl, why = _chain_engine(backend)
+    algo = allreduce_algo(max(shape), p)
+    if disabled:
+        return Plan("dhopm3", _legacy_impl("dhopm3", backend),
+                    fused=bool(fuse_pairs),
+                    overlap_chunks=(overlap if overlap else 1),
+                    algo=algo, reason="plan-disabled")
+    if fuse_pairs is None:
+        fused = (dhopm_launches_per_sweep(d, s, fuse_pairs=True)
+                 < dhopm_launches_per_sweep(d, s, fuse_pairs=False))
+    else:
+        fused = bool(fuse_pairs)
+    if overlap is None:
+        best_c, best_t = 1, None
+        for c in OVERLAP_CANDIDATES:
+            t = dhopm_time_sweep(
+                shape, p, itemsize, split=s, overlap_chunks=c,
+                peak_gbs=calibration.peak_gbs(),
+                wire_gbs=calibration.wire_gbs(),
+                dispatch_us=calibration.dispatch_us())
+            total = t["exposed_wire_us"] + t["extra_dispatch_us"]
+            if best_t is None or total < best_t * (1.0 - TIEBREAK_BAND):
+                best_c, best_t = c, total
+        chunks = best_c
+    else:
+        chunks = max(1, int(overlap))
+    return Plan("dhopm3", impl, fused=fused, overlap_chunks=chunks,
+                algo=algo, reason=why)
+
+
+def plan_dhopm3(shape, *, p: int = 1, s: int | None = None, batch: int = 1,
+                itemsize: int = 4, fuse_pairs: bool | None = None,
+                overlap: int | None = None,
+                backend: str | None = None) -> Plan:
+    """Plan for one (optionally batched, ``s=None`` = unsplit sequential)
+    dHOPM_3 chain walker.
+
+    ``fuse_pairs`` / ``overlap`` None mean "let the model decide"; explicit
+    values pass through unchanged (caller override).  ``overlap`` follows
+    the walker convention: False = sync, True = default chunking, int =
+    that many chunks."""
+    report.note("plan.dhopm3")
+    if overlap is False:
+        overlap = 1
+    elif overlap is True:
+        from repro.core.dhopm import OVERLAP_CHUNKS_DEFAULT
+        overlap = OVERLAP_CHUNKS_DEFAULT
+    elif overlap is not None:
+        overlap = int(overlap)
+    return _plan_dhopm3(tuple(shape), p, s, batch, itemsize,
+                        fuse_pairs, overlap, _backend(backend),
+                        calibration.disabled())
+
+
+def plan_compress(b: int, shape, *, itemsize: int = 4,
+                  backend: str | None = None) -> Plan:
+    """Plan for one grad_compress bucket: B stacked same-shape views.
+
+    The engine is pinned to ``mulsum`` on EVERY backend — grad_compress's
+    bucketed==per-leaf bitwise guarantee depends on the order-explicit
+    accumulation tree, which no other engine provides — so auto only ever
+    decides the bucketing here."""
+    report.note("plan.compress")
+    base = _plan_batched(b, tuple(shape), len(shape) - 1, itemsize,
+                         _backend(backend), calibration.disabled())
+    return dataclasses.replace(
+        base, kind="compress", impl="mulsum",
+        reason="bitwise-batchable engine (grad_compress guarantee)")
+
+
+# ---------------------------------------------------------------------------
+# runtime hooks
+
+def resolve_impl(impl: str, kind: str, shape, k: int, *, itemsize: int = 4,
+                 batch: int = 1, static_ab: bool = True,
+                 backend: str | None = None) -> str:
+    """Resolve ``impl="auto"`` for the flat tvc entry points; explicit
+    impls pass through untouched."""
+    if impl != AUTO:
+        return impl
+    if kind == "tvc":
+        return plan_tvc(shape, k, itemsize=itemsize, backend=backend).impl
+    if kind == "tvc2":
+        return plan_tvc2(shape, k, itemsize=itemsize, static_ab=static_ab,
+                         backend=backend).impl
+    if kind == "batched":
+        return plan_batched(batch, shape, k, itemsize=itemsize,
+                            backend=backend).impl
+    raise ValueError(f"unknown planner kind {kind!r}")
+
+
+def resolve_dhopm(impl: str, fuse_pairs, overlap, *, shape,
+                  p: int = 1, s: int | None = None, batch: int = 1,
+                  itemsize: int = 4, backend: str | None = None):
+    """Resolve (impl, fuse_pairs, overlap) for the chain walkers.
+
+    Explicit flags always win; with ``impl="auto"`` any flag left at None
+    comes from the plan.  Returns concrete ``(impl, fuse_pairs, overlap)``
+    ready for ``_hopm_sweeps``."""
+    if impl != AUTO:
+        return (impl,
+                False if fuse_pairs is None else fuse_pairs,
+                False if overlap is None else overlap)
+    plan = plan_dhopm3(
+        shape, p=p, s=s, batch=batch, itemsize=itemsize,
+        fuse_pairs=None if fuse_pairs is None else bool(fuse_pairs),
+        overlap=None if overlap is None else overlap,
+        backend=backend)
+    overlap_out = plan.overlap_chunks if plan.overlap_chunks > 1 else False
+    if overlap is not None:
+        overlap_out = overlap
+    return (plan.impl,
+            plan.fused if fuse_pairs is None else fuse_pairs,
+            overlap_out)
+
+
+def epilogue_fallback(kind: str, impl: str) -> None:
+    """Record a silent de-optimization: the fused kernel epilogue could not
+    run (traced alpha/beta) and the update went out as a second launch."""
+    report.note(f"{kind}.two_launch_fallback")
+
+
+# ---------------------------------------------------------------------------
+# bench integration
+
+def _cell_itemsize(cell) -> int:
+    return 2 if cell.get("dtype") == "bf16" else 4
+
+
+def plan_for_cell(cell: dict, backend: str | None = None) -> dict:
+    """The plan auto would choose for a bench cell's recorded inputs —
+    written by ``bench_tvc_kernel`` at measure time and recomputed verbatim
+    by ``check_bench`` (the schema-6 plan-divergence gate)."""
+    kind = cell["kind"]
+    shape = tuple(cell["shape"])
+    itemsize = _cell_itemsize(cell)
+    if backend is None:
+        eng = cell.get("engine", "")
+        backend = "tpu" if eng == "pallas" else "cpu"
+    if kind == "tvc":
+        p = plan_tvc(shape, cell["mode"], itemsize=itemsize, backend=backend)
+    elif kind == "tvc2":
+        p = plan_tvc2(shape, cell["mode"], itemsize=itemsize,
+                      backend=backend)
+    elif kind == "tvc_batched":
+        p = plan_batched(cell["batch"], shape, cell["mode"],
+                         itemsize=itemsize, backend=backend)
+    elif kind in ("dhopm3_batched", "dhopm3_overlap"):
+        p = plan_dhopm3(shape, p=cell.get("p", 1), s=cell.get("split"),
+                        batch=cell.get("batch", 1), itemsize=itemsize,
+                        backend=backend)
+    else:
+        raise ValueError(f"no plan rule for bench kind {kind!r}")
+    return p.as_cell_dict()

@@ -1,0 +1,44 @@
+"""Observability for the planner: every auto dispatch, silent fallback and
+AOT cache hit/miss increments a named counter here, and
+:func:`plan_report` snapshots them — so de-optimizations (e.g. the tvc2
+two-launch epilogue fallback under traced alpha/beta) are visible instead
+of silent.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+
+__all__ = ["counters", "note", "plan_report", "reset_plan_report"]
+
+_lock = threading.Lock()
+_counts: collections.Counter = collections.Counter()
+
+
+def note(event: str, n: int = 1) -> None:
+    """Count one planner/AOT event (trace-time only — never traced)."""
+    with _lock:
+        _counts[event] += n
+
+
+def counters() -> dict:
+    with _lock:
+        return dict(_counts)
+
+
+def plan_report() -> dict:
+    """Snapshot of planner decisions, fallbacks and AOT cache traffic."""
+    from . import aot, calibration
+    return {
+        "counters": counters(),
+        "aot": aot.stats(),
+        "calibration": str(calibration.table_path()),
+        "calibrated": calibration.table_path().exists(),
+        "disabled": calibration.disabled(),
+    }
+
+
+def reset_plan_report() -> None:
+    """Zero all counters (tests)."""
+    with _lock:
+        _counts.clear()

@@ -62,6 +62,32 @@ class DecodeEngine:
                 cache, specs)
         return cache
 
+    def warmup(self, prompt_len: int, *, extra=None,
+               include_step: bool = True) -> dict:
+        """AOT lower+compile the (batch, ``prompt_len``) prefill and the
+        decode-step entry points ahead of the first request.
+
+        Pair with :func:`repro.plan.aot.enable_persistent_cache` and the
+        compile happens once per fleet, not once per process: later
+        processes deserialize from the persistent cache, and a repeated
+        in-process warmup is a dictionary hit.  Returns the per-entry
+        :func:`repro.plan.aot.warmup` reports (``cache`` is
+        ``"in_process"`` / ``"persistent"`` / ``"cold"`` plus
+        ``compile_us``); counters land in
+        :func:`repro.plan.report.plan_report`."""
+        from repro.plan import aot
+        toks = jnp.zeros((self.batch_size, prompt_len), jnp.int32)
+        cache = self.new_cache()
+        name = f"decode_prefill_{self.cfg.family}"
+        reports = {"prefill": aot.warmup(
+            self._prefill, self.params, toks, cache, extra, name=name)}
+        if include_step:
+            cur = jnp.zeros((self.batch_size, 1), jnp.int32)
+            reports["step"] = aot.warmup(
+                self._step, self.params, cache, cur,
+                name=f"decode_step_{self.cfg.family}")
+        return reports
+
     def generate(self, prompt_tokens, steps: int, *, temperature: float = 0.0,
                  top_k: Optional[int] = None, extra=None, seed: int = 0
                  ) -> GenerationResult:

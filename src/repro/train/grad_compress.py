@@ -41,10 +41,17 @@ class CompressorCfg:
     max_order: int = 4           # flatten higher-order leaves down to this
     prec: str | Precision = "bf16"   # wire/storage policy for collectives
     ef_dtype: str = "float32"    # error-feedback buffer dtype
-    bucket: bool = True          # batch same-view leaves through ONE
+    impl: str = "auto"           # contraction engine for the HOPM chains;
+    #                              "auto" routes through the planner, which
+    #                              pins the bitwise-batchable mulsum engine
+    #                              on every backend (the bucketed==per-leaf
+    #                              guarantee is engine-order-dependent)
+    bucket: bool | str = "auto"  # batch same-view leaves through ONE
     #                              hopm3_batched chain per bucket (same
     #                              iterates as the per-leaf loop; False
-    #                              forces the per-leaf reference path)
+    #                              forces the per-leaf reference path;
+    #                              "auto" asks the planner's
+    #                              launch-amortization model per bucket)
     splits: tuple[tuple[str, int], ...] = ()
     #   1-D split annotations: (leaf path string -> split dim in *view*
     #   coordinates).  An annotated leaf is a per-rank SLICE of an
@@ -56,6 +63,25 @@ class CompressorCfg:
     #   shard count along the split axis (== the DP axis size at runtime;
     #   needed statically by init_state/wire accounting to size global
     #   factor vectors).
+
+
+def _engine(cfg: CompressorCfg) -> str:
+    """The chain engine for this compressor — ``cfg.impl`` verbatim, or the
+    planner's pick for ``"auto"`` (pinned to the bitwise-batchable
+    ``mulsum``; see :func:`repro.plan.planner.plan_compress`)."""
+    if cfg.impl != "auto":
+        return cfg.impl
+    from repro.plan import planner
+    return planner.plan_compress(1, (1, 1)).impl
+
+
+def _use_bucket(cfg: CompressorCfg, b: int, view, itemsize: int) -> bool:
+    """Resolve the per-bucket batching decision (explicit flag wins;
+    ``"auto"`` asks the launch-amortization model)."""
+    if cfg.bucket != "auto":
+        return bool(cfg.bucket)
+    from repro.plan import planner
+    return planner.plan_compress(b, view, itemsize=itemsize).bucket
 
 
 def _split_for(path_str: str, cfg: CompressorCfg) -> int | None:
@@ -193,12 +219,12 @@ def _compress_leaf(g, s, cfg: CompressorCfg, axis_name: str, prec, p):
         xs0 = [x for x in s["xs"][r]]
         # local addend of the deflated global tensor: each rank owns 1/p
         # of the already-extracted components.
-        # impl="mulsum": the bitwise-batchable contraction engine, so the
+        # the engine resolves to the bitwise-batchable mulsum, so the
         # bucketed scheduler reproduces this path exactly (see
         # core.tvc._mulsum)
         xs_r, lam = hopm3_partial(
             resid_v - approx / p, xs0, axis_name=axis_name,
-            sweeps=cfg.sweeps, impl="mulsum", prec=prec)
+            sweeps=cfg.sweeps, impl=_engine(cfg), prec=prec)
         # lam is the magnitude of the GLOBAL sum; each rank reconstructs
         # identically and owns 1/p of it for the mean.
         contrib = _rank1_outer(xs_r, lam)
@@ -239,7 +265,7 @@ def _compress_leaf_split(g, s, cfg: CompressorCfg, axis_name: str, prec, p,
         xs0 = [x for x in s["xs"][r]]
         xs_r, lam = hopm3_sharded(
             resid_v - approx, xs0, axis_name=axis_name, split=s_dim,
-            sweeps=cfg.sweeps, impl="mulsum", prec=prec)
+            sweeps=cfg.sweeps, impl=_engine(cfg), prec=prec)
         loc = _local_factors(xs_r, s_dim, vshape[s_dim], axis_name)
         approx = approx + _rank1_outer(loc, lam)
         new_xs.append(tuple(x.astype(F32) for x in xs_r))
@@ -271,7 +297,7 @@ def _compress_bucket_split(gs, ss, cfg: CompressorCfg, axis_name: str, prec,
                for m in range(len(vshape))]
         xs_r, lam = hopm3_batched(
             resid_b - approx_b, xs0, axis_name=axis_name, split=s_dim,
-            sweeps=cfg.sweeps, impl="mulsum", prec=prec)
+            sweeps=cfg.sweeps, impl=_engine(cfg), prec=prec)
         loc = _local_factors(xs_r, s_dim, vshape[s_dim], axis_name)
         approx_b = approx_b + jax.vmap(_rank1_outer)(loc, lam)
         new_xs_b.append([x.astype(F32) for x in xs_r])
@@ -309,7 +335,7 @@ def _compress_bucket(gs, ss, cfg: CompressorCfg, axis_name: str, prec, p):
                for m in range(len(vshape))]
         xs_r, lam = hopm3_batched(
             resid_b - approx_b / p, xs0, axis_name=axis_name,
-            sweeps=cfg.sweeps, impl="mulsum", prec=prec, partial=True)
+            sweeps=cfg.sweeps, impl=_engine(cfg), prec=prec, partial=True)
         contrib = jax.vmap(_rank1_outer)(xs_r, lam)
         approx_b = approx_b + contrib
         new_xs_b.append([x.astype(F32) for x in xs_r])
@@ -380,7 +406,8 @@ def compress_and_sync(grads, state, cfg: CompressorCfg, axis_name: str):
         s_dim = key[-1]
         gs = [flat_g[i] for i in idxs]
         ss = [flat_s[i] for i in idxs]
-        if cfg.bucket and len(idxs) > 1:
+        if len(idxs) > 1 and _use_bucket(cfg, len(idxs), key[0],
+                                         jnp.dtype(key[1]).itemsize):
             if s_dim is None:
                 results = _compress_bucket(gs, ss, cfg, axis_name, prec, p)
             else:

@@ -15,6 +15,7 @@ on exceptions, a straggler/step-time watchdog, and metrics.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from functools import partial
 from typing import Any, Optional
@@ -47,6 +48,10 @@ class TrainConfig:
     ckpt_every: int = 200
     keep_last: int = 3
     watchdog_factor: float = 3.0        # flag steps slower than factor*median
+    warmup: bool = False                # AOT-compile the step on the first
+                                        # batch's shapes before the loop (see
+                                        # repro.plan.aot; pairs with the
+                                        # persistent compilation cache)
 
 
 def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -182,6 +187,21 @@ def train(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig, data_iter,
     step_fn, _ = make_train_step(cfg, mesh, tcfg)
     step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2)) \
         if tcfg.mode == "gspmd" else step_fn
+
+    if tcfg.warmup:
+        # Peek (not consume) the first batch to learn the step's shapes and
+        # AOT-compile before timing starts.  In gspmd mode the jitted step is
+        # warmed directly; in dp_explicit the step runs eagerly (shard_map
+        # outside jit), so warming a jitted wrapper only seeds the persistent
+        # compilation cache — the loop itself still traces on first call.
+        from repro.plan import aot
+        first = next(data_iter)
+        data_iter = itertools.chain([first], data_iter)
+        target = step_fn if tcfg.mode == "gspmd" else jax.jit(step_fn)
+        rep = aot.warmup(target, params, opt_state, comp_state, first,
+                         name=f"train_step_{tcfg.mode}_{cfg.family}")
+        log(f"[warmup] train step: {rep['cache']} "
+            f"({rep['compile_us'] / 1e3:.1f} ms)")
 
     times: list[float] = []
     metrics_hist = []

@@ -277,6 +277,7 @@ def main():
     check_ring_wire_counted_trace(mesh)
     check_dhopm3_overlap(mesh)
     check_dhopm3_batched_overlap(mesh)
+    check_dhopm3_auto_plan(mesh)
 
     # ---- training integration ----------------------------------------------
     check_training()
@@ -646,6 +647,35 @@ def check_dhopm3_batched_overlap(mesh):
         for a, b in zip(got[0], xi):
             assert np.array_equal(np.asarray(a)[i], np.asarray(b))
     ok("dhopm3_batched_overlap_bitwise")
+
+
+def check_dhopm3_auto_plan(mesh):
+    """Acceptance (p = 8): dhopm3(impl="auto") — the planner resolving the
+    engine, pair fusion and overlap chunking — is BITWISE equal to the
+    explicitly-flagged mulsum walker run with the exact flags the plan
+    resolved to.  Auto must never trade the distributed bitwise guarantee
+    for speed."""
+    from repro.plan import planner
+
+    rng = np.random.default_rng(41)
+    shape = (8, 24, 16)
+    A = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    xs0 = [jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+           for n in shape]
+    for s in (0, 2):
+        plan = planner.plan_dhopm3(shape, p=8, s=s, itemsize=4,
+                                   backend="cpu")
+        assert plan.impl == "mulsum", plan  # the bitwise-batchable engine
+        overlap = plan.overlap_chunks if plan.overlap_chunks > 1 else False
+        ref_xs, ref_lam = dh.dhopm3(
+            A, xs0, mesh, "x", s=s, sweeps=2, impl=plan.impl,
+            fuse_pairs=plan.fused, overlap=overlap)
+        got_xs, got_lam = dh.dhopm3(A, xs0, mesh, "x", s=s, sweeps=2,
+                                    impl="auto")
+        assert np.array_equal(np.asarray(ref_lam), np.asarray(got_lam)), s
+        for a, b in zip(ref_xs, got_xs):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), s
+    ok("dhopm3_auto_plan_bitwise")
 
 
 def check_wire_summary_trace():

@@ -33,6 +33,7 @@ EXPECTED = [
     "ring_wire_matches_counted_trace",
     "dhopm3_overlap_bitwise",
     "dhopm3_batched_overlap_bitwise",
+    "dhopm3_auto_plan_bitwise",
     "dp_explicit_matches_gspmd",
     "grad_compression_lowrank_and_ef",
     "grad_compression_bucketed_bitwise",

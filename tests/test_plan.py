@@ -1,0 +1,244 @@
+"""Planner + AOT warm-start tests: table-driven engine choices, choice
+monotonicity, plan hashability/trace-stability, the tvc2 two-launch
+fallback counter, and the in-process warmup cache."""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import tvc, tvc2
+from repro.plan import (
+    aot,
+    calibration,
+    plan_batched,
+    plan_compress,
+    plan_dhopm3,
+    plan_report,
+    plan_tvc,
+    plan_tvc2,
+    planner,
+    reset_plan_report,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+BIG = (256, 256, 256)
+SMALL = (8, 8, 8)
+
+
+# ---- calibration table ----
+
+def test_committed_calibration_table_loads():
+    # the checked-in artifact benchmarks/calibrate.py fitted from the
+    # committed trajectory: present, parsed, and actually used
+    assert calibration.DEFAULT_PATH.exists()
+    table = calibration.load()
+    assert table["source"] is not None
+    assert calibration.dispatch_us() > 0
+    assert calibration.peak_gbs() > 0
+    for engine in ("native", "mulsum"):
+        assert calibration.engine_gbs(engine, leading=True) > 0
+        assert calibration.engine_gbs(engine, leading=False) > 0
+    ceil = calibration.ceilings()
+    assert ceil["ratio_native"] > 1 and ceil["ratio_pallas"] >= 2.0
+
+
+def test_calibrate_fit_from_committed_bench():
+    from benchmarks.calibrate import fit
+    payload = json.loads((ROOT / "BENCH_TVC.json").read_text())
+    table = fit(payload, source="BENCH_TVC.json")
+    assert table["dispatch_us"] > 0
+    assert "native" in table["fitted"]["engines"]
+    # every CPU engine ends up with a usable bandwidth estimate, whether
+    # fitted from its own flag-sweep samples (schema 6) or mirrored
+    for engine in ("native", "looped", "unfolded", "mulsum"):
+        assert table["engines"][engine]["gbs"] > 0, engine
+
+
+# ---- table-driven choices ----
+
+CHOICE_TABLE = [
+    # (planner call, expected engine)
+    (lambda: plan_tvc(BIG, 0, itemsize=4, backend="cpu"), "native"),
+    (lambda: plan_tvc(BIG, 2, itemsize=4, backend="cpu"), "native"),
+    # leading pair: mulsum streams several times faster than the einsum
+    (lambda: plan_tvc2(BIG, 0, itemsize=4, backend="cpu"), "mulsum"),
+    (lambda: plan_tvc2((64,) * 4, 0, itemsize=2, backend="cpu"), "mulsum"),
+    # inner/tail pair: the einsum wins
+    (lambda: plan_tvc2(BIG, 1, itemsize=4, backend="cpu"), "native"),
+    (lambda: plan_tvc2((64,) * 4, 2, itemsize=4, backend="cpu"), "native"),
+    # chains pin the bitwise-batchable engine per backend
+    (lambda: plan_batched(8, (16, 16, 16), 1, itemsize=4, backend="cpu"),
+     "mulsum"),
+    (lambda: plan_batched(8, (16, 16, 16), 1, itemsize=4, backend="tpu"),
+     "pallas"),
+    (lambda: plan_dhopm3((8,) * 4, p=1, s=3, backend="cpu"), "mulsum"),
+    (lambda: plan_dhopm3((8,) * 4, p=1, s=3, backend="tpu"), "pallas"),
+    # grad_compress pins mulsum on EVERY backend (bitwise bucket guarantee)
+    (lambda: plan_compress(4, (32, 8), backend="cpu"), "mulsum"),
+    (lambda: plan_compress(4, (32, 8), backend="tpu"), "mulsum"),
+]
+
+
+@pytest.mark.parametrize("case", range(len(CHOICE_TABLE)))
+def test_planner_choice_table(case):
+    make, want = CHOICE_TABLE[case]
+    assert make().impl == want
+
+
+def test_single_mode_auto_never_mulsum():
+    # mulsum's single-mode CPU behavior is bimodal (pathological on some
+    # shapes) — the planner's contract is "never pathological"
+    for shape in (SMALL, (64,) * 4, BIG, (24,) * 5):
+        for k in range(len(shape)):
+            p = plan_tvc(shape, k, itemsize=4, backend="cpu")
+            assert p.impl in ("native", "looped", "unfolded"), (shape, k, p)
+
+
+def test_dhopm3_plan_flags():
+    # fusion strictly reduces launches at s = d-1 on an order-4 chain
+    p = plan_dhopm3((8,) * 4, p=1, s=3, itemsize=4, backend="cpu")
+    assert p.fused
+    # no wire to hide at p = 1: auto stays synchronous
+    assert p.overlap_chunks == 1
+    # explicit flags always override the model
+    q = plan_dhopm3((8,) * 4, p=1, s=3, fuse_pairs=False, overlap=4,
+                    backend="cpu")
+    assert not q.fused and q.overlap_chunks == 4
+    # allreduce algorithm from dist.collectives at the dominant payload
+    r = plan_dhopm3((64,) * 3, p=8, s=2, backend="cpu")
+    assert r.algo in ("ring", "doubling")
+
+
+def test_tvc2_choice_monotone_in_size():
+    """Growing n never flips auto BACK to the dispatch-bound engine: once
+    the bandwidth-bound winner (mulsum on leading pairs) takes over, it
+    stays for every larger size."""
+    sizes = (2, 4, 8, 16, 32, 64, 128, 256)
+    seq = [plan_tvc2((n, n, n), 0, itemsize=4, backend="cpu").impl
+           for n in sizes]
+    assert seq[-1] == "mulsum"  # the measured large-shape winner
+    first = seq.index("mulsum")
+    assert all(e == "mulsum" for e in seq[first:]), seq
+
+
+def test_batched_bucket_monotone_in_batch():
+    got = [plan_batched(b, (16, 16, 16), 1, itemsize=4, backend="cpu").bucket
+           for b in (1, 2, 8, 64, 512)]
+    assert got[0] is False  # B = 1: nothing to amortize
+    first = got.index(True)
+    assert all(got[first:]), got
+
+
+# ---- Plan object contract ----
+
+def test_plan_hashable_and_cached():
+    a = plan_tvc2(BIG, 0, itemsize=4, backend="cpu")
+    b = plan_tvc2(BIG, 0, itemsize=4, backend="cpu")
+    assert a is b  # lru-cached: same static inputs, same object
+    assert hash(a) == hash(b)
+    d = a.as_cell_dict()
+    assert set(d) == {"engine", "fused", "overlap_chunks", "algo"}
+
+
+def test_auto_matches_explicit_bitwise():
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.normal(size=(8, 12, 6)).astype(np.float32))
+    x1 = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    x2 = jnp.asarray(rng.normal(size=(12,)).astype(np.float32))
+    impl = plan_tvc2((8, 12, 6), 0, itemsize=4).impl
+    got = tvc2(A, x1, 0, x2, 1, impl="auto")
+    want = tvc2(A, x1, 0, x2, 1, impl=impl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_disable_plan_env(monkeypatch):
+    monkeypatch.setenv("REPRO_TVC_DISABLE_PLAN", "1")
+    p = plan_tvc2(BIG, 0, itemsize=4, backend="cpu")
+    assert p.reason == "plan-disabled"
+    assert p.impl == "native"  # the pre-planner static default
+
+
+# ---- fallback counter (bugfix regression) ----
+
+def test_tvc2_traced_ab_two_launch_counted():
+    """The former SILENT de-optimization: a traced alpha forces the pallas
+    pair kernel's fused epilogue out into a second launch.  It must now be
+    counted in plan_report()."""
+    reset_plan_report()
+    rng = np.random.default_rng(1)
+    A = jnp.asarray(rng.normal(size=(4, 5, 6)).astype(np.float32))
+    x1 = jnp.asarray(rng.normal(size=(4,)).astype(np.float32))
+    x2 = jnp.asarray(rng.normal(size=(5,)).astype(np.float32))
+
+    @jax.jit
+    def f(A, x1, x2, alpha):  # alpha is a tracer inside jit
+        return tvc2(A, x1, 0, x2, 1, alpha=alpha, impl="pallas")
+
+    out = f(A, x1, x2, jnp.float32(2.0))
+    want = 2.0 * np.einsum("abv,a,b->v", np.asarray(A), np.asarray(x1),
+                           np.asarray(x2))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)
+    counters = plan_report()["counters"]
+    assert counters.get("tvc2.two_launch_fallback", 0) >= 1, counters
+
+
+def test_tvc2_static_ab_no_fallback_counter():
+    reset_plan_report()
+    rng = np.random.default_rng(2)
+    A = jnp.asarray(rng.normal(size=(4, 5, 6)).astype(np.float32))
+    x1 = jnp.asarray(rng.normal(size=(4,)).astype(np.float32))
+    x2 = jnp.asarray(rng.normal(size=(5,)).astype(np.float32))
+    tvc2(A, x1, 0, x2, 1, alpha=2.0, impl="pallas")
+    counters = plan_report()["counters"]
+    assert counters.get("tvc2.two_launch_fallback", 0) == 0, counters
+
+
+# ---- AOT warm-start ----
+
+def test_warmup_in_process_cache_hit():
+    aot.reset()
+
+    def step(x):
+        return x * 2.0 + 1.0
+
+    fn = jax.jit(step)
+    x = jnp.ones((8,), jnp.float32)
+    r1 = aot.warmup(fn, x, name="test_plan_step")
+    assert r1["cache"] in ("cold", "persistent")
+    assert r1["compile_us"] > 0
+    r2 = aot.warmup(fn, x, name="test_plan_step")
+    assert r2["cache"] == "in_process"
+    # a different shape signature is a new entry, not a hit
+    r3 = aot.warmup(fn, jnp.ones((4,), jnp.float32), name="test_plan_step")
+    assert r3["cache"] != "in_process"
+    stats = plan_report()["aot"]
+    assert stats["entries"] >= 2
+    assert stats["in_process_hits"] >= 1
+
+
+def test_warmup_executable_runs():
+    aot.reset()
+    fn = jax.jit(lambda x: x + 1.0)
+    x = jnp.zeros((4,), jnp.float32)
+    rep = aot.warmup(fn, x, name="test_plan_exec")
+    out = rep["executable"](x)
+    np.testing.assert_array_equal(np.asarray(out), np.ones((4,)))
+
+
+def test_persistent_cache_roundtrip(tmp_path, monkeypatch):
+    """Second warmup of the SAME computation under a fresh warmup registry
+    (a new process, as far as the in-process dict is concerned) must hit
+    the persistent compilation cache, not recompile."""
+    aot.enable_persistent_cache(str(tmp_path / "xla_cache"))
+    aot.reset()
+    fn = jax.jit(lambda x: jnp.tanh(x) * 3.0)
+    x = jnp.ones((16,), jnp.float32)
+    r1 = aot.warmup(fn, x, name="test_plan_persist")
+    aot.reset()  # wipe the in-process registry; persistent cache survives
+    fn2 = jax.jit(lambda x: jnp.tanh(x) * 3.0)
+    r2 = aot.warmup(fn2, x, name="test_plan_persist")
+    assert r2["cache"] == "persistent", (r1, r2)
