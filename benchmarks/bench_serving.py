@@ -1,0 +1,253 @@
+"""Serving-throughput bench: the continuous-batching decode engine under a
+ragged request stream, with and without HOPM rank-1 KV compression.
+
+Schema 7 adds *serving* cells (``kind: "serving"``) to the ``BENCH_TVC.json``
+trajectory: each cell serves ``requests`` ragged prompts through the slot
+batch (B in {8, 64}) on the smoke model — the bench times the *serving
+substrate* (admission, vmapped slot stepping, per-request sampling, grouped
+KV compression), not the model — and records
+
+* ``req_per_s`` — completed requests over wall time, gated by the CI
+  ``--serving-rps-min`` floor;
+* ``p50_us`` / ``p99_us`` — per-engine-step latency percentiles, recorded
+  against the fixed ``slo_p50_us`` / ``slo_p99_us`` budgets (informational:
+  CI machines cannot hold a latency SLO without flaking, so the gate prices
+  the *throughput* floor and the compression *accounting*, and the SLO
+  fields document the budget the full-run numbers are read against);
+* ``comp_events`` — one ``[group_size, view]`` entry per grouped
+  ``hopm3_batched`` launch event, from which ``check_bench`` recomputes
+  ``comp_launches`` exactly (``sweeps x dhopm_launches_per_sweep(d_view)``
+  per event — *independent of the group size*, the launch-amortization
+  guarantee) and the modeled ``streamed_bytes``
+  (``B_g x sweeps x hopm_streamed_elems_sweep(view) x itemsize``);
+* ``comp_dense_bytes`` / ``comp_factor_bytes`` — the dense KV context
+  footprint vs its rank-1 factorization
+  (:func:`repro.core.memory_model.rank1_factor_elems`); compression cells
+  must price a real ratio (> 1).
+
+Serving cells carry ``engine: "serve-loop"`` — their ``us`` is wall time of
+a Python-driven loop full of model forwards, so the time-implied-traffic
+check (which assumes ``us`` times ONE contraction) must not price them;
+the tag keeps them out of the timed-engine ratio map.  The ``plan`` field
+records the planner's resolution for the compression groups
+(:func:`repro.plan.planner.plan_compress` — ``mulsum`` pinned, the bitwise
+guarantee), recomputed verbatim by the schema-6 plan gate.
+
+Smoke mode writes a standalone ``BENCH_TVC.smoke.json``; a full run merges
+its serving cells into the committed ``BENCH_TVC.json`` (replacing prior
+serving cells, leaving every other kind untouched) and bumps the schema.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import memory_model as mm
+from repro.core.bucketing import pad_extent, tensor_view
+from repro.core.dhopm import hopm3_batched, hopm_init_factors
+from repro.models import registry
+from repro.plan import aot as plan_aot
+from repro.plan import calibration as plan_calibration
+from repro.plan import planner as plan_planner
+from repro.serve import DecodeEngine, Request, RequestQueue
+from .bench_tvc_kernel import SMOKE_OUT_PATH, _compile_pair, _with_plan
+from .common import emit, stream_triad_gbs
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = ROOT / "BENCH_TVC.json"
+
+SCHEMA = 7
+
+#: smoke model: the serving bench times the substrate, not the model
+ARCH = "qwen2-1.5b"
+
+BATCH_SIZES = (8, 64)
+SMOKE_BATCH_SIZES = (8,)
+#: requests per slot (guarantees mid-generation slot recycling)
+REQS_PER_SLOT = 3
+SMOKE_REQS_PER_SLOT = 2
+MAX_NEW_TOKENS = 8
+SMOKE_MAX_NEW_TOKENS = 4
+PROMPT_LENS = (4, 9)            # ragged on purpose
+MAX_SEQ = 64
+COMP_SWEEPS = 2
+CTX_QUANTUM = 16
+EOS_ID = 7
+
+#: fixed latency budgets the recorded percentiles are read against
+#: (informational — see module docstring)
+SLO_P50_US = 500_000.0
+SLO_P99_US = 2_000_000.0
+
+
+def _make_queue(B: int, n: int, max_new: int, vocab: int) -> RequestQueue:
+    rng = np.random.default_rng(17)
+    q = RequestQueue()
+    for i in range(n):
+        plen = PROMPT_LENS[i % len(PROMPT_LENS)]
+        q.push(Request(
+            rid=i,
+            tokens=rng.integers(1, vocab, plen).astype(np.int32),
+            max_new_tokens=max_new))
+    return q
+
+
+def _comp_view(cfg, mod) -> tuple:
+    """The bucketing view a minimal retired context compresses under —
+    recorded on every serving cell (compress=off included) so the plan
+    field always prices the same group shape."""
+    cache = jax.eval_shape(lambda: mod.init_cache(cfg, 1, MAX_SEQ))
+    for name in ("k", "c"):
+        if name in cache:
+            a = cache[name]
+            shape = a.shape[:1] + a.shape[2:]          # drop batch-1 dim
+            shape = (shape[:-2]
+                     + (min(pad_extent(1, CTX_QUANTUM), shape[-2]),)
+                     + shape[-1:])
+            return tensor_view(shape, 4)
+    return ()
+
+
+def _serve_cell(eng, cfg, *, B, compress, smoke, peak, view):
+    n = B * (SMOKE_REQS_PER_SLOT if smoke else REQS_PER_SLOT)
+    max_new = SMOKE_MAX_NEW_TOKENS if smoke else MAX_NEW_TOKENS
+    queue = _make_queue(B, n, max_new, cfg.vocab_size)
+    # warm the jitted entry points out of the timed region (per-prompt-len
+    # prefills + the slot step): one tiny pre-queue
+    pre = _make_queue(B, min(B, len(PROMPT_LENS) * 2), 1, cfg.vocab_size)
+    eng.serve(pre, compress=compress, comp_sweeps=COMP_SWEEPS,
+              ctx_quantum=CTX_QUANTUM)
+
+    t0 = time.perf_counter()
+    results, stats = eng.serve(queue, compress=compress,
+                               comp_sweeps=COMP_SWEEPS,
+                               ctx_quantum=CTX_QUANTUM)
+    wall = time.perf_counter() - t0
+    assert stats.completed == n, (stats.completed, n)
+
+    step_us = sorted(stats.step_us) or [0.0]
+    p50 = step_us[len(step_us) // 2]
+    p99 = step_us[min(len(step_us) - 1, int(len(step_us) * 0.99))]
+    itemsize = 4            # smoke-model caches are f32
+    streamed = stats.comp_streamed_bytes
+    us = wall * 1e6
+    gbs = streamed / wall / 1e9
+
+    # cold/warm fresh-jit compile of the serving path's launch unit: one
+    # grouped rank-1 compression chain at this cell's view
+    impl = plan_planner.plan_compress(B, view, itemsize=itemsize).impl
+    A_b = jnp.zeros((B,) + tuple(view), jnp.float32)
+    xs0 = [hopm_init_factors(jax.random.PRNGKey(i), view)[0]
+           for i in range(B)]
+    xs_b = [jnp.stack([x[m] for x in xs0]) for m in range(len(view))]
+
+    def make(impl_=impl):
+        return lambda A, *xs: hopm3_batched(
+            A, list(xs), sweeps=COMP_SWEEPS, impl=impl_)
+
+    cold_us, warm_us = _compile_pair(make, A_b, *xs_b)
+
+    return _with_plan({
+        "kind": "serving",
+        "order": len(view),
+        "mode": 0,
+        "dtype": "f32",
+        "layout": "aligned",
+        "shape": list(view),
+        "engine": "serve-loop",
+        "batch": B,
+        "compress": compress,
+        "requests": n,
+        "steps": stats.steps,
+        "prefills": stats.prefills,
+        "recycled": stats.recycled,
+        "generated_tokens": stats.generated_tokens,
+        "req_per_s": n / wall,
+        "tok_per_s": stats.generated_tokens / wall,
+        "p50_us": p50,
+        "p99_us": p99,
+        "slo_p50_us": SLO_P50_US,
+        "slo_p99_us": SLO_P99_US,
+        "sweeps": COMP_SWEEPS,
+        "comp_events": stats.comp_events,
+        "comp_launches": stats.comp_launches,
+        "comp_dense_bytes": stats.comp_dense_bytes,
+        "comp_factor_bytes": stats.comp_factor_bytes,
+        "blocks": [],
+        "streamed_bytes": streamed,
+        "us": us,
+        "gbs": gbs,
+        "pct_peak": gbs / peak * 100.0,
+        "compile_cold_us": cold_us,
+        "compile_warm_us": warm_us,
+    })
+
+
+def run(smoke: bool = False, out_path=None):
+    if out_path:
+        out_path = pathlib.Path(out_path)
+    else:
+        out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
+    cache_dir = tempfile.mkdtemp(prefix="bench_serving_xla_cache_")
+    plan_aot.enable_persistent_cache(cache_dir)
+    peak = stream_triad_gbs(2_000_000 if smoke else 30_000_000)
+    lines = [emit("stream_triad", 0.0, f"{peak:.1f}GB/s")]
+
+    cfg = get_config(ARCH, smoke=True)
+    mod = registry.get(cfg.family)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    view = _comp_view(cfg, mod)
+
+    cells = []
+    for B in (SMOKE_BATCH_SIZES if smoke else BATCH_SIZES):
+        eng = DecodeEngine(cfg, params, batch_size=B, max_seq=MAX_SEQ,
+                           eos_id=EOS_ID)
+        for compress in (False, True):
+            cell = _serve_cell(eng, cfg, B=B, compress=compress,
+                               smoke=smoke, peak=peak, view=view)
+            cells.append(cell)
+            lines.append(emit(
+                f"serveB{B}_{'comp' if compress else 'raw'}",
+                cell["us"],
+                f"{cell['req_per_s']:.2f}req/s;"
+                f"{cell['comp_launches']}launches;"
+                f"p50={cell['p50_us'] / 1e3:.0f}ms"))
+
+    if not smoke and out_path.exists():
+        # merge: replace prior serving cells, keep every other kind
+        payload = json.loads(out_path.read_text())
+        payload["cells"] = [c for c in payload["cells"]
+                            if c.get("kind") != "serving"] + cells
+        payload["meta"]["schema"] = SCHEMA
+        payload["meta"]["serving_timestamp"] = time.strftime(
+            "%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    else:
+        payload = {
+            "meta": {
+                "schema": SCHEMA,
+                "engine": "serve-loop",
+                "backend": jax.default_backend(),
+                "jax": jax.__version__,
+                "smoke": smoke,
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                           time.gmtime()),
+                "compile_cache": True,
+                "calibration": plan_calibration.load().get("source"),
+            },
+            "stream_triad_gbs": peak,
+            "cells": cells,
+        }
+    out_path.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"# wrote {out_path} ({len(cells)} serving cells)", flush=True)
+    return lines, payload
+
+
+if __name__ == "__main__":
+    run()

@@ -90,6 +90,12 @@ Schema 6 wires in the :mod:`repro.plan` planner and warm-start layer:
   it there) and record ``auto_us`` + ``auto_vs_best_flag`` /
   ``auto_vs_worst_flag``, with one higher-rep retry if timer noise puts
   auto above the gate's 1.1x-of-best ceiling on the first attempt.
+
+Schema 7 adds *serving* cells (``kind: "serving"``) — written by
+:mod:`benchmarks.bench_serving`, which merges them into this file's
+trajectory: the continuous-batching decode engine under a ragged request
+stream, with grouped HOPM rank-1 KV compression accounted per launch
+event.  See that module for the cell contract and gates.
 """
 from __future__ import annotations
 
@@ -608,7 +614,7 @@ def run(smoke: bool = False, out_path=None):
 
     payload = {
         "meta": {
-            "schema": 6,
+            "schema": 7,
             "engine": engine,
             "backend": jax.default_backend(),
             "jax": jax.__version__,

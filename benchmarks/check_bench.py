@@ -75,6 +75,17 @@ Three checks, strictest first:
    under ``--warm-compile-max`` (the cache must actually short-circuit
    recompilation).
 
+5. **Serving gates** (schema >= 7, ``kind: "serving"`` cells from
+   ``bench_serving``) — ``comp_launches`` must recompute exactly from the
+   recorded ``comp_events`` as ``sweeps x dhopm_launches_per_sweep(d_view)``
+   per grouped launch event (independent of the group size — one batched
+   chain per same-view group, never a per-slot loop), ``streamed_bytes``
+   must match the ``hopm_streamed_elems_sweep`` accounting over the same
+   events, ``req_per_s`` must clear ``--serving-rps-min``, and
+   compression-on cells must record events that price a real dense/factor
+   saving.  Their ``engine: "serve-loop"`` tag keeps the time-implied
+   check away (a serve loop's wall time is mostly model forwards).
+
 Exit code 0 = green; 1 = any cell failed (all failures listed).
 """
 from __future__ import annotations
@@ -88,6 +99,7 @@ import sys
 from repro.core.memory_model import (
     dhopm_launches_per_sweep,
     dhopm_time_sweep,
+    hopm_streamed_elems_sweep,
     simulate_sweep,
     simulate_sweep_batched,
     tvc2_streamed_elems,
@@ -122,6 +134,14 @@ KIND_KEYS = {
                        "model_wire_gbs", "model_dispatch_us",
                        "predicted_wire_us", "predicted_exposed_us",
                        "predicted_hidden_us"),
+    # continuous-batching serve cells (schema 7): the engine tag
+    # "serve-loop" keeps them out of the timed-engine ratio map — their
+    # ``us`` is a Python serve loop full of model forwards, not one
+    # contraction; the gates price throughput and compression accounting
+    "serving": ("engine", "batch", "compress", "requests", "steps",
+                "req_per_s", "p50_us", "p99_us", "slo_p50_us",
+                "slo_p99_us", "sweeps", "comp_events", "comp_launches",
+                "comp_dense_bytes", "comp_factor_bytes"),
 }
 BATCHED_KINDS = ("tvc_batched", "dhopm3_batched")
 TIMED_ENGINES = ("pallas", "native-xla")
@@ -161,6 +181,14 @@ def predicted_bytes(cell: dict) -> int:
             "hopm3_fused" if cell["fused"] else "hopm3",
             split_alive=True, overlap_chunks=cell["overlap_chunks"])
         return int(cell["sweeps"] * per_sweep) * itemsize
+    if cell["kind"] == "serving":
+        # grouped KV compression traffic: every recorded [group_size, view]
+        # launch event moves B_g lockstep power-iteration chains' worth of
+        # streamed elements (same int truncation as the engine's accounting)
+        return sum(
+            int(b * cell["sweeps"] * hopm_streamed_elems_sweep(tuple(view)))
+            * itemsize
+            for b, view in cell["comp_events"])
     if cell["kind"] == "tvc2":
         u = math.prod(shape[:k])
         n1, n2 = shape[k], shape[k + 1]
@@ -187,7 +215,8 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
           auto_ratio: float = 1.1,
           auto_cell_ratio: float = 1.3,
           auto_worst_min: float = 1.0,
-          warm_compile_max: float = 0.6) -> list[str]:
+          warm_compile_max: float = 0.6,
+          serving_rps_min: float = 0.05) -> list[str]:
     """All failure messages for one trajectory payload ([] = green)."""
     fails: list[str] = []
     meta = payload.get("meta", {})
@@ -276,6 +305,38 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                 fails.append(
                     f"{name}: overlap model predicts no wire hiding "
                     f"(predicted_hidden_us={c['predicted_hidden_us']})")
+        if c["kind"] == "serving":
+            # launch accounting: ONE batched chain per group launch event
+            # at sweeps x dhopm_launches_per_sweep(d_view) — independent of
+            # the group size (the amortization guarantee; a per-slot loop
+            # would scale with B_g and fail here immediately)
+            want = sum(c["sweeps"] * dhopm_launches_per_sweep(len(view))
+                       for _b, view in c["comp_events"])
+            if c["comp_launches"] != want:
+                fails.append(
+                    f"{name}: comp_launches {c['comp_launches']} != "
+                    f"{want} (sweeps x dhopm_launches_per_sweep per group "
+                    f"event — compression is not launching one batched "
+                    f"chain per same-view group)")
+            if not c["req_per_s"] >= serving_rps_min:
+                fails.append(
+                    f"{name}: req_per_s {c['req_per_s']:.3f} below floor "
+                    f"{serving_rps_min} (B={c['batch']}, "
+                    f"compress={c['compress']})")
+            if c["compress"]:
+                if not c["comp_events"]:
+                    fails.append(
+                        f"{name}: compression on but no grouped launch "
+                        f"events recorded")
+                elif not c["comp_dense_bytes"] > c["comp_factor_bytes"]:
+                    fails.append(
+                        f"{name}: rank-1 factorization prices no saving "
+                        f"(dense={c['comp_dense_bytes']}B, "
+                        f"factors={c['comp_factor_bytes']}B)")
+            elif c["comp_events"]:
+                fails.append(
+                    f"{name}: compression off but {len(c['comp_events'])} "
+                    f"launch events recorded")
 
         # -- 3. time-implied traffic ---------------------------------------
         # batched cells always run a timed engine and carry their own tag;
@@ -470,6 +531,11 @@ def main(argv=None) -> int:
     ap.add_argument("--warm-compile-max", type=float, default=0.6,
                     help="geomean ceiling for compile_warm_us / "
                          "compile_cold_us (persistent-cache warm start)")
+    ap.add_argument("--serving-rps-min", type=float, default=0.05,
+                    help="per-cell requests/s floor for serving cells "
+                         "(schema 7; a catastrophic-regression bound — the "
+                         "smoke loop on a loaded CI box still clears it "
+                         "with wide margin)")
     args = ap.parse_args(argv)
 
     payload = json.loads(pathlib.Path(args.bench).read_text())
@@ -485,7 +551,8 @@ def main(argv=None) -> int:
                   auto_ratio=args.auto_ratio,
                   auto_cell_ratio=args.auto_cell_ratio,
                   auto_worst_min=args.auto_worst_min,
-                  warm_compile_max=args.warm_compile_max)
+                  warm_compile_max=args.warm_compile_max,
+                  serving_rps_min=args.serving_rps_min)
     engine = payload.get("meta", {}).get("engine")
     n = len(payload.get("cells", []))
     if fails:

@@ -1,0 +1,57 @@
+"""Shape-bucketing helpers shared by the gradient compressor and the serve
+engine's KV-cache compression path.
+
+Both consumers face the same problem: a stream of low-rank compression jobs
+over tensors of assorted shapes, where every group of SAME-view jobs can be
+stacked and run through ONE :func:`repro.core.dhopm.hopm3_batched` chain per
+step (launch count independent of the group size) instead of one chain per
+job.  The two ingredients that make the groups line up live here:
+
+* :func:`tensor_view` — flatten leading dims so the order drops to a fixed
+  maximum while the trailing (low-rank-carrying) dims stay intact; lifted
+  verbatim from ``train.grad_compress._tensor_view`` so gradient leaves and
+  KV contexts bucket under the exact same rule.
+* :func:`pad_extent` — round a ragged extent (a request's context length) up
+  to a quantum so near-miss shapes land in the same bucket.  Zero-padding a
+  mode is EXACT for the HOPM chains: the padded slab contributes ``+ 0.0``
+  terms to every contraction (and the factor entries over the pad region of
+  a zero slab stay exactly what the zero-input reduction produces), so the
+  unpadded iterates are recovered by slicing — no approximation is
+  introduced, only bucket alignment.
+* :func:`group_indices` — order-preserving key -> indices grouping (the
+  bucket map both consumers iterate).
+"""
+from __future__ import annotations
+
+import math
+
+__all__ = ["tensor_view", "pad_extent", "group_indices"]
+
+
+def tensor_view(shape, max_order: int):
+    """Flatten leading dims so order <= ``max_order`` (keeps the trailing
+    matmul dims intact: those carry the low-rank structure)."""
+    if len(shape) <= max_order:
+        return tuple(shape)
+    lead = math.prod(shape[: len(shape) - max_order + 1])
+    return (lead,) + tuple(shape[len(shape) - max_order + 1:])
+
+
+def pad_extent(n: int, quantum: int, cap: int | None = None) -> int:
+    """``n`` rounded up to a multiple of ``quantum`` (optionally clamped to
+    ``cap`` — e.g. the allocated KV timeline): the bucket-aligned extent a
+    ragged mode is zero-padded to."""
+    if quantum < 1:
+        raise ValueError(f"quantum must be >= 1, got {quantum}")
+    padded = -(-n // quantum) * quantum
+    return min(padded, cap) if cap is not None else padded
+
+
+def group_indices(keys) -> dict:
+    """Order-preserving ``key -> [indices]`` map over an iterable of
+    hashable bucket keys (first-seen key order, ascending indices — the
+    deterministic iteration order both bucketed compressors rely on)."""
+    groups: dict = {}
+    for i, key in enumerate(keys):
+        groups.setdefault(key, []).append(i)
+    return groups

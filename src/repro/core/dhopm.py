@@ -41,7 +41,7 @@ from .tvc import _tree_sum_last
 __all__ = [
     "hopm_classic", "hopm3", "dhopm3", "hopm3_partial", "hopm3_sharded",
     "hopm3_batched", "dhopm3_batched", "rank1", "rank1_residual",
-    "OVERLAP_CHUNKS_DEFAULT",
+    "hopm_init_factors", "OVERLAP_CHUNKS_DEFAULT",
 ]
 
 _EPS = 1e-30
@@ -698,6 +698,28 @@ def rank1(xs: Sequence[jax.Array], lam=1.0):
     """lam * x_0 ∘ x_1 ∘ ... (the best rank-1 approximation's reconstruction)."""
     out = functools.reduce(jnp.multiply.outer, [x.astype(jnp.float32) for x in xs])
     return lam * out
+
+
+def hopm_init_factors(key, vshape: Sequence[int], rank: int = 1):
+    """Warm-start factor vectors for ``rank`` deflation chains over a view
+    of extents ``vshape``: unit-norm gaussian draws, one vector per mode per
+    rank, all split deterministically from ``key``.  Shared by the gradient
+    compressor's per-leaf state and the serve engine's per-request KV
+    factors — callers derive ``key`` from a stable identity (crc32 of the
+    leaf path / request id, never salted ``hash()``), so the same tensor
+    always starts the power iteration from the same point regardless of
+    process, host, or which batch slot it lands in."""
+    keys = jax.random.split(key, rank * len(vshape))
+    xs = []
+    i = 0
+    for _ in range(rank):
+        vecs = []
+        for n in vshape:
+            v = jax.random.normal(keys[i], (n,), jnp.float32)
+            vecs.append(v / jnp.linalg.norm(v))
+            i += 1
+        xs.append(tuple(vecs))
+    return tuple(xs)
 
 
 def rank1_residual(A, xs, lam) -> jax.Array:

@@ -27,6 +27,8 @@ __all__ = [
     "launch_amortized_speedup", "simulate_sweep_batched",
     "dhopm_launches_per_sweep", "dhopm_wire_bytes_sweep",
     "dhopm_batched_wire_bytes_sweep", "dhopm_time_sweep",
+    "hopm_streamed_elems_sweep", "rank1_factor_elems",
+    "rank1_compression_ratio",
 ]
 
 
@@ -425,6 +427,76 @@ def dhopm_launches_per_sweep(d: int, s: int | None = None,
                 new_W = (modes, split_alive)
         W = new_W if new_W is not None else W
     return launches
+
+
+def hopm_streamed_elems_sweep(shape, fuse_pairs: bool = False) -> float:
+    """Elements streamed by ONE single-process ``hopm3`` sweep over an
+    order-d tensor with *heterogeneous* extents ``shape`` — the shape-general
+    counterpart of :func:`simulate_sweep` (which prices hypersquare tensors
+    only).  Walks the identical three-buffer schedule — W prefix cache, the
+    same fusion gating — with per-mode extents, counting input read + vector
+    read + output write per contraction and the 4 n_j vector finalize per
+    external iteration.  At ``shape == (n,) * d`` this equals
+    ``simulate_sweep(n, d, 1, s, algo, split_alive=False)`` exactly
+    (regression-tested).
+
+    This is the per-chain-per-sweep price of the serve engine's KV-cache
+    compression launches (``hopm3_batched`` over B stacked contexts streams
+    exactly B times this — batching amortizes dispatch, never traffic)."""
+    d = len(shape)
+
+    def size(modes) -> float:
+        out = 1.0
+        for m in modes:
+            out *= shape[m]
+        return out
+
+    total = 0.0
+    W: tuple | None = None       # surviving global mode ids of the W cache
+    for j in range(d):
+        if j >= 2 and W is not None:
+            modes = W
+            chain = [j - 1] + list(range(j + 1, d))
+        else:
+            modes = tuple(range(d))
+            chain = [m for m in range(d) if m != j]
+        new_W = None
+        idx = 0
+        while idx < len(chain):
+            m = chain[idx]
+            nxt = chain[idx + 1] if idx + 1 < len(chain) else None
+            done_after_first = (set(range(d)) - set(modes)) | {m}
+            captures_W = j >= 1 and done_after_first == set(range(j))
+            do_fuse = fuse_pairs and nxt == m + 1 and not captures_W
+            read = size(modes)
+            if do_fuse:
+                modes = tuple(mm for mm in modes if mm not in (m, nxt))
+                total += read + shape[m] + shape[nxt] + size(modes)
+                idx += 2
+            else:
+                modes = tuple(mm for mm in modes if mm != m)
+                total += read + shape[m] + size(modes)
+                idx += 1
+            if j >= 1 and set(range(d)) - set(modes) == set(range(j)):
+                new_W = modes
+        W = new_W if new_W is not None else W
+        total += 4.0 * shape[j]     # output vector + normalize (Eqs. 4-5)
+    return total
+
+
+def rank1_factor_elems(shape) -> int:
+    """Elements of one rank-1 factorization of an order-d tensor: one factor
+    vector per mode plus the scalar lambda — what a compressed KV context
+    stores (and ships) instead of the dense ``prod(shape)`` slab."""
+    return sum(shape) + 1
+
+
+def rank1_compression_ratio(shape) -> float:
+    """dense / factored storage ratio of one rank-1 factorization."""
+    dense = 1
+    for n in shape:
+        dense *= n
+    return dense / rank1_factor_elems(shape)
 
 
 def dhopm_wire_bytes_sweep(shape, p: int, itemsize: int,

@@ -1,7 +1,8 @@
-"""Serving launcher: batched generation with the decode engine.
+"""Serving launcher: continuous batching through the decode engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-        --batch 4 --prompt-len 16 --steps 32 [--temperature 0.8 --top-k 40]
+        --batch 4 --prompt-len 16 --steps 32 [--temperature 0.8 --top-k 40] \
+        [--no-compress]
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import jax
 
 from repro.configs import get_config
 from repro.models import extra_input_key, registry
-from repro.serve import DecodeEngine
+from repro.serve import DecodeEngine, Request, RequestQueue
 
 
 def main() -> None:
@@ -27,6 +28,8 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=None)
     ap.add_argument("--requests", type=int, default=1)
+    ap.add_argument("--no-compress", action="store_true",
+                    help="skip rank-1 KV compression of retired contexts")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -35,24 +38,40 @@ def main() -> None:
     eng = DecodeEngine(cfg, params, max_seq=args.max_seq, batch_size=args.batch)
 
     rng = np.random.default_rng(0)
-    extra = None
-    if extra_input_key(cfg) == "audio_embeds":
-        extra = rng.normal(size=(args.batch, cfg.encdec.n_audio_ctx,
-                                 cfg.d_model)).astype(np.float32)
-    elif extra_input_key(cfg) == "img_embeds":
-        d = cfg.vlm.img_embed_dim or cfg.d_model
-        extra = rng.normal(size=(args.batch, cfg.vlm.n_img_tokens, d)
-                           ).astype(np.float32)
 
-    batches = [rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
-               for _ in range(args.requests)]
+    def one_extra():
+        if extra_input_key(cfg) == "audio_embeds":
+            return rng.normal(size=(1, cfg.encdec.n_audio_ctx, cfg.d_model)
+                              ).astype(np.float32)
+        if extra_input_key(cfg) == "img_embeds":
+            d = cfg.vlm.img_embed_dim or cfg.d_model
+            return rng.normal(size=(1, cfg.vlm.n_img_tokens, d)
+                              ).astype(np.float32)
+        return None
+
+    n = args.batch * args.requests
+    queue = RequestQueue(
+        Request(rid=i,
+                tokens=rng.integers(0, cfg.vocab_size, args.prompt_len
+                                    ).astype(np.int32),
+                max_new_tokens=args.steps, extra=one_extra())
+        for i in range(n))
     t0 = time.perf_counter()
-    results = eng.serve_queue(batches, args.steps, temperature=args.temperature,
-                              top_k=args.top_k, extra=extra)
+    results, stats = eng.serve(queue, temperature=args.temperature,
+                               top_k=args.top_k,
+                               compress=not args.no_compress)
     dt = time.perf_counter() - t0
-    toks = sum(r.tokens.size for r in results)
-    print(f"generated {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s, first batch: {results[0].tokens[0][:16]})")
+    toks = stats.generated_tokens
+    line = (f"served {stats.completed} requests / {toks} tokens in {dt:.2f}s "
+            f"({stats.completed / dt:.2f} req/s, {toks / dt:.1f} tok/s, "
+            f"recycled {stats.recycled} slots)")
+    if not args.no_compress:
+        line += (f"; kv compressed {stats.comp_dense_bytes}B -> "
+                 f"{stats.comp_factor_bytes}B "
+                 f"({stats.compression_ratio:.1f}x, "
+                 f"{stats.comp_launches} launches)")
+    print(line)
+    print("first request:", results[0].tokens[:16])
 
 
 if __name__ == "__main__":

@@ -386,6 +386,11 @@ def plan_for_cell(cell: dict, backend: str | None = None) -> dict:
         p = plan_dhopm3(shape, p=cell.get("p", 1), s=cell.get("split"),
                         batch=cell.get("batch", 1), itemsize=itemsize,
                         backend=backend)
+    elif kind == "serving":
+        # the serve engine's KV-compression groups plan exactly like
+        # grad_compress buckets: B stacked same-view tensors, mulsum pinned
+        p = plan_compress(cell["batch"], shape, itemsize=itemsize,
+                          backend=backend)
     else:
         raise ValueError(f"no plan rule for bench kind {kind!r}")
     return p.as_cell_dict()

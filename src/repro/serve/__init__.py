@@ -1,2 +1,10 @@
-"""Serving substrate: batched decode engine + sampling."""
-from .engine import DecodeEngine  # noqa: F401
+"""Serving substrate: continuous-batching decode engine + sampling."""
+from .engine import (  # noqa: F401
+    CompressedKV,
+    DecodeEngine,
+    GenerationResult,
+    Request,
+    RequestQueue,
+    ServeResult,
+    ServeStats,
+)

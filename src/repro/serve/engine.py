@@ -1,23 +1,66 @@
-"""Batched decode engine: prefill + step loop over a fixed slot batch, with
-per-sequence EOS retirement and continuous slot refill from a request queue.
+"""Continuous-batching decode engine with HOPM low-rank KV compression.
 
-On a mesh the KV cache is sequence-sharded over the model axis (SP — the
-paper's "keep outputs distributed" discipline applied to the KV timeline) and
-the batch over the DP axes; shardings come from dist.sharding.cache_specs."""
+Two serving paths share the compiled model entry points:
+
+* :meth:`DecodeEngine.generate` — the original fixed-batch loop (prefill one
+  (B, S) batch, step to completion, freeze-at-eos bookkeeping).
+* :meth:`DecodeEngine.serve` — slot-based continuous batching: a
+  :class:`RequestQueue` of ragged prompts feeds a fixed slot batch; each
+  slot is an exact batch-1 model cache, the whole batch steps through ONE
+  vmapped ``decode_step`` launch, and an EOS-/budget-retired slot is
+  recycled mid-generation with a per-slot prefill scattered into the
+  stacked cache (the freeze-at-eos seam turned into admission).
+
+On retirement a request's KV context is compressed to a rank-1 HOPM
+factorization: contexts are sliced to their true length, zero-padded up to
+a ``ctx_quantum`` (exact for the power iteration — a zero slab adds
+``+ 0.0`` to every reduction), bucketed by their
+:func:`repro.core.bucketing.tensor_view` shape exactly the way
+``train.grad_compress`` buckets gradient leaves, and every same-shape group
+runs through ONE :func:`repro.core.dhopm.hopm3_batched` chain per step —
+launch count independent of the group size, bitwise-equal to per-slot
+:func:`~repro.core.dhopm.hopm3` under the order-explicit ``mulsum`` engine
+(``impl="auto"`` resolves through :func:`repro.plan.planner.plan_compress`,
+which pins it).  Streamed traffic and the dense/factored byte ratio are
+priced by :mod:`repro.core.memory_model`
+(:func:`~repro.core.memory_model.hopm_streamed_elems_sweep` /
+:func:`~repro.core.memory_model.rank1_factor_elems`).
+
+On a mesh the fixed-batch cache is sequence-sharded over the model axis (SP)
+and batch over the DP axes (``dist.sharding.cache_specs``); the slot-stacked
+cache shards its leading slot dim over the DP axes.
+"""
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Optional
+import functools
+import time
+import zlib
+from typing import Any, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.dist.sharding import cache_specs
-from repro.models import extra_input_key, registry
-from .sampling import sample
+from repro.core import memory_model as mm
+from repro.core.bucketing import group_indices, pad_extent, tensor_view
+from repro.core.dhopm import hopm3_batched, hopm_init_factors
+from repro.dist.sharding import _dp_entry, cache_specs
+from repro.models import registry
+from .sampling import sample, sample_slots
+
+#: cache leaves that carry a per-request KV timeline on axis -2 (the
+#: compressible context); recurrent-state families have none and serve
+#: with compression as a no-op
+_KV_TIMELINE_KEYS = ("k", "v", "c", "pe")
+
+#: bucketing order for KV context views (grad_compress's default max_order:
+#: the shared tensor_view rule keeps trailing low-rank dims intact)
+_KV_MAX_ORDER = 4
 
 
 @dataclasses.dataclass
@@ -25,8 +68,114 @@ class GenerationResult:
     tokens: np.ndarray          # (B, steps); rows are eos_id-padded past EOS
     steps: int
     prefill_tokens: int
-    lengths: np.ndarray = None  # (B,) true generated length per sequence
-    #                             (including the EOS token itself)
+    lengths: Optional[np.ndarray] = None
+    # (B,) true generated length per sequence (including the EOS token
+    # itself).  Constructed when omitted — with no EOS bookkeeping every
+    # sequence ran the full step count — so requests/s accounting downstream
+    # can always sum a real length vector.
+
+    def __post_init__(self):
+        if self.lengths is None:
+            b = self.tokens.shape[0] if self.tokens.ndim else 0
+            self.lengths = np.full((b,), self.steps, np.int64)
+
+
+@dataclasses.dataclass
+class Request:
+    """One ragged serving request: its prompt and generation budget."""
+    rid: int
+    tokens: np.ndarray              # (S,) int32 prompt
+    max_new_tokens: int = 32
+    extra: Any = None               # per-request conditioning (vlm/encdec)
+
+
+class RequestQueue:
+    """FIFO admission queue feeding the slot batch."""
+
+    def __init__(self, requests=()):
+        self._q = collections.deque(requests)
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+@dataclasses.dataclass
+class CompressedKV:
+    """Rank-1 HOPM factorization of one retired KV-cache leaf."""
+    xs: tuple                       # one factor vector per view mode
+    lam: jax.Array                  # dominant singular value
+    view: tuple                     # padded bucketing view shape
+    ctx: int                        # true (unpadded) context length
+    dense_bytes: int
+    factor_bytes: int
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One completed request."""
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray              # (length,) generated, incl. EOS if hit
+    length: int
+    steps: int                      # engine steps the request was resident
+    compressed: dict | None = None  # leaf name -> CompressedKV
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Aggregate accounting of one :meth:`DecodeEngine.serve` run."""
+    admitted: int = 0
+    completed: int = 0
+    steps: int = 0
+    prefills: int = 0
+    prefill_tokens: int = 0
+    generated_tokens: int = 0
+    recycled: int = 0               # admissions into a previously used slot
+    comp_events: list = dataclasses.field(default_factory=list)
+    #   one [group_size, view] entry per hopm3_batched group launch event
+    comp_launches: int = 0          # batched contraction launches issued
+    comp_streamed_bytes: int = 0    # modeled (hopm_streamed_elems_sweep)
+    comp_dense_bytes: int = 0       # dense KV context footprint
+    comp_factor_bytes: int = 0      # rank-1 factor footprint
+    step_us: list = dataclasses.field(default_factory=list)
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.comp_dense_bytes / max(1, self.comp_factor_bytes)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps", "impl"))
+def _compress_group(A_b, xs_b, *, sweeps: int, impl: str):
+    """ONE batched rank-1 chain for a same-view group of B retired
+    contexts: launch count per sweep independent of B, bitwise-equal to B
+    per-slot ``hopm3`` runs under the ``mulsum`` engine."""
+    return hopm3_batched(A_b, list(xs_b), sweeps=sweeps, impl=impl)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("vocab_size", "temperature", "top_k"))
+def _sample_slots_jit(logits, req_keys, counts, *, vocab_size, temperature,
+                      top_k):
+    keys = jax.vmap(jax.random.fold_in)(req_keys, counts)
+    return sample_slots(logits, keys, vocab_size=vocab_size,
+                        temperature=temperature, top_k=top_k)
+
+
+def _request_key(rid, seed: int):
+    """Stable per-request PRNG root: crc32 of the request id (salted
+    ``hash()`` would break cross-process determinism), folded with the
+    serve seed — slot- and admission-order-independent."""
+    return jax.random.PRNGKey(
+        (seed + zlib.crc32(str(rid).encode())) % (2 ** 31))
 
 
 class DecodeEngine:
@@ -49,8 +198,25 @@ class DecodeEngine:
         def _step(params, cache, toks):
             return self.mod.decode_step(cfg, params, cache, toks)
 
+        def _step_slots(params, caches, toks):
+            # each slot is an exact batch-1 model cache; one vmapped launch
+            # steps the whole slot batch with per-slot positions
+            def one(c, t):
+                return self.mod.decode_step(cfg, params, c, t)
+            return jax.vmap(one)(caches, toks)
+
+        def _adopt(caches, one, i):
+            # scatter a freshly prefilled (or zeroed) batch-1 cache into
+            # slot i of the stacked cache — the recycling seam
+            return jax.tree.map(lambda full, a: full.at[i].set(a),
+                                caches, one)
+
         self._prefill = jax.jit(_prefill, static_argnames=())
         self._step = jax.jit(_step, donate_argnums=(1,))
+        self._step_slots = jax.jit(_step_slots, donate_argnums=(1,))
+        self._adopt = jax.jit(_adopt, donate_argnums=(0,))
+
+    # -- caches -------------------------------------------------------------
 
     def new_cache(self):
         cache = self.mod.init_cache(self.cfg, self.batch_size, self.max_seq)
@@ -61,6 +227,24 @@ class DecodeEngine:
                 lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
                 cache, specs)
         return cache
+
+    def _slot_cache(self):
+        """A fresh zeroed batch-1 cache (one slot's private state)."""
+        return self.mod.init_cache(self.cfg, 1, self.max_seq)
+
+    def new_slot_caches(self):
+        """The slot-stacked cache: B batch-1 caches on a new leading axis
+        (sharded over the DP axes on a mesh)."""
+        one = self._slot_cache()
+        stacked = jax.tree.map(
+            lambda a: jnp.zeros((self.batch_size,) + a.shape, a.dtype), one)
+        if self.mesh is not None:
+            ent = _dp_entry(dict(self.mesh.shape), self.batch_size)
+            stacked = jax.tree.map(
+                lambda a: jax.device_put(a, NamedSharding(
+                    self.mesh, P(*([ent] + [None] * (a.ndim - 1))))),
+                stacked)
+        return stacked
 
     def warmup(self, prompt_len: int, *, extra=None,
                include_step: bool = True) -> dict:
@@ -87,6 +271,8 @@ class DecodeEngine:
                 self._step, self.params, cache, cur,
                 name=f"decode_step_{self.cfg.family}")
         return reports
+
+    # -- fixed-batch generation ---------------------------------------------
 
     def generate(self, prompt_tokens, steps: int, *, temperature: float = 0.0,
                  top_k: Optional[int] = None, extra=None, seed: int = 0
@@ -122,10 +308,207 @@ class DecodeEngine:
                          temperature=temperature, top_k=top_k)
         return GenerationResult(np.stack(out, 1), len(out), S * B, lengths)
 
-    def serve_queue(self, requests, steps_per_req: int, **kw):
-        """Continuous-batching-lite: consume a list of (B, S) prompt batches,
-        reusing compiled step functions across batches."""
-        results = []
-        for prompts in requests:
-            results.append(self.generate(prompts, steps_per_req, **kw))
+    # -- continuous batching --------------------------------------------------
+
+    def _kv_context(self, caches, i: int, ctx_padded: int) -> dict:
+        """Slot i's KV timeline leaves, squeezed to batch-free views and
+        sliced to the (quantum-padded) context length.  The pad region
+        [ctx, ctx_padded) was never written (fresh prefill + sequential
+        decode writes), so it is exactly zero — bucket-aligning is exact."""
+        out = {}
+        for name, leaf in caches.items():
+            if name not in _KV_TIMELINE_KEYS or not hasattr(leaf, "ndim"):
+                continue
+            a = leaf[i]                      # (L, 1, ..., S, hd)
+            a = a.reshape(a.shape[:1] + a.shape[2:])   # drop batch-1 dim
+            # ring-buffer families keep a window < max_seq on the timeline
+            stop = min(ctx_padded, a.shape[a.ndim - 2])
+            out[name] = lax.slice_in_dim(a, 0, stop, axis=a.ndim - 2)
+        return out
+
+    def _compress_retired(self, items, *, sweeps: int, impl: str,
+                          stats: ServeStats):
+        """Compress this step's retirements: bucket same-view contexts,
+        run ONE batched rank-1 chain per group, unstack the factors.
+
+        ``items``: list of (slot_record, {leaf: context_view}).  Returns
+        one ``{leaf: CompressedKV}`` dict per item, order-aligned."""
+        flat = []       # (item_idx, leaf_name, view_array, true_ctx)
+        for idx, (rec, leaves) in enumerate(items):
+            for name, a in leaves.items():
+                view = tensor_view(a.shape, _KV_MAX_ORDER)
+                flat.append((idx, name, a.reshape(view), rec["ctx"]))
+        results: list[dict] = [{} for _ in items]
+        groups = group_indices(
+            (tuple(a.shape), str(a.dtype)) for _, _, a, _ in flat)
+        for (view, _dt), members in groups.items():
+            b = len(members)
+            eng = impl
+            if eng == "auto":
+                from repro.plan import planner
+                eng = planner.plan_compress(
+                    b, view, itemsize=flat[members[0]][2].dtype.itemsize).impl
+            A_b = jnp.stack([flat[m][2] for m in members])
+            xs0 = []
+            for m in members:
+                idx, name, _, _ = flat[m]
+                rid = items[idx][0]["rid"]
+                key = _request_key(f"kv/{rid}/{name}", 0)
+                xs0.append(hopm_init_factors(key, view)[0])
+            xs_b = tuple(jnp.stack([x[mode] for x in xs0])
+                         for mode in range(len(view)))
+            xs, lam = _compress_group(A_b, xs_b, sweeps=sweeps, impl=eng)
+            itemsize = A_b.dtype.itemsize
+            dense = int(np.prod(view)) * itemsize
+            factor = mm.rank1_factor_elems(view) * itemsize
+            for pos, m in enumerate(members):
+                idx, name, _, ctx = flat[m]
+                results[idx][name] = CompressedKV(
+                    xs=tuple(x[pos] for x in xs), lam=lam[pos],
+                    view=view, ctx=ctx, dense_bytes=dense,
+                    factor_bytes=factor)
+            stats.comp_events.append([b, list(view)])
+            stats.comp_launches += sweeps * mm.dhopm_launches_per_sweep(
+                len(view))
+            stats.comp_streamed_bytes += int(
+                b * sweeps * mm.hopm_streamed_elems_sweep(view)) * itemsize
+            stats.comp_dense_bytes += b * dense
+            stats.comp_factor_bytes += b * factor
         return results
+
+    def serve(self, queue, *, temperature: float = 0.0,
+              top_k: Optional[int] = None, seed: int = 0,
+              compress: bool = True, comp_sweeps: int = 2,
+              comp_impl: str = "auto", ctx_quantum: int = 16):
+        """Serve a :class:`RequestQueue` (or iterable of :class:`Request`)
+        through the slot batch until drained.  Returns
+        ``(results, stats)`` — one :class:`ServeResult` per request in
+        completion order, plus the run's :class:`ServeStats`.
+
+        Per engine step: admit queued requests into free slots (per-slot
+        prefill at the prompt's exact length, scattered into the stacked
+        cache), step every slot through one vmapped ``decode_step`` launch,
+        sample per-slot request-seeded tokens, retire EOS/budget-exhausted
+        slots, and compress this step's retired KV contexts — one
+        ``hopm3_batched`` launch chain per same-view group."""
+        if not isinstance(queue, RequestQueue):
+            queue = RequestQueue(queue)
+        B = self.batch_size
+        caches = self.new_slot_caches()
+        fresh = self._slot_cache()
+        slots: list[Optional[dict]] = [None] * B
+        req_keys = np.zeros((B, 2), np.uint32)
+        counts = np.zeros((B,), np.int32)
+        cur = np.zeros((B, 1), np.int32)
+        used = np.zeros((B,), bool)         # slot ever admitted a request?
+        results: list[ServeResult] = []
+        stats = ServeStats()
+        eos = self.eos_id
+
+        def admit() -> None:
+            nonlocal caches
+            for i in range(B):
+                if slots[i] is not None or not queue:
+                    continue
+                req = queue.pop()
+                toks = jnp.asarray(np.asarray(req.tokens), jnp.int32)[None]
+                c1, logits1 = self._prefill(
+                    self.params, toks, self._slot_cache(), req.extra)
+                caches = self._adopt(caches, c1, i)
+                rk = _request_key(req.rid, seed)
+                req_keys[i] = np.asarray(rk, np.uint32).reshape(2)
+                counts[i] = 0
+                t0 = sample(logits1, jax.random.fold_in(rk, 0),
+                            vocab_size=self.cfg.vocab_size,
+                            temperature=temperature, top_k=top_k)
+                cur[i] = np.asarray(t0)[0]
+                slots[i] = {"rid": req.rid, "prompt_len": int(toks.shape[1]),
+                            "out": [int(cur[i, 0])],
+                            "budget": int(req.max_new_tokens),
+                            "steps": 0, "ctx": int(toks.shape[1]) + 1}
+                stats.admitted += 1
+                stats.prefills += 1
+                stats.prefill_tokens += int(toks.shape[1])
+                stats.recycled += bool(used[i])
+                used[i] = True
+
+        def retire() -> None:
+            """Collect finished slots; compress this step's retirements in
+            same-view groups (one batched launch chain per group)."""
+            nonlocal caches
+            done = []
+            for i in range(B):
+                rec = slots[i]
+                if rec is None:
+                    continue
+                tok = rec["out"][-1]
+                if (eos is not None and tok == eos) \
+                        or len(rec["out"]) >= rec["budget"]:
+                    done.append((i, rec))
+            if not done:
+                return
+            comp = [None] * len(done)
+            if compress:
+                items = []
+                for i, rec in done:
+                    ctx_p = pad_extent(rec["ctx"], ctx_quantum,
+                                       cap=self.max_seq)
+                    items.append((rec, self._kv_context(caches, i, ctx_p)
+                                  if isinstance(caches, dict) else {}))
+                comp = self._compress_retired(
+                    items, sweeps=comp_sweeps, impl=comp_impl, stats=stats)
+            for (i, rec), c in zip(done, comp):
+                results.append(ServeResult(
+                    rid=rec["rid"], prompt_len=rec["prompt_len"],
+                    tokens=np.asarray(rec["out"], np.int32),
+                    length=len(rec["out"]), steps=rec["steps"],
+                    compressed=c if compress else None))
+                stats.completed += 1
+                stats.generated_tokens += len(rec["out"])
+                slots[i] = None
+                # reset the slot so its free-running decode restarts at
+                # pos 0 on a zero cache (next admission replaces it whole);
+                # this also keeps the pad region of any later context slice
+                # exactly zero — the padding-exactness invariant
+                caches = self._adopt(caches, fresh, i)
+
+        while True:
+            admit()
+            retire()
+            if not any(s is not None for s in slots):
+                if not queue:
+                    break
+                continue        # retirement freed slots; admit again
+            t0 = time.perf_counter()
+            active = np.array([s is not None for s in slots])
+            counts[active] += 1
+            caches, logits = self._step_slots(
+                self.params, caches, jnp.asarray(cur)[:, None, :])
+            toks = _sample_slots_jit(
+                logits[:, 0], jnp.asarray(req_keys), jnp.asarray(counts),
+                vocab_size=self.cfg.vocab_size, temperature=temperature,
+                top_k=top_k)
+            toks = np.asarray(toks)
+            stats.step_us.append((time.perf_counter() - t0) * 1e6)
+            stats.steps += 1
+            for i in range(B):
+                if slots[i] is None:
+                    continue
+                cur[i] = toks[i]
+                slots[i]["out"].append(int(toks[i, 0]))
+                slots[i]["steps"] += 1
+                slots[i]["ctx"] += 1
+        return results, stats
+
+    def serve_queue(self, requests, steps_per_req: int, **kw):
+        """Continuous-batching wrapper over :meth:`serve` for the legacy
+        batch-of-batches call shape: flattens (B, S) prompt batches into
+        one request stream and serves it through the slot batch."""
+        queue = RequestQueue()
+        rid = 0
+        for prompts in requests:
+            for row in np.asarray(prompts):
+                queue.push(Request(rid=rid, tokens=row.astype(np.int32),
+                                   max_new_tokens=steps_per_req))
+                rid += 1
+        return self.serve(queue, **kw)

@@ -25,3 +25,24 @@ def sample(logits, rng, *, vocab_size: int, temperature: float = 0.0,
         kth = vals[:, -1:]
         logits = jnp.where(logits < kth, -1e30, logits)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)[:, None]
+
+
+def sample_slots(logits, keys, *, vocab_size: int, temperature: float = 0.0,
+                 top_k: int | None = None):
+    """Per-slot sampling for the continuous-batching engine: one PRNG stream
+    per slot.
+
+    ``logits``: (B, 1, Vpad) or (B, Vpad); ``keys``: (B, 2) uint32 — one key
+    per slot, derived by the engine from the *request* identity (crc32 of
+    the request id folded with its emitted-token count), so a request's
+    sampled tokens never depend on which slot admitted it, when it was
+    admitted, or what ran in that slot before — the recycled-slot
+    determinism guarantee.  Returns (B, 1) int32."""
+    if logits.ndim == 3:
+        logits = logits[:, -1]
+
+    def one(lg, key):
+        return sample(lg[None], key, vocab_size=vocab_size,
+                      temperature=temperature, top_k=top_k)[0]
+
+    return jax.vmap(one)(logits, keys)

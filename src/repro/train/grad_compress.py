@@ -26,7 +26,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import memory_model as mm
-from repro.core.dhopm import hopm3_batched, hopm3_partial, hopm3_sharded
+from repro.core.bucketing import tensor_view
+from repro.core.dhopm import (
+    hopm3_batched,
+    hopm3_partial,
+    hopm3_sharded,
+    hopm_init_factors,
+)
 from repro.core.mixed_precision import F32 as PREC_F32, Precision, get_policy
 from repro.dist import collectives as coll
 
@@ -97,12 +103,9 @@ def _eligible(shape, cfg: CompressorCfg, split: int | None = None) -> bool:
 
 
 def _tensor_view(shape, cfg: CompressorCfg):
-    """Flatten leading dims so order <= max_order (keeps the trailing matmul
-    dims intact: those carry the low-rank structure)."""
-    if len(shape) <= cfg.max_order:
-        return tuple(shape)
-    lead = math.prod(shape[: len(shape) - cfg.max_order + 1])
-    return (lead,) + tuple(shape[len(shape) - cfg.max_order + 1:])
+    """Bucketing view of a leaf (shared rule: :mod:`repro.core.bucketing` —
+    the serve engine's KV compression groups under the same one)."""
+    return tensor_view(shape, cfg.max_order)
 
 
 def _factor_view(local_vshape, cfg: CompressorCfg, split: int | None):
@@ -141,16 +144,7 @@ def init_state(params, cfg: CompressorCfg, seed: int = 0,
         key = jax.random.PRNGKey(
             (seed + zlib.crc32(jax.tree_util.keystr(path).encode()))
             % (2 ** 31))
-        keys = jax.random.split(key, cfg.rank * len(vshape))
-        xs = []
-        i = 0
-        for _ in range(cfg.rank):
-            vecs = []
-            for n in vshape:
-                v = jax.random.normal(keys[i], (n,), F32)
-                vecs.append(v / jnp.linalg.norm(v))
-                i += 1
-            xs.append(tuple(vecs))
+        xs = hopm_init_factors(key, vshape, rank=cfg.rank)
         eshape = ((stack,) if stack else ()) + tuple(p.shape)
         return {
             "xs": tuple(xs),

@@ -287,6 +287,10 @@ def main():
     check_wire_summary_trace()
     check_elastic_restore()
 
+    # ---- continuous-batching serving ---------------------------------------
+    check_serve_compress_bucketed()
+    check_slot_recycle_prefill_sharded()
+
     print(f"ALL_DIST_OK {len(PASS)}")
 
 
@@ -772,6 +776,107 @@ def check_elastic_restore():
                                       np.arange(64.0).reshape(8, 8))
         assert restored["w"].sharding.mesh.shape["data"] == 2
     ok("elastic_reshard_restore")
+
+
+def check_serve_compress_bucketed():
+    """The serve engine's grouped KV compression — one ``hopm3_batched``
+    chain per same-view group — must be BITWISE equal to per-slot ``hopm3``
+    under the order-explicit ``mulsum`` engine, with the recorded launch
+    accounting independent of the group size, and the whole serve run
+    (tokens + compressed factors) deterministic across repeats."""
+    from repro.configs import get_config
+    from repro.core.memory_model import dhopm_launches_per_sweep
+    from repro.models import registry
+    from repro.serve import DecodeEngine, Request, RequestQueue
+    from repro.serve.engine import _compress_group
+
+    # bitwise seam: a mixed bucket of views, grouped exactly as the engine
+    # groups retired contexts
+    rng = np.random.default_rng(23)
+    view = (2, 2, 16, 8)
+    for B in (3, 9):
+        A_b = jnp.asarray(rng.standard_normal((B,) + view), np.float32)
+        xs0 = [dh.hopm_init_factors(jax.random.PRNGKey(i), view)[0]
+               for i in range(B)]
+        xs_b = tuple(jnp.stack([x[m] for x in xs0])
+                     for m in range(len(view)))
+        xs, lam = _compress_group(A_b, xs_b, sweeps=2, impl="mulsum")
+        for b in range(B):
+            x1, l1 = dh.hopm3(A_b[b], list(xs0[b]), sweeps=2, impl="mulsum")
+            assert np.array_equal(np.asarray(lam[b]), np.asarray(l1))
+            for m in range(len(view)):
+                assert np.array_equal(np.asarray(xs[m][b]),
+                                      np.asarray(x1[m])), (B, b, m)
+
+    # end-to-end: the engine's accounting and outputs repeat bitwise
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = registry.get(cfg.family).init(cfg, jax.random.PRNGKey(0))
+    eng = DecodeEngine(cfg, params, batch_size=4, max_seq=64, eos_id=7)
+
+    def one_run():
+        q = RequestQueue(
+            Request(rid=i,
+                    tokens=np.arange(3 + i % 4, dtype=np.int32) + 1,
+                    max_new_tokens=4)
+            for i in range(8))
+        return eng.serve(q, temperature=0.6, seed=0, compress=True,
+                         comp_sweeps=2, comp_impl="mulsum")
+
+    res1, st1 = one_run()
+    res2, st2 = one_run()
+    # launch accounting depends only on the view order, never group size
+    want = sum(2 * dhopm_launches_per_sweep(len(v))
+               for _b, v in st1.comp_events)
+    assert st1.comp_launches == want, (st1.comp_launches, want)
+    assert st1.comp_events == st2.comp_events
+    m1 = {r.rid: r for r in res1}
+    m2 = {r.rid: r for r in res2}
+    for rid, r1 in m1.items():
+        r2 = m2[rid]
+        assert np.array_equal(r1.tokens, r2.tokens), rid
+        for leaf, c1 in r1.compressed.items():
+            c2 = r2.compressed[leaf]
+            assert np.array_equal(np.asarray(c1.lam), np.asarray(c2.lam))
+            for a, b in zip(c1.xs, c2.xs):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+    ok("serve_compress_bucketed_bitwise")
+
+
+def check_slot_recycle_prefill_sharded():
+    """Continuous batching on a (data, model) mesh — slot-stacked caches
+    sharded over the data axis, per-slot prefill scattered into the sharded
+    tree — must complete the same request stream with the same greedy
+    tokens as the unsharded engine, through multiple slot-recycle cycles."""
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.serve import DecodeEngine, Request, RequestQueue
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = registry.get(cfg.family).init(cfg, jax.random.PRNGKey(0))
+
+    def run(m):
+        eng = DecodeEngine(cfg, params, mesh=m, batch_size=4, max_seq=64,
+                           eos_id=7)
+        q = RequestQueue(
+            Request(rid=i,
+                    tokens=np.arange(2 + i % 5, dtype=np.int32) + 1,
+                    max_new_tokens=5)
+            for i in range(10))
+        return eng.serve(q, temperature=0.0, seed=0, compress=True,
+                         comp_sweeps=1, comp_impl="mulsum")
+
+    res_m, st_m = run(mesh)
+    res_h, st_h = run(None)
+    assert st_m.completed == st_h.completed == 10
+    assert st_m.recycled > 0 and st_m.recycled == st_h.recycled
+    assert st_m.comp_events == st_h.comp_events
+    mm_ = {r.rid: r for r in res_m}
+    mh = {r.rid: r for r in res_h}
+    for rid, rh in mh.items():
+        assert np.array_equal(mm_[rid].tokens, rh.tokens), rid
+    ok("slot_recycle_prefill_sharded")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,8 @@ EXPECTED = [
     "grad_compression_split_leaves",
     "wire_summary_matches_counted_trace",
     "elastic_reshard_restore",
+    "serve_compress_bucketed_bitwise",
+    "slot_recycle_prefill_sharded",
 ]
 
 

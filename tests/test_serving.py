@@ -1,0 +1,230 @@
+"""Continuous-batching serve engine: admission, slot recycling, ragged
+prompts, grouped KV compression, and the determinism guarantees."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import memory_model as mm
+from repro.core.dhopm import hopm3, hopm3_batched, hopm_init_factors
+from repro.models import registry
+from repro.serve import DecodeEngine, GenerationResult, Request, RequestQueue
+from repro.serve.engine import _compress_group
+
+EOS = 7
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = registry.get(cfg.family).init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def engine4(setup):
+    cfg, params = setup
+    return DecodeEngine(cfg, params, batch_size=4, max_seq=64, eos_id=EOS)
+
+
+def _reqs(n, max_new=4, base_len=3):
+    # ragged on purpose: lengths cycle base_len .. base_len+3
+    return [Request(rid=i,
+                    tokens=np.arange(base_len + i % 4, dtype=np.int32) + 1,
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+# ---- GenerationResult.lengths default (bugfix) ----------------------------
+
+def test_generation_result_lengths_default():
+    # lengths was a mutable-default-adjacent `= None` with no construction:
+    # callers that skipped it got None and crashed on arithmetic downstream
+    r = GenerationResult(np.zeros((3, 5), np.int32), steps=5,
+                         prefill_tokens=12)
+    assert r.lengths is not None and r.lengths.shape == (3,)
+    assert (r.lengths == 5).all()
+    explicit = GenerationResult(np.zeros((2, 4), np.int32), steps=4,
+                                prefill_tokens=8,
+                                lengths=np.array([2, 4]))
+    assert (explicit.lengths == [2, 4]).all()
+
+
+# ---- slot lifecycle edge cases --------------------------------------------
+
+def test_all_slots_retire_at_step_zero(engine4):
+    """Every request's budget is one token — all slots retire on their
+    prefill sample, before a single engine step runs."""
+    res, stats = engine4.serve(RequestQueue(_reqs(4, max_new=1)),
+                               compress=False)
+    assert stats.completed == 4
+    assert stats.steps == 0
+    assert all(r.length == 1 for r in res)
+
+
+def test_queue_drains_mid_step(engine4):
+    """More requests than slots: the tail of the queue must be admitted
+    into recycled slots mid-generation and still complete."""
+    res, stats = engine4.serve(RequestQueue(_reqs(11, max_new=3)),
+                               compress=False)
+    assert stats.completed == 11
+    assert stats.recycled >= 7          # 11 requests through 4 slots
+    assert sorted(r.rid for r in res) == list(range(11))
+    assert all(1 <= r.length <= 3 for r in res)
+
+
+def test_b1_engine(setup):
+    cfg, params = setup
+    eng = DecodeEngine(cfg, params, batch_size=1, max_seq=64, eos_id=EOS)
+    res, stats = eng.serve(RequestQueue(_reqs(3, max_new=3)), compress=True,
+                           comp_impl="mulsum")
+    assert stats.completed == 3
+    assert all(r.compressed for r in res)
+
+
+def test_ragged_prompts_cohort_independent(setup, engine4):
+    """Ragged prompts served together in one slot batch produce exactly the
+    tokens each request gets when served alone — a slot's stream depends
+    only on its own request (fresh batch-1 prefill + request-keyed
+    sampling), never on cohort or admission order."""
+    cfg, params = setup
+    reqs = _reqs(4, max_new=4)
+    together, _ = engine4.serve(
+        RequestQueue(Request(rid=r.rid, tokens=r.tokens,
+                             max_new_tokens=r.max_new_tokens)
+                     for r in reqs), compress=False)
+    eng1 = DecodeEngine(cfg, params, batch_size=1, max_seq=64, eos_id=EOS)
+    by_rid = {r.rid: r for r in together}
+    for req in reqs:
+        alone, _ = eng1.serve(
+            RequestQueue([Request(rid=req.rid, tokens=req.tokens,
+                                  max_new_tokens=req.max_new_tokens)]),
+            compress=False)
+        assert np.array_equal(alone[0].tokens, by_rid[req.rid].tokens), \
+            req.rid
+
+
+# ---- grouped compression ---------------------------------------------------
+
+def test_serve_compression_accounting(engine4):
+    res, stats = engine4.serve(RequestQueue(_reqs(8, max_new=3)),
+                               compress=True, comp_sweeps=2,
+                               comp_impl="mulsum")
+    assert stats.completed == 8
+    assert stats.comp_events
+    # launch accounting: per group event, sweeps x the walker's launch
+    # schedule for the view ORDER — group size never enters
+    want = sum(2 * mm.dhopm_launches_per_sweep(len(v))
+               for _b, v in stats.comp_events)
+    assert stats.comp_launches == want
+    assert stats.comp_dense_bytes > stats.comp_factor_bytes
+    assert stats.compression_ratio > 1.0
+    for r in res:
+        assert set(r.compressed) == {"k", "v"}
+        for c in r.compressed.values():
+            assert len(c.xs) == len(c.view)
+            assert c.ctx == r.prompt_len + r.length
+            assert c.factor_bytes == mm.rank1_factor_elems(c.view) * 4
+
+
+def test_compress_group_bitwise_vs_per_slot():
+    """The engine's grouped rank-1 chain must match per-slot hopm3 BITWISE
+    under the order-explicit mulsum engine (same guarantee grad_compress's
+    buckets carry)."""
+    rng = np.random.default_rng(5)
+    view = (2, 2, 16, 8)
+    B = 3
+    A_b = jnp.asarray(rng.standard_normal((B,) + view), jnp.float32)
+    xs0 = [hopm_init_factors(jax.random.PRNGKey(i), view)[0]
+           for i in range(B)]
+    xs_b = tuple(jnp.stack([x[m] for x in xs0]) for m in range(len(view)))
+    xs, lam = _compress_group(A_b, xs_b, sweeps=2, impl="mulsum")
+    for b in range(B):
+        x1, l1 = hopm3(A_b[b], list(xs0[b]), sweeps=2, impl="mulsum")
+        assert np.array_equal(np.asarray(lam[b]), np.asarray(l1))
+        for m in range(len(view)):
+            assert np.array_equal(np.asarray(xs[m][b]), np.asarray(x1[m]))
+
+
+def _count_pallas(jaxpr):
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for sub in eqn.params.values():
+            if hasattr(sub, "jaxpr"):
+                n += _count_pallas(sub.jaxpr)
+    return n
+
+
+def test_compress_group_one_launch_chain_any_group_size():
+    """Acceptance: ONE batched contraction launch chain per compression
+    group per step — the pallas launch count in the traced chain equals
+    sweeps x dhopm_launches_per_sweep(d) and is independent of the group
+    size (a per-slot loop would scale linearly with B)."""
+    view = (2, 2, 16, 8)
+    sweeps = 2
+    want = sweeps * mm.dhopm_launches_per_sweep(len(view))
+    counts = set()
+    for B in (2, 16):
+        A = jnp.zeros((B,) + view, jnp.float32)
+        xb = tuple(jnp.zeros((B, n), jnp.float32) for n in view)
+        jx = jax.make_jaxpr(
+            lambda a, x: hopm3_batched(a, list(x), sweeps=sweeps,
+                                       impl="pallas"))(A, xb)
+        counts.add(_count_pallas(jx.jaxpr))
+    assert counts == {want}, (counts, want)
+
+
+# ---- recycled-slot determinism across hash salts ---------------------------
+
+_SERVE_DIGEST = r"""
+import zlib
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.models import registry
+from repro.serve import DecodeEngine, Request, RequestQueue
+
+cfg = get_config("qwen2-1.5b", smoke=True)
+params = registry.get(cfg.family).init(cfg, jax.random.PRNGKey(0))
+eng = DecodeEngine(cfg, params, batch_size=2, max_seq=64, eos_id=7)
+q = RequestQueue(Request(rid=f"req-{i}",
+                         tokens=np.arange(3 + i % 3, dtype=np.int32) + 1,
+                         max_new_tokens=3)
+                 for i in range(6))
+res, stats = eng.serve(q, temperature=0.8, seed=0, compress=True,
+                       comp_sweeps=1, comp_impl="mulsum")
+assert stats.recycled > 0
+buf = b"".join(
+    np.asarray(r.tokens).tobytes()
+    + b"".join(np.asarray(x).tobytes()
+               for c in sorted(r.compressed) for x in r.compressed[c].xs)
+    for r in sorted(res, key=lambda r: r.rid))
+print(zlib.crc32(buf))
+"""
+
+
+def test_recycled_slot_determinism_across_hash_seeds():
+    """Per-request sampling keys and per-leaf factor seeds come from crc32
+    of stable identities, never salted hash(): two processes with different
+    PYTHONHASHSEED salts must serve the same stream — recycled slots
+    included — to identical tokens AND identical compressed factors."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    digests = []
+    for salt in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = salt
+        env["PYTHONPATH"] = str(root / "src")
+        proc = subprocess.run(
+            [sys.executable, "-c", _SERVE_DIGEST],
+            capture_output=True, text=True, env=env, timeout=600)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        digests.append(proc.stdout.strip())
+    assert digests[0] == digests[1], digests
