@@ -1,0 +1,329 @@
+"""Batched-operand arena bench: stacked vs arena-filled compression steps.
+
+Schema 8 adds *arena* cells (``kind: "arena"``) to the ``BENCH_TVC.json``
+trajectory — one per (consumer, B) with B in {8, 64} — timing the SAME
+logical compression step under both bucket assemblies:
+
+* ``consumer: "grad"`` — a ``grad_compress.compress_and_sync`` step over B
+  same-view gradient leaves inside a p = 1 shard_map, whole-step donated
+  (``donate_argnums``): the stacked step pays the ``jnp.stack`` round trip
+  per bucket per deflation pass, the arena step assembles through
+  :func:`repro.core.arena.assemble_rows` (a ``dynamic_update_slice`` chain
+  — no ``concatenate`` in the jaxpr, so donation writes the bucket rows in
+  place).  The step threads its own state (donated inputs are consumed, so
+  the timer feeds each step's outputs back in — exactly the training
+  loop's dataflow).
+
+* ``consumer: "serve"`` — one serving retirement-compression step
+  (:meth:`repro.serve.engine.DecodeEngine._compress_retired` over a full
+  slot batch): the stacked step eagerly slices every retired context out
+  of the slot-stacked cache and ``jnp.stack``s the group, the arena step
+  scatter-fills the persistent donated ``[B_g, *view]`` operand straight
+  from the cache leaves (``_arena_fill_kv``) and reuses it warm across
+  events.
+
+Recorded per cell (beyond the core keys):
+
+* ``fill_events`` — one ``[b, view, cold]`` entry per arena fill event over
+  the timed steps, from which ``check_bench`` recomputes
+  ``stack_copy_removed_bytes`` VERBATIM
+  (``(bucket_stack_elems - arena_fill_elems) x itemsize`` per event — the
+  removed-copy accounting can never drift from the closed forms), the
+  modeled ``streamed_bytes``
+  (``ranks x sweeps x b x hopm_streamed_elems_sweep(view) x itemsize`` per
+  event) and ``launches``
+  (``ranks x sweeps x dhopm_launches_per_sweep(d_view)`` per event);
+* ``stack_us`` / ``us`` / ``arena_speedup`` — total stacked vs arena-filled
+  wall time over the same step count, gated in aggregate (geomean
+  ``arena_speedup`` > 1 over the B >= 16 cells);
+* ``arena_plan`` — the planner's arena-vs-stack resolution for this bucket
+  (``plan_compress(B, view).arena``), recomputed verbatim by the gate.
+
+Arena cells carry ``engine: "arena-loop"`` — like serving cells, their
+``us`` is a Python-driven step loop, so the tag keeps them out of the
+timed-engine time-implied ratio map.
+
+A run merges its arena cells into ``out_path`` whenever the file exists
+(replacing prior arena cells, bumping the schema) — so the CI gate jobs
+accumulate arena cells on top of the tvc_kernel / serving smoke payloads —
+and writes a standalone payload otherwise.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs import get_config
+from repro.core import memory_model as mm
+from repro.core.bucketing import tensor_view
+from repro.core.dhopm import hopm3_batched, hopm_init_factors
+from repro.models import registry
+from repro.plan import aot as plan_aot
+from repro.plan import calibration as plan_calibration
+from repro.serve import DecodeEngine
+from repro.serve.engine import _KV_MAX_ORDER, _KV_TIMELINE_KEYS, ServeStats
+from repro.train import grad_compress as gc
+from .bench_tvc_kernel import SMOKE_OUT_PATH, _compile_pair, _with_plan
+from .common import emit, stream_triad_gbs
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = ROOT / "BENCH_TVC.json"
+
+SCHEMA = 8
+
+BATCH_SIZES = (8, 64)
+SMOKE_BATCH_SIZES = (8,)
+STEPS = 12
+SMOKE_STEPS = 4
+WARMUP = 2
+
+#: grad consumer: B same-view eligible leaves per bucket
+GRAD_VIEW = (64, 48)
+GRAD_RANK = 2
+GRAD_SWEEPS = 2
+
+#: serve consumer: the smoke serving model + retirement geometry
+ARCH = "qwen2-1.5b"
+MAX_SEQ = 64
+SERVE_CTX_P = 32
+COMP_SWEEPS = 2
+
+
+def _geo_cell(view, *, B, consumer, ranks, sweeps, us, stack_us,
+              fill_events, removed_bytes, peak, cold_us, warm_us):
+    itemsize = 4
+    streamed = sum(
+        int(ranks * sweeps * b * mm.hopm_streamed_elems_sweep(tuple(v)))
+        * itemsize
+        for b, v, _cold in fill_events)
+    launches = sum(
+        ranks * sweeps * mm.dhopm_launches_per_sweep(len(v))
+        for _b, v, _cold in fill_events)
+    gbs = streamed / max(us, 1e-9) / 1e3   # bytes/us -> GB/s
+    return _with_plan({
+        "kind": "arena",
+        "order": len(view),
+        "mode": 0,
+        "dtype": "f32",
+        "layout": "aligned",
+        "shape": list(view),
+        "engine": "arena-loop",
+        "batch": B,
+        "consumer": consumer,
+        "ranks": ranks,
+        "sweeps": sweeps,
+        "fill_events": fill_events,
+        "stack_us": stack_us,
+        "arena_speedup": stack_us / max(us, 1e-9),
+        "stack_copy_removed_bytes": removed_bytes,
+        "arena_plan": gc._use_arena(
+            gc.CompressorCfg(rank=ranks, sweeps=sweeps),
+            B, tuple(view), itemsize),
+        "launches": launches,
+        "blocks": [],
+        "streamed_bytes": streamed,
+        "us": us,
+        "gbs": gbs,
+        "pct_peak": gbs / peak * 100.0,
+        "compile_cold_us": cold_us,
+        "compile_warm_us": warm_us,
+    })
+
+
+# -- grad consumer ----------------------------------------------------------
+
+def _grad_step_fn(cfg):
+    mesh = Mesh(np.array(jax.devices("cpu")[:1]), ("dp",))
+
+    def step(grads, state):
+        ng, ns, _ = gc.compress_and_sync(grads, state, cfg, "dp")
+        return ng, ns
+
+    sm = shard_map(step, mesh=mesh, in_specs=(P(), P()),
+                   out_specs=(P(), P()))
+    # whole-step donation: the arena assembly's in-place write depends on
+    # the gradient/state buffers being donated — the training loop's shape
+    return jax.jit(sm, donate_argnums=(0, 1))
+
+
+def _time_grad(cfg, B, steps):
+    """Total us over ``steps`` donated compress_and_sync steps, threading
+    each step's outputs back in (donated inputs are consumed)."""
+    params = {f"w{i}": jnp.zeros(GRAD_VIEW, jnp.float32) for i in range(B)}
+    key = jax.random.PRNGKey(0)
+    grads = {k: jax.random.normal(jax.random.fold_in(key, i),
+                                  GRAD_VIEW, jnp.float32)
+             for i, k in enumerate(params)}
+    state = gc.init_state(params, cfg)
+    step = _grad_step_fn(cfg)
+    for _ in range(WARMUP):
+        grads, state = step(grads, state)
+    jax.block_until_ready(state)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        grads, state = step(grads, state)
+    jax.block_until_ready(state)
+    return (time.perf_counter() - t0) * 1e6
+
+
+def _grad_cell(B, *, smoke, peak):
+    steps = SMOKE_STEPS if smoke else STEPS
+    mk = lambda arena: gc.CompressorCfg(          # noqa: E731
+        rank=GRAD_RANK, sweeps=GRAD_SWEEPS, min_size=1024, prec="f32",
+        bucket=True, arena=arena)
+    stack_us = _time_grad(mk(False), B, steps)
+    us = _time_grad(mk(True), B, steps)
+    # one bucket of B leaves per step, assembled warm in-trace (the donated
+    # step's scatter aliases the row materialization on every iteration)
+    fill_events = [[B, list(GRAD_VIEW), 0]] * steps
+    removed = sum(
+        (mm.bucket_stack_elems(b, v, ranks=GRAD_RANK)
+         - mm.arena_fill_elems(b, v, ranks=GRAD_RANK, cold=cold)) * 4
+        for b, v, cold in fill_events)
+    # cold/warm fresh-jit compile of the arena-assembled bucket chain (the
+    # cell's launch unit: assemble_rows + one batched mulsum chain)
+    rows = [jnp.zeros(GRAD_VIEW, jnp.float32) for _ in range(B)]
+    xs0 = hopm_init_factors(jax.random.PRNGKey(0), GRAD_VIEW)[0]
+    xs_b = [jnp.stack([x] * B) for x in xs0]
+
+    def make_unit():
+        from repro.core.arena import assemble_rows
+        return lambda *rs: hopm3_batched(
+            assemble_rows(rs[:B]), list(rs[B:]),
+            sweeps=GRAD_SWEEPS, impl="mulsum")
+
+    cold_us, warm_us = _compile_pair(make_unit, *rows, *xs_b)
+    return _geo_cell(GRAD_VIEW, B=B, consumer="grad", ranks=GRAD_RANK,
+                     sweeps=GRAD_SWEEPS, us=us, stack_us=stack_us,
+                     fill_events=fill_events, removed_bytes=removed,
+                     peak=peak, cold_us=cold_us, warm_us=warm_us)
+
+
+# -- serve consumer ---------------------------------------------------------
+
+def _serve_setup(B):
+    cfg = get_config(ARCH, smoke=True)
+    mod = registry.get(cfg.family)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    eng = DecodeEngine(cfg, params, batch_size=B, max_seq=MAX_SEQ, eos_id=7)
+    caches = eng.new_slot_caches()
+    items = [({"rid": i, "ctx": SERVE_CTX_P - 3}, i, SERVE_CTX_P)
+             for i in range(B)]
+    # the group view every retirement member compresses under
+    leaf = next(caches[n] for n in _KV_TIMELINE_KEYS if n in caches)
+    sliced, _stop = eng._kv_sliced_shape(leaf, SERVE_CTX_P)
+    view = tensor_view(sliced, _KV_MAX_ORDER)
+    return eng, caches, items, view
+
+
+def _time_serve(eng, caches, items, arena, steps):
+    def one():
+        st = ServeStats()
+        res = eng._compress_retired(items, caches=caches,
+                                    sweeps=COMP_SWEEPS, impl="auto",
+                                    arena=arena, stats=st)
+        jax.block_until_ready([r[n].lam for r in res for n in r])
+    for _ in range(WARMUP):
+        one()
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        one()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def _serve_cell(B, *, smoke, peak):
+    steps = SMOKE_STEPS if smoke else STEPS
+    eng, caches, items, view = _serve_setup(B)
+    stack_us = _time_serve(eng, caches, items, False, steps)
+    eng._arena.reset()
+    us = _time_serve(eng, caches, items, True, steps)
+    # keep only the timed steps' fill events (the timer's internal warmup
+    # reps — including the one cold first-allocation fill — are dropped,
+    # with their removed-bytes contribution subtracted to match)
+    events = list(eng._arena.stats.fill_events)
+    removed = eng._arena.stats.stack_copy_removed_bytes
+    n_groups = len(events) // (steps + WARMUP)
+    dropped, events = (events[:WARMUP * n_groups],
+                       events[WARMUP * n_groups:])
+    removed -= sum(
+        (mm.bucket_stack_elems(b, v, ranks=1)
+         - mm.arena_fill_elems(b, v, ranks=1, cold=cold)) * 4
+        for b, v, cold in dropped)
+    # cold/warm fresh-jit compile of the grouped chain at this view
+    b_g = events[0][0] if events else B
+    A_b = jnp.zeros((b_g,) + tuple(view), jnp.float32)
+    xs0 = [hopm_init_factors(jax.random.PRNGKey(i), view)[0]
+           for i in range(b_g)]
+    xs_b = [jnp.stack([x[m] for x in xs0]) for m in range(len(view))]
+
+    def make():
+        return lambda A, *xs: hopm3_batched(
+            A, list(xs), sweeps=COMP_SWEEPS, impl="mulsum")
+
+    cold_us, warm_us = _compile_pair(make, A_b, *xs_b)
+    return _geo_cell(view, B=B, consumer="serve", ranks=1,
+                     sweeps=COMP_SWEEPS, us=us, stack_us=stack_us,
+                     fill_events=events, removed_bytes=removed,
+                     peak=peak, cold_us=cold_us, warm_us=warm_us)
+
+
+def run(smoke: bool = False, out_path=None):
+    if out_path:
+        out_path = pathlib.Path(out_path)
+    else:
+        out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
+    cache_dir = tempfile.mkdtemp(prefix="bench_arena_xla_cache_")
+    plan_aot.enable_persistent_cache(cache_dir)
+    peak = stream_triad_gbs(2_000_000 if smoke else 30_000_000)
+    lines = [emit("stream_triad", 0.0, f"{peak:.1f}GB/s")]
+
+    cells = []
+    for B in (SMOKE_BATCH_SIZES if smoke else BATCH_SIZES):
+        for consumer, fn in (("grad", _grad_cell), ("serve", _serve_cell)):
+            cell = fn(B, smoke=smoke, peak=peak)
+            cells.append(cell)
+            lines.append(emit(
+                f"arena_{consumer}_B{B}", cell["us"],
+                f"x{cell['arena_speedup']:.2f};"
+                f"removed={cell['stack_copy_removed_bytes']}B"))
+
+    if out_path.exists():
+        # merge: replace prior arena cells, keep every other kind (gate
+        # jobs accumulate arena cells on top of smoke payloads)
+        payload = json.loads(out_path.read_text())
+        payload["cells"] = [c for c in payload["cells"]
+                            if c.get("kind") != "arena"] + cells
+        payload["meta"]["schema"] = SCHEMA
+        payload["meta"]["arena_timestamp"] = time.strftime(
+            "%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    else:
+        payload = {
+            "meta": {
+                "schema": SCHEMA,
+                "engine": "arena-loop",
+                "backend": jax.default_backend(),
+                "jax": jax.__version__,
+                "smoke": smoke,
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                           time.gmtime()),
+                "compile_cache": True,
+                "calibration": plan_calibration.load().get("source"),
+            },
+            "stream_triad_gbs": peak,
+            "cells": cells,
+        }
+    out_path.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"# wrote {out_path} ({len(cells)} arena cells)", flush=True)
+    return lines, payload
+
+
+if __name__ == "__main__":
+    run()

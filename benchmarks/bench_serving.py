@@ -63,7 +63,7 @@ from .common import emit, stream_triad_gbs
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 OUT_PATH = ROOT / "BENCH_TVC.json"
 
-SCHEMA = 7
+SCHEMA = 8
 
 #: smoke model: the serving bench times the substrate, not the model
 ARCH = "qwen2-1.5b"

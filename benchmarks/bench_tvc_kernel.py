@@ -614,7 +614,7 @@ def run(smoke: bool = False, out_path=None):
 
     payload = {
         "meta": {
-            "schema": 7,
+            "schema": 8,
             "engine": engine,
             "backend": jax.default_backend(),
             "jax": jax.__version__,

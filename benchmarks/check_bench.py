@@ -86,6 +86,23 @@ Three checks, strictest first:
    saving.  Their ``engine: "serve-loop"`` tag keeps the time-implied
    check away (a serve loop's wall time is mostly model forwards).
 
+6. **Arena gates** (schema >= 8, ``kind: "arena"`` cells from
+   ``bench_arena``) — each cell times the SAME compression step under the
+   legacy ``jnp.stack`` bucket assembly and the donated batched-operand
+   arena (``repro.core.arena``).  ``stack_copy_removed_bytes`` must
+   recompute VERBATIM from the recorded ``fill_events`` via the
+   ``memory_model`` closed forms (``bucket_stack_elems`` minus
+   ``arena_fill_elems`` per ``[b, view, cold]`` event x itemsize),
+   ``launches`` and ``streamed_bytes`` must match the
+   ``ranks x sweeps x dhopm_launches_per_sweep`` /
+   ``hopm_streamed_elems_sweep`` accounting over the same events,
+   ``arena_plan`` must equal the recomputed
+   ``plan_compress(B, view).arena`` resolution, every B >=
+   ``--speedup-min-batch`` cell must have removed real copy bytes, and the
+   geomean ``arena_speedup`` (stacked us / arena us) over those cells must
+   exceed 1.  The ``engine: "arena-loop"`` tag keeps the Python step loop
+   out of the time-implied ratio map, like serving cells.
+
 Exit code 0 = green; 1 = any cell failed (all failures listed).
 """
 from __future__ import annotations
@@ -97,6 +114,8 @@ import pathlib
 import sys
 
 from repro.core.memory_model import (
+    arena_fill_elems,
+    bucket_stack_elems,
     dhopm_launches_per_sweep,
     dhopm_time_sweep,
     hopm_streamed_elems_sweep,
@@ -142,6 +161,14 @@ KIND_KEYS = {
                 "req_per_s", "p50_us", "p99_us", "slo_p50_us",
                 "slo_p99_us", "sweeps", "comp_events", "comp_launches",
                 "comp_dense_bytes", "comp_factor_bytes"),
+    # stacked-vs-arena-filled compression step cells (schema 8): the
+    # "arena-loop" tag likewise keeps the Python step loop out of the
+    # time-implied map; the gates recompute the removed-copy bytes, the
+    # launch/streamed accounting, and the planner's arena resolution from
+    # the recorded fill events verbatim
+    "arena": ("engine", "batch", "sweeps", "consumer", "ranks",
+              "fill_events", "stack_us", "arena_speedup",
+              "stack_copy_removed_bytes", "launches", "arena_plan"),
 }
 BATCHED_KINDS = ("tvc_batched", "dhopm3_batched")
 TIMED_ENGINES = ("pallas", "native-xla")
@@ -189,6 +216,13 @@ def predicted_bytes(cell: dict) -> int:
             int(b * cell["sweeps"] * hopm_streamed_elems_sweep(tuple(view)))
             * itemsize
             for b, view in cell["comp_events"])
+    if cell["kind"] == "arena":
+        # one deflation-rank chain set per fill event: ranks x sweeps x B_g
+        # lockstep power-iteration chains' worth of streamed elements
+        return sum(
+            int(cell["ranks"] * cell["sweeps"] * b
+                * hopm_streamed_elems_sweep(tuple(view))) * itemsize
+            for b, view, _cold in cell["fill_events"])
     if cell["kind"] == "tvc2":
         u = math.prod(shape[:k])
         n1, n2 = shape[k], shape[k + 1]
@@ -337,6 +371,43 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                 fails.append(
                     f"{name}: compression off but {len(c['comp_events'])} "
                     f"launch events recorded")
+        if c["kind"] == "arena":
+            isz = get_policy(c["dtype"]).storage_bytes
+            # removed-copy bytes must recompute VERBATIM from the recorded
+            # fill events via the memory_model closed forms — the arena's
+            # headline number can never drift from the priced model
+            want_removed = sum(
+                (bucket_stack_elems(b, view, ranks=c["ranks"])
+                 - arena_fill_elems(b, view, ranks=c["ranks"],
+                                    cold=bool(cold))) * isz
+                for b, view, cold in c["fill_events"])
+            if c["stack_copy_removed_bytes"] != want_removed:
+                fails.append(
+                    f"{name}: stack_copy_removed_bytes "
+                    f"{c['stack_copy_removed_bytes']} != {want_removed} "
+                    f"recomputed from fill_events (bucket_stack_elems - "
+                    f"arena_fill_elems per event)")
+            want_l = sum(
+                c["ranks"] * c["sweeps"] * dhopm_launches_per_sweep(
+                    len(view))
+                for _b, view, _cold in c["fill_events"])
+            if c["launches"] != want_l:
+                fails.append(
+                    f"{name}: launches {c['launches']} != {want_l} "
+                    f"(ranks x sweeps x dhopm_launches_per_sweep per fill "
+                    f"event)")
+            want_arena = plan_planner.plan_compress(
+                c["batch"], tuple(c["shape"]), itemsize=isz).arena
+            if bool(c["arena_plan"]) != want_arena:
+                fails.append(
+                    f"{name}: arena_plan {c['arena_plan']} != recomputed "
+                    f"plan_compress(...).arena {want_arena}")
+            if c["batch"] >= speedup_min_batch \
+                    and not c["stack_copy_removed_bytes"] > 0:
+                fails.append(
+                    f"{name}: B={c['batch']} arena cell removed no stack "
+                    f"copies (stack_copy_removed_bytes="
+                    f"{c['stack_copy_removed_bytes']})")
 
         # -- 3. time-implied traffic ---------------------------------------
         # batched cells always run a timed engine and carry their own tag;
@@ -423,6 +494,21 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                 f"batched_speedup {geomean:.2f} <= 1 over {len(sp)} cells "
                 f"({', '.join(f'{s:.2f}' for s in sp)}) — one batched "
                 f"launch is not beating B separate launches")
+
+    # -- arena speedup: geomean over the large-B stacked-vs-arena cells -----
+    # (same aggregation logic as batched_speedup: the arena-filled step must
+    # beat the jnp.stack-assembled step where the copy volume matters)
+    ar = [c["arena_speedup"] for c in cells
+          if c.get("kind") == "arena"
+          and c.get("batch", 0) >= speedup_min_batch]
+    if ar:
+        geomean = math.exp(sum(math.log(max(s, 1e-9)) for s in ar) / len(ar))
+        if not geomean > 1.0:
+            fails.append(
+                f"arena cells (batch >= {speedup_min_batch}): geomean "
+                f"arena_speedup {geomean:.2f} <= 1 over {len(ar)} cells "
+                f"({', '.join(f'{s:.2f}' for s in ar)}) — the arena-filled "
+                f"step is not beating the stacked assembly")
 
     # -- overlap speedup: geomean floor over sync-vs-pipelined cells --------
     # (p = 1 cells measure the pipeline's launch cost — (C-1) extra, smaller

@@ -15,7 +15,7 @@ import sys
 import time
 
 SUITES = ("memory_model", "tvc", "tvc_kernel", "hopm", "mixed_precision",
-          "scaling", "compression", "serving")
+          "scaling", "compression", "serving", "arena")
 
 
 def main() -> None:

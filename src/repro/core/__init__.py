@@ -8,3 +8,4 @@ from .tvc import (  # noqa: F401
     tvc_batched, tvc2_batched,
 )
 from . import memory_model  # noqa: F401
+from .arena import BatchedArena, assemble_rows  # noqa: F401

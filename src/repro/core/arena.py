@@ -1,0 +1,183 @@
+"""Donation-aware batched-operand arena: zero-copy bucket streaming.
+
+Both production consumers of :func:`repro.core.dhopm.hopm3_batched` assemble
+their ``[B, ...]`` operands from B same-view members on every step —
+``train.grad_compress`` stacks gradient+error-feedback rows per bucket, the
+serve engine stacks retired KV contexts per retirement event.  ``jnp.stack``
+prices that assembly at a full extra round trip of the bucket: the B member
+rows are materialized, read back, and written into a *freshly allocated*
+stacked buffer (then the results are sliced back out).  The paper's whole
+thesis is that these chains are streamed-memory bound, so the assembly copy
+is pure overhead — 2·B·prod(view) elements per event that
+:func:`repro.core.memory_model.bucket_stack_elems` now prices in closed form.
+
+The arena removes it two ways, sharing one layout:
+
+* **Eager consumers** (the serve engine's retirement groups) hold a
+  persistent :class:`BatchedArena`: one ``[B, *view]`` buffer per
+  ``(tag, B, view, dtype)`` key, *donated* into a jitted scatter fill
+  (``donate_argnums=(0,)`` + ``buf.at[i].set(row)``) on every event.  The
+  fill program reads each member straight from its source (a cache row, an
+  init-factor vector) and writes it into the arena row in place — no fresh
+  allocation, no intermediate stacked copy, no ``concatenate`` primitive in
+  the jaxpr.  A warm fill therefore costs zero copy elements beyond the row
+  materialization the stacked path also pays
+  (:func:`repro.core.memory_model.arena_fill_elems`); only a cold
+  (first-allocation) fill behaves like one stack.
+
+* **Traced consumers** (``grad_compress`` inside shard_map) can't hold
+  Python-side buffers, but :func:`assemble_rows` gives them the same
+  discipline in-trace: a ``dynamic_update_slice`` chain instead of a
+  ``concatenate``, so a whole-step donation (the train step donates its
+  gradient/compressor state) lets XLA write the bucket rows in place
+  instead of materializing rows *and* a stacked copy of them.
+
+Keys are exact ``(B, view)`` shapes — the same
+:func:`repro.core.bucketing.tensor_view` rule both consumers bucket under —
+so a buffer is bitwise-interchangeable with the ``jnp.stack`` it replaces:
+same values in the same rows, hence identical ``hopm3_batched`` iterates
+under the order-explicit ``mulsum`` engine.  Shape-churn regimes (every
+event a new ``(B, view)`` key) would turn every fill cold; the arena caps
+its key table at ``max_keys`` and refuses new keys past it
+(:meth:`BatchedArena.acquire` returns ``None`` → the caller stacks), and
+:func:`repro.plan.planner.plan_compress` keeps the stack path for singleton
+buckets and caller-declared churn.
+
+Donation invariant: the arena owns the ONLY live reference to each buffer
+between fills.  Consumers may pass the filled buffer into non-donating
+computations (the chain launch) and keep slices *of the chain outputs*, but
+must never retain the buffer itself — the next fill donates it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import memory_model as mm
+
+__all__ = ["BatchedArena", "assemble_rows"]
+
+
+def assemble_rows(rows, dtype=None):
+    """In-trace arena fill: build a ``[B, *view]`` operand from B same-shape
+    rows with a ``buf.at[i].set(row)`` scatter chain — value-identical to
+    ``jnp.stack(rows)`` but with no ``concatenate`` primitive in the jaxpr,
+    so under a whole-program donation XLA updates the destination rows in
+    place instead of materializing the members and a fresh stacked copy of
+    them."""
+    rows = list(rows)
+    b = len(rows)
+    if b == 0:
+        raise ValueError("assemble_rows needs at least one row")
+    dt = jnp.dtype(dtype) if dtype is not None else jnp.result_type(rows[0])
+    buf = jnp.zeros((b,) + tuple(rows[0].shape), dt)
+    for i, r in enumerate(rows):
+        buf = buf.at[i].set(r.astype(dt))
+    return buf
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(buf, *rows):
+    """Donated row scatter: one in-place ``dynamic_update_slice`` per row on
+    the persistent buffer (retraced per (B, view, dtype) key — exactly the
+    arena's key granularity)."""
+    for i, r in enumerate(rows):
+        buf = buf.at[i].set(r.astype(buf.dtype))
+    return buf
+
+
+@dataclasses.dataclass
+class ArenaStats:
+    """Fill accounting — what the bench cells and serve stats record."""
+    fills: int = 0
+    cold_fills: int = 0
+    stack_fallbacks: int = 0          # key-table full → caller stacked
+    stack_copy_removed_bytes: int = 0
+    fill_events: list = dataclasses.field(default_factory=list)
+    #   one [b, view, cold] entry per fill (cold: 0/1) — check_bench
+    #   recomputes stack_copy_removed_bytes from these verbatim
+
+
+class BatchedArena:
+    """Persistent donated ``[B, *view]`` operand/residual/factor buffers,
+    keyed by ``(tag, B, tensor_view, dtype)``."""
+
+    def __init__(self, max_keys: int = 64):
+        self.max_keys = max_keys
+        self._bufs: dict[tuple, jax.Array] = {}
+        self.stats = ArenaStats()
+
+    def __len__(self) -> int:
+        return len(self._bufs)
+
+    @staticmethod
+    def _key(tag, b, view, dtype) -> tuple:
+        return (tag, int(b), tuple(view), jnp.dtype(dtype).name)
+
+    def acquire(self, tag, b: int, view, dtype):
+        """``(buf, cold)`` — the persistent ``[b, *view]`` buffer for this
+        key (freshly zero-allocated on a cold miss), or ``(None, False)``
+        when the key table is full and the key is new (shape churn: the
+        caller should take the stack path; recorded as a fallback).  The
+        caller MUST donate ``buf`` into its fill and hand the filled buffer
+        back via :meth:`commit` — after ``acquire`` the arena's stored
+        reference is dropped (donation invalidates it)."""
+        key = self._key(tag, b, view, dtype)
+        buf = self._bufs.pop(key, None)
+        if buf is not None:
+            return buf, False
+        if len(self._bufs) >= self.max_keys:
+            self.stats.stack_fallbacks += 1
+            return None, False
+        return jnp.zeros((int(b),) + tuple(view), jnp.dtype(dtype)), True
+
+    def commit(self, tag, b: int, view, dtype, buf, *, cold: bool,
+               itemsize: int | None = None, ranks: int = 1,
+               account: bool = True) -> None:
+        """Store the filled buffer back and account the removed stack copy
+        (:func:`~repro.core.memory_model.bucket_stack_elems` minus the
+        fill's own :func:`~repro.core.memory_model.arena_fill_elems`).
+        ``account=False`` stores without recording a fill event — for
+        auxiliary buffers (a group's factor stacks) whose removal is already
+        priced by the group's operand event via the ``ranks`` term."""
+        self._bufs[self._key(tag, b, view, dtype)] = buf
+        if not account:
+            return
+        isz = itemsize if itemsize is not None else jnp.dtype(dtype).itemsize
+        self.stats.fills += 1
+        self.stats.cold_fills += int(cold)
+        self.stats.fill_events.append([int(b), list(view), int(cold)])
+        self.stats.stack_copy_removed_bytes += (
+            mm.bucket_stack_elems(b, view, ranks=ranks)
+            - mm.arena_fill_elems(b, view, ranks=ranks, cold=cold)) * isz
+
+    def fill_rows(self, tag, rows, *, dtype=None, ranks: int = 1,
+                  account: bool = True):
+        """Fill (or cold-allocate) the key's buffer from B already-
+        materialized rows via the donated scatter.  Returns the filled
+        ``[B, *view]`` buffer, or ``None`` on a key-table-full miss (caller
+        stacks).  Bitwise-identical content to ``jnp.stack(rows)``."""
+        rows = list(rows)
+        dt = jnp.dtype(dtype) if dtype is not None \
+            else jnp.result_type(rows[0])
+        view = tuple(rows[0].shape)
+        buf, cold = self.acquire(tag, len(rows), view, dt)
+        if buf is None:
+            return None
+        buf = _scatter_rows(buf, *rows)
+        self.commit(tag, len(rows), view, dt, buf, cold=cold, ranks=ranks,
+                    account=account)
+        return buf
+
+    def reset(self) -> None:
+        self._bufs.clear()
+        self.stats = ArenaStats()
+
+    def nbytes(self) -> int:
+        """Resident arena footprint (all keys)."""
+        return sum(math.prod(k[2]) * k[1] * jnp.dtype(k[3]).itemsize
+                   for k in self._bufs)

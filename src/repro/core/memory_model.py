@@ -28,7 +28,7 @@ __all__ = [
     "dhopm_launches_per_sweep", "dhopm_wire_bytes_sweep",
     "dhopm_batched_wire_bytes_sweep", "dhopm_time_sweep",
     "hopm_streamed_elems_sweep", "rank1_factor_elems",
-    "rank1_compression_ratio",
+    "rank1_compression_ratio", "bucket_stack_elems", "arena_fill_elems",
 ]
 
 
@@ -497,6 +497,43 @@ def rank1_compression_ratio(shape) -> float:
     for n in shape:
         dense *= n
     return dense / rank1_factor_elems(shape)
+
+
+def bucket_stack_elems(b: int, view, ranks: int = 1) -> int:
+    """Pure copy elements one ``jnp.stack`` bucket assembly moves per
+    compression step: the B materialized member rows are read back and
+    written into a freshly allocated ``[B, *view]`` buffer
+    (``2 · B · prod(view)``), plus the warm-start factor gather — ``ranks``
+    deflation ranks of d stacked ``(B, n_m)`` factor matrices, read + write
+    each (``2 · ranks · B · Σ n_m``).  This traffic is assembly overhead on
+    top of the chain's own streamed bytes
+    (:func:`hopm_streamed_elems_sweep`); multiply by the itemsize for bytes.
+    It is exactly what a counted trace of the stacked path's
+    ``concatenate`` equations sums to (regression-tested in
+    ``tests/_dist_checks.py``), and what the donation-aware arena removes
+    (:mod:`repro.core.arena`)."""
+    v = 1
+    for n in view:
+        v *= n
+    return 2 * b * v + 2 * ranks * b * sum(view)
+
+
+def arena_fill_elems(b: int, view, ranks: int = 1,
+                     cold: bool = False) -> int:
+    """Extra copy elements of a donated arena fill beyond the member rows'
+    unavoidable materialization.
+
+    A *warm* fill costs **0**: the jitted ``donate_argnums`` scatter writes
+    each member straight into its persistent arena row — the write aliases
+    the row materialization the stacked path also pays, the buffer already
+    exists (no allocation), and no stacked copy is ever read back.  A
+    *cold* fill (first event on a ``(B, view)`` key) must allocate and
+    populate the buffer, which costs exactly one stack assembly
+    (:func:`bucket_stack_elems`); steady-state buckets amortize it to
+    nothing.  ``bucket_stack_elems - arena_fill_elems`` is the per-event
+    ``stack_copy_removed_bytes`` the bench cells record and ``check_bench``
+    recomputes."""
+    return bucket_stack_elems(b, view, ranks=ranks) if cold else 0
 
 
 def dhopm_wire_bytes_sweep(shape, p: int, itemsize: int,

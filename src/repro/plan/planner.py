@@ -88,6 +88,9 @@ class Plan:
     bucket: bool = True       # batched bucketing (grad_compress / batched)
     algo: str = "none"        # allreduce schedule for the dominant payload
     two_launch: bool = False  # tvc2 epilogue ran as a second launch
+    arena: bool = False       # donation-aware batched-operand arena fill
+    #                           (compress buckets: scatter into persistent
+    #                           [B, ...] buffers instead of jnp.stack)
     reason: str = ""          # why the engine was picked/pinned
 
     def as_cell_dict(self) -> dict:
@@ -290,18 +293,29 @@ def plan_dhopm3(shape, *, p: int = 1, s: int | None = None, batch: int = 1,
 
 
 def plan_compress(b: int, shape, *, itemsize: int = 4,
-                  backend: str | None = None) -> Plan:
+                  backend: str | None = None, churn: bool = False) -> Plan:
     """Plan for one grad_compress bucket: B stacked same-shape views.
 
     The engine is pinned to ``mulsum`` on EVERY backend — grad_compress's
     bucketed==per-leaf bitwise guarantee depends on the order-explicit
     accumulation tree, which no other engine provides — so auto only ever
-    decides the bucketing here."""
+    decides the bucketing (and how the bucket is *assembled*) here.
+
+    ``arena`` resolves the assembly: a bucketed B > 1 group fills a
+    persistent donated ``[B, ...]`` arena buffer in place
+    (:mod:`repro.core.arena`) instead of paying the ``jnp.stack`` round
+    trip — the fill is value-identical, so the bitwise guarantee is
+    unaffected.  Singleton buckets (nothing to stack) and caller-declared
+    shape churn (``churn=True`` — every event a new ``(B, view)`` key, so
+    every fill would be a cold allocation) keep the stack path, as does
+    ``REPRO_TVC_DISABLE_PLAN`` (legacy static behavior)."""
     report.note("plan.compress")
+    disabled = calibration.disabled()
     base = _plan_batched(b, tuple(shape), len(shape) - 1, itemsize,
-                         _backend(backend), calibration.disabled())
+                         _backend(backend), disabled)
+    arena = bool(base.bucket and b > 1 and not churn and not disabled)
     return dataclasses.replace(
-        base, kind="compress", impl="mulsum",
+        base, kind="compress", impl="mulsum", arena=arena,
         reason="bitwise-batchable engine (grad_compress guarantee)")
 
 
@@ -389,6 +403,12 @@ def plan_for_cell(cell: dict, backend: str | None = None) -> dict:
     elif kind == "serving":
         # the serve engine's KV-compression groups plan exactly like
         # grad_compress buckets: B stacked same-view tensors, mulsum pinned
+        p = plan_compress(cell["batch"], shape, itemsize=itemsize,
+                          backend=backend)
+    elif kind == "arena":
+        # stacked-vs-arena-filled compression step cells: same compress
+        # plan; the arena-vs-stack resolution itself is gated separately
+        # via the cell's recorded ``arena_plan`` field
         p = plan_compress(cell["batch"], shape, itemsize=itemsize,
                           backend=backend)
     else:

@@ -47,6 +47,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import memory_model as mm
+from repro.core.arena import BatchedArena
 from repro.core.bucketing import group_indices, pad_extent, tensor_view
 from repro.core.dhopm import hopm3_batched, hopm_init_factors
 from repro.dist.sharding import _dp_entry, cache_specs
@@ -146,6 +147,11 @@ class ServeStats:
     comp_streamed_bytes: int = 0    # modeled (hopm_streamed_elems_sweep)
     comp_dense_bytes: int = 0       # dense KV context footprint
     comp_factor_bytes: int = 0      # rank-1 factor footprint
+    arena_fills: int = 0            # group operand fills through the arena
+    arena_cold_fills: int = 0       # first-allocation fills (cost one stack)
+    stack_copy_removed_bytes: int = 0
+    #   bucket-assembly copy traffic the arena removed vs jnp.stack
+    #   (memory_model.bucket_stack_elems - arena_fill_elems, per fill)
     step_us: list = dataclasses.field(default_factory=list)
 
     @property
@@ -159,6 +165,27 @@ def _compress_group(A_b, xs_b, *, sweeps: int, impl: str):
     contexts: launch count per sweep independent of B, bitwise-equal to B
     per-slot ``hopm3`` runs under the ``mulsum`` engine."""
     return hopm3_batched(A_b, list(xs_b), sweeps=sweeps, impl=impl)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("names", "stops", "view"))
+def _arena_fill_kv(buf, kv, slots, *, names, stops, view):
+    """Fused donated arena fill straight from the slot-stacked cache: one
+    program per (B, view, member-pattern) that indexes each member's slot
+    row, drops the batch-1 dim, slices the timeline to its stop, and writes
+    the reshaped view into the donated ``[B, *view]`` buffer in place —
+    no eager per-slot slice materialization, no ``jnp.stack``, no
+    ``concatenate`` primitive in the jaxpr.  Bitwise-identical rows to the
+    eager ``_kv_view`` + ``jnp.stack`` path (pure indexing/reshape, no
+    arithmetic).  Retraces per member pattern; ``ctx_quantum`` padding keeps
+    the pattern count small."""
+    for r, (name, stop) in enumerate(zip(names, stops)):
+        a = lax.dynamic_index_in_dim(kv[name], slots[r], axis=0,
+                                     keepdims=False)
+        a = a.reshape(a.shape[:1] + a.shape[2:])       # drop batch-1 dim
+        a = lax.slice_in_dim(a, 0, stop, axis=a.ndim - 2)
+        buf = buf.at[r].set(a.reshape(view).astype(buf.dtype))
+    return buf
 
 
 @functools.partial(jax.jit,
@@ -215,6 +242,10 @@ class DecodeEngine:
         self._step = jax.jit(_step, donate_argnums=(1,))
         self._step_slots = jax.jit(_step_slots, donate_argnums=(1,))
         self._adopt = jax.jit(_adopt, donate_argnums=(0,))
+        # persistent donated [B, *view] operand/factor buffers for the
+        # retirement compression groups (repro.core.arena); keys are the
+        # same (B, tensor_view, dtype) the groups bucket under
+        self._arena = BatchedArena()
 
     # -- caches -------------------------------------------------------------
 
@@ -326,43 +357,116 @@ class DecodeEngine:
             out[name] = lax.slice_in_dim(a, 0, stop, axis=a.ndim - 2)
         return out
 
-    def _compress_retired(self, items, *, sweeps: int, impl: str,
-                          stats: ServeStats):
+    @staticmethod
+    def _kv_sliced_shape(leaf, ctx_padded: int):
+        """The shape :meth:`_kv_context` would slice leaf ``[i]`` to —
+        computed statically (no materialization): drop the slot and batch-1
+        dims, clamp the timeline to the (quantum-padded) context."""
+        shp = tuple(leaf.shape[1:])                   # drop slot dim
+        shp = shp[:1] + shp[2:]                       # drop batch-1 dim
+        stop = min(ctx_padded, shp[-2])
+        return shp[:-2] + (stop,) + shp[-1:], stop
+
+    def _kv_view(self, caches, name: str, slot: int, stop: int, view):
+        """One member's context, eagerly sliced and reshaped to its
+        bucketing view — the legacy (stacked-path) assembly unit."""
+        a = caches[name][slot]
+        a = a.reshape(a.shape[:1] + a.shape[2:])
+        a = lax.slice_in_dim(a, 0, stop, axis=a.ndim - 2)
+        return a.reshape(view)
+
+    def _compress_retired(self, items, *, caches, sweeps: int, impl: str,
+                          arena, stats: ServeStats):
         """Compress this step's retirements: bucket same-view contexts,
         run ONE batched rank-1 chain per group, unstack the factors.
 
-        ``items``: list of (slot_record, {leaf: context_view}).  Returns
-        one ``{leaf: CompressedKV}`` dict per item, order-aligned."""
-        flat = []       # (item_idx, leaf_name, view_array, true_ctx)
-        for idx, (rec, leaves) in enumerate(items):
-            for name, a in leaves.items():
-                view = tensor_view(a.shape, _KV_MAX_ORDER)
-                flat.append((idx, name, a.reshape(view), rec["ctx"]))
+        ``items``: list of (slot_record, slot_index, padded_ctx).  Returns
+        one ``{leaf: CompressedKV}`` dict per item, order-aligned.
+
+        Group assembly is arena-or-stack per group (``arena`` explicit flag
+        wins; ``"auto"`` asks :func:`repro.plan.planner.plan_compress` —
+        arena for B > 1 groups): the arena path fills a persistent donated
+        ``[B, *view]`` operand buffer straight from the cache leaves
+        (:func:`_arena_fill_kv` — no eager slice materialization, no
+        stack) and scatter-fills the per-mode init-factor stacks through
+        the same arena; the stacked path is the legacy eager
+        slice-and-``jnp.stack`` assembly.  Both feed bitwise-identical
+        operands into ``_compress_group``, so the factors match bit for
+        bit."""
+        flat = []   # (item_idx, leaf_name, slot, stop, view, dtype, ctx)
+        if isinstance(caches, dict):
+            for idx, (rec, slot, ctx_p) in enumerate(items):
+                for name, leaf in caches.items():
+                    if name not in _KV_TIMELINE_KEYS \
+                            or not hasattr(leaf, "ndim"):
+                        continue
+                    sliced, stop = self._kv_sliced_shape(leaf, ctx_p)
+                    view = tensor_view(sliced, _KV_MAX_ORDER)
+                    flat.append((idx, name, slot, stop, view,
+                                 jnp.dtype(leaf.dtype).name, rec["ctx"]))
         results: list[dict] = [{} for _ in items]
-        groups = group_indices(
-            (tuple(a.shape), str(a.dtype)) for _, _, a, _ in flat)
-        for (view, _dt), members in groups.items():
+        groups = group_indices((f[4], f[5]) for f in flat)
+        for (view, dname), members in groups.items():
             b = len(members)
+            itemsize = jnp.dtype(dname).itemsize
             eng = impl
-            if eng == "auto":
+            use_arena = arena
+            if eng == "auto" or use_arena == "auto":
                 from repro.plan import planner
-                eng = planner.plan_compress(
-                    b, view, itemsize=flat[members[0]][2].dtype.itemsize).impl
-            A_b = jnp.stack([flat[m][2] for m in members])
+                plan = planner.plan_compress(b, view, itemsize=itemsize)
+                eng = plan.impl if eng == "auto" else eng
+                use_arena = plan.arena if use_arena == "auto" \
+                    else bool(use_arena)
             xs0 = []
             for m in members:
-                idx, name, _, _ = flat[m]
+                idx, name, _, _, _, _, _ = flat[m]
                 rid = items[idx][0]["rid"]
                 key = _request_key(f"kv/{rid}/{name}", 0)
                 xs0.append(hopm_init_factors(key, view)[0])
-            xs_b = tuple(jnp.stack([x[mode] for x in xs0])
-                         for mode in range(len(view)))
+            A_b = xs_b = None
+            if use_arena:
+                buf, cold = self._arena.acquire("kv", b, view, dname)
+                if buf is not None:
+                    names = tuple(flat[m][1] for m in members)
+                    stops = tuple(flat[m][3] for m in members)
+                    kv = {n: caches[n] for n in set(names)}
+                    slots_arr = jnp.asarray(
+                        [flat[m][2] for m in members], jnp.int32)
+                    buf = _arena_fill_kv(buf, kv, slots_arr, names=names,
+                                         stops=stops, view=view)
+                    # one event per group: ranks=1 prices the operand
+                    # stack AND the per-mode factor gathers it replaces
+                    self._arena.commit("kv", b, view, dname, buf,
+                                       cold=cold, ranks=1)
+                    A_b = buf
+                    # factor stacks ride the arena too (accounting already
+                    # covered by the group event's ranks term)
+                    xs_b = tuple(
+                        self._arena.fill_rows(
+                            ("kv_x", mode), [x[mode] for x in xs0],
+                            account=False)
+                        for mode in range(len(view)))
+                    stats.arena_fills += 1
+                    stats.arena_cold_fills += int(cold)
+                    stats.stack_copy_removed_bytes += (
+                        mm.bucket_stack_elems(b, view, ranks=1)
+                        - mm.arena_fill_elems(b, view, ranks=1, cold=cold)
+                    ) * itemsize
+            if A_b is None:     # stacked path (or arena key-table full)
+                A_b = jnp.stack([
+                    self._kv_view(caches, flat[m][1], flat[m][2],
+                                  flat[m][3], view) for m in members])
+                xs_b = tuple(jnp.stack([x[mode] for x in xs0])
+                             for mode in range(len(view)))
+            if xs_b is None or any(x is None for x in xs_b):
+                # factor-arena overflow: fall back to stacking factors
+                xs_b = tuple(jnp.stack([x[mode] for x in xs0])
+                             for mode in range(len(view)))
             xs, lam = _compress_group(A_b, xs_b, sweeps=sweeps, impl=eng)
-            itemsize = A_b.dtype.itemsize
             dense = int(np.prod(view)) * itemsize
             factor = mm.rank1_factor_elems(view) * itemsize
             for pos, m in enumerate(members):
-                idx, name, _, ctx = flat[m]
+                idx, name, _, _, _, _, ctx = flat[m]
                 results[idx][name] = CompressedKV(
                     xs=tuple(x[pos] for x in xs), lam=lam[pos],
                     view=view, ctx=ctx, dense_bytes=dense,
@@ -379,7 +483,8 @@ class DecodeEngine:
     def serve(self, queue, *, temperature: float = 0.0,
               top_k: Optional[int] = None, seed: int = 0,
               compress: bool = True, comp_sweeps: int = 2,
-              comp_impl: str = "auto", ctx_quantum: int = 16):
+              comp_impl: str = "auto", comp_arena: str | bool = "auto",
+              ctx_quantum: int = 16):
         """Serve a :class:`RequestQueue` (or iterable of :class:`Request`)
         through the slot batch until drained.  Returns
         ``(results, stats)`` — one :class:`ServeResult` per request in
@@ -390,7 +495,10 @@ class DecodeEngine:
         cache), step every slot through one vmapped ``decode_step`` launch,
         sample per-slot request-seeded tokens, retire EOS/budget-exhausted
         slots, and compress this step's retired KV contexts — one
-        ``hopm3_batched`` launch chain per same-view group."""
+        ``hopm3_batched`` launch chain per same-view group, its operands
+        assembled through the persistent donated batched-operand arena
+        (``comp_arena``: ``True``/``False`` forces arena/stack assembly,
+        ``"auto"`` asks the planner; both assemblies are bitwise-equal)."""
         if not isinstance(queue, RequestQueue):
             queue = RequestQueue(queue)
         B = self.batch_size
@@ -453,10 +561,10 @@ class DecodeEngine:
                 for i, rec in done:
                     ctx_p = pad_extent(rec["ctx"], ctx_quantum,
                                        cap=self.max_seq)
-                    items.append((rec, self._kv_context(caches, i, ctx_p)
-                                  if isinstance(caches, dict) else {}))
+                    items.append((rec, i, ctx_p))
                 comp = self._compress_retired(
-                    items, sweeps=comp_sweeps, impl=comp_impl, stats=stats)
+                    items, caches=caches, sweeps=comp_sweeps,
+                    impl=comp_impl, arena=comp_arena, stats=stats)
             for (i, rec), c in zip(done, comp):
                 results.append(ServeResult(
                     rid=rec["rid"], prompt_len=rec["prompt_len"],

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import arena as arena_mod
 from repro.core import memory_model as mm
 from repro.core.bucketing import tensor_view
 from repro.core.dhopm import (
@@ -58,6 +59,18 @@ class CompressorCfg:
     #                              forces the per-leaf reference path;
     #                              "auto" asks the planner's
     #                              launch-amortization model per bucket)
+    arena: bool | str = "auto"   # bucket assembly: scatter rows into the
+    #                              batched-operand arena layout
+    #                              (repro.core.arena.assemble_rows — an
+    #                              in-place dynamic-update-slice chain,
+    #                              value-identical to jnp.stack but with no
+    #                              concatenate in the jaxpr, so a donated
+    #                              train step writes bucket rows in place)
+    #                              instead of the jnp.stack round trip.
+    #                              "auto" asks the planner
+    #                              (plan_compress(...).arena: on for
+    #                              bucketed B > 1 groups, off for singleton
+    #                              buckets / shape churn / disabled plans)
     splits: tuple[tuple[str, int], ...] = ()
     #   1-D split annotations: (leaf path string -> split dim in *view*
     #   coordinates).  An annotated leaf is a per-rank SLICE of an
@@ -88,6 +101,41 @@ def _use_bucket(cfg: CompressorCfg, b: int, view, itemsize: int) -> bool:
         return bool(cfg.bucket)
     from repro.plan import planner
     return planner.plan_compress(b, view, itemsize=itemsize).bucket
+
+
+def _use_arena(cfg: CompressorCfg, b: int, view, itemsize: int) -> bool:
+    """Resolve the bucket-assembly decision (explicit flag wins; ``"auto"``
+    asks the planner — arena for bucketed B > 1 groups, stack otherwise)."""
+    if cfg.arena != "auto":
+        return bool(cfg.arena)
+    from repro.plan import planner
+    return planner.plan_compress(b, view, itemsize=itemsize).arena
+
+
+def _assemble(rows, use_arena: bool):
+    """Bucket-assembly seam: the arena's in-place scatter discipline or the
+    legacy ``jnp.stack`` — bitwise-identical contents either way."""
+    if use_arena:
+        return arena_mod.assemble_rows(rows)
+    return jnp.stack(rows)
+
+
+def _gather_warm_factors(ss, cfg: CompressorCfg, nmodes: int,
+                         use_arena: bool):
+    """ONE per-bucket gather of every deflation rank's warm-start factors:
+    ``(rank, B, n_m)`` per mode, sliced per rank inside the deflation loop.
+    Only the residual changes between ranks, so re-gathering d ``(B, n_m)``
+    factor stacks on every rank (the old per-rank ``jnp.stack``) was pure
+    repeated assembly — hoisting it prices the factor gather ONCE per step
+    (the ``ranks`` term of
+    :func:`repro.core.memory_model.bucket_stack_elems`)."""
+    B = len(ss)
+    out = []
+    for m in range(nmodes):
+        flat = _assemble([s["xs"][r][m] for r in range(cfg.rank)
+                          for s in ss], use_arena)
+        out.append(flat.reshape((cfg.rank, B) + flat.shape[1:]))
+    return out
 
 
 def _split_for(path_str: str, cfg: CompressorCfg) -> int | None:
@@ -168,9 +216,22 @@ def wire_bytes_summary(params, cfg: CompressorCfg, p_dp: int) -> dict:
     Eq. 1 all-gather of the n_j/p slice, and their dense baseline is the
     all-gather that would assemble the sharded gradient.  The closed form
     is regression-tested against a counted trace of the runtime's
-    collective calls (``_dist_checks``)."""
+    collective calls (``_dist_checks``).
+
+    Alongside the wire, the summary prices the LOCAL bucket-assembly copy
+    traffic per step (satellite of the arena work):
+    ``assembly_stack_bytes`` is what the legacy ``jnp.stack`` path pays to
+    assemble every bucketed group (F32 assembly;
+    :func:`repro.core.memory_model.bucket_stack_elems` with the compressor's
+    deflation rank — residual stack plus the hoisted once-per-step factor
+    gather), ``assembly_bytes`` is what the *resolved* path pays (arena
+    buckets scatter in place: a warm fill adds zero copy elements), and
+    ``stack_copy_removed_bytes`` is the difference.  The stack closed form
+    is regression-tested against counted ``concatenate`` traffic in the
+    traced jaxpr (``tests/test_arena.py``)."""
     prec = get_policy(cfg.prec)
     dense = compressed = 0
+    buckets: dict = {}   # mirror of compress_and_sync's grouping rule
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         s_dim = _split_for(jax.tree_util.keystr(path), cfg)
         n = math.prod(leaf.shape)
@@ -187,12 +248,27 @@ def wire_bytes_summary(params, cfg: CompressorCfg, p_dp: int) -> dict:
                            * mm.dhopm_wire_bytes_sweep(
                                vshape, p_dp, prec.storage_bytes,
                                split=s_dim))
+            bkey = (_tensor_view(leaf.shape, cfg),
+                    jnp.dtype(leaf.dtype).name, s_dim)
+            buckets[bkey] = buckets.get(bkey, 0) + 1
         elif s_dim is None:
             compressed += coll.wire_bytes_allreduce(
                 n, p_dp, prec.storage_bytes, coll.allreduce_algo(n, p_dp))
         # ineligible split leaves are already-synced shards: no wire at all
+    assembly_stack = assembly = 0
+    for (view, dname, s_dim), b in buckets.items():
+        isz = jnp.dtype(dname).itemsize
+        if b > 1 and _use_bucket(cfg, b, view, isz):
+            # assembly runs in F32 (error feedback accumulates in F32)
+            e = mm.bucket_stack_elems(b, view, ranks=cfg.rank) * 4
+            assembly_stack += e
+            if not _use_arena(cfg, b, view, isz):
+                assembly += e   # warm arena fills add zero copy elements
     return {"dense_bytes": dense, "compressed_bytes": compressed,
-            "ratio": dense / max(1, compressed)}
+            "ratio": dense / max(1, compressed),
+            "assembly_stack_bytes": assembly_stack,
+            "assembly_bytes": assembly,
+            "stack_copy_removed_bytes": assembly_stack - assembly}
 
 
 def _rank1_outer(xs, lam):
@@ -269,9 +345,10 @@ def _compress_leaf_split(g, s, cfg: CompressorCfg, axis_name: str, prec, p,
 
 
 def _compress_bucket_split(gs, ss, cfg: CompressorCfg, axis_name: str, prec,
-                           p, s_dim: int):
-    """One bucket of B >= 2 same-view *split-annotated* leaves, stacked and
-    compressed through ONE split-aware :func:`hopm3_batched` chain per
+                           p, s_dim: int, use_arena: bool = False):
+    """One bucket of B >= 2 same-view *split-annotated* leaves, assembled
+    (arena scatter or stack — bitwise-identical contents) and compressed
+    through ONE split-aware :func:`hopm3_batched` chain per
     deflation rank — the batched walker runs the identical Algorithm 1
     schedule as B per-leaf :func:`hopm3_sharded` chains (stacked Eq. 2
     slices, stacked delayed reductions dispatched on the per-leaf n_j,
@@ -281,14 +358,14 @@ def _compress_bucket_split(gs, ss, cfg: CompressorCfg, axis_name: str, prec,
     doubling, or p == 1) — the same guarantee as the partial-mode buckets."""
     B = len(gs)
     vshape = _tensor_view(gs[0].shape, cfg)
-    resid_b = jnp.stack([
+    resid_b = _assemble([
         (g.astype(F32) + s["e"].astype(F32)).reshape(vshape)
-        for g, s in zip(gs, ss)])
+        for g, s in zip(gs, ss)], use_arena)
     approx_b = jnp.zeros((B,) + tuple(vshape), F32)
+    xs_all = _gather_warm_factors(ss, cfg, len(vshape), use_arena)
     new_xs_b = []
     for r in range(cfg.rank):
-        xs0 = [jnp.stack([s["xs"][r][m] for s in ss])
-               for m in range(len(vshape))]
+        xs0 = [xs_all[m][r] for m in range(len(vshape))]
         xs_r, lam = hopm3_batched(
             resid_b - approx_b, xs0, axis_name=axis_name, split=s_dim,
             sweeps=cfg.sweeps, impl=_engine(cfg), prec=prec)
@@ -306,8 +383,10 @@ def _compress_bucket_split(gs, ss, cfg: CompressorCfg, axis_name: str, prec,
     return outs
 
 
-def _compress_bucket(gs, ss, cfg: CompressorCfg, axis_name: str, prec, p):
-    """One shape bucket of B >= 2 same-view leaves, stacked and compressed
+def _compress_bucket(gs, ss, cfg: CompressorCfg, axis_name: str, prec, p,
+                     use_arena: bool = False):
+    """One shape bucket of B >= 2 same-view leaves, assembled (arena
+    scatter or stack — bitwise-identical contents) and compressed
     through ONE :func:`hopm3_batched` chain per deflation rank — one
     (batched) contraction launch per chain step for the whole bucket
     instead of B per-leaf chains.  The batched walker runs the exact same
@@ -319,14 +398,14 @@ def _compress_bucket(gs, ss, cfg: CompressorCfg, axis_name: str, prec, p):
     chunk boundaries move when B leaves stack)."""
     B = len(gs)
     vshape = _tensor_view(gs[0].shape, cfg)
-    resid_b = jnp.stack([
+    resid_b = _assemble([
         (g.astype(F32) + s["e"].astype(F32)).reshape(vshape)
-        for g, s in zip(gs, ss)])
+        for g, s in zip(gs, ss)], use_arena)
     approx_b = jnp.zeros((B,) + tuple(vshape), F32)
+    xs_all = _gather_warm_factors(ss, cfg, len(vshape), use_arena)
     new_xs_b = []
     for r in range(cfg.rank):
-        xs0 = [jnp.stack([s["xs"][r][m] for s in ss])
-               for m in range(len(vshape))]
+        xs0 = [xs_all[m][r] for m in range(len(vshape))]
         xs_r, lam = hopm3_batched(
             resid_b - approx_b / p, xs0, axis_name=axis_name,
             sweeps=cfg.sweeps, impl=_engine(cfg), prec=prec, partial=True)
@@ -402,11 +481,14 @@ def compress_and_sync(grads, state, cfg: CompressorCfg, axis_name: str):
         ss = [flat_s[i] for i in idxs]
         if len(idxs) > 1 and _use_bucket(cfg, len(idxs), key[0],
                                          jnp.dtype(key[1]).itemsize):
+            use_arena = _use_arena(cfg, len(idxs), key[0],
+                                   jnp.dtype(key[1]).itemsize)
             if s_dim is None:
-                results = _compress_bucket(gs, ss, cfg, axis_name, prec, p)
+                results = _compress_bucket(gs, ss, cfg, axis_name, prec, p,
+                                           use_arena)
             else:
                 results = _compress_bucket_split(gs, ss, cfg, axis_name,
-                                                 prec, p, s_dim)
+                                                 prec, p, s_dim, use_arena)
         elif s_dim is None:
             results = [_compress_leaf(g, s, cfg, axis_name, prec, p)
                        for g, s in zip(gs, ss)]

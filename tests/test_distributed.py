@@ -42,6 +42,8 @@ EXPECTED = [
     "elastic_reshard_restore",
     "serve_compress_bucketed_bitwise",
     "slot_recycle_prefill_sharded",
+    "grad_compress_arena_bitwise",
+    "serve_compress_arena_bitwise",
 ]
 
 
