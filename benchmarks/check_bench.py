@@ -116,7 +116,6 @@ import sys
 from repro.core.memory_model import (
     arena_fill_elems,
     bucket_stack_elems,
-    dhopm_launches_per_sweep,
     dhopm_time_sweep,
     hopm_streamed_elems_sweep,
     simulate_sweep,
@@ -128,6 +127,7 @@ from repro.core.memory_model import (
 from repro.core.mixed_precision import get_policy
 from repro.plan import calibration as plan_calibration
 from repro.plan import planner as plan_planner
+from repro.verify.rules import expected_launches
 
 CORE_KEYS = frozenset({
     "kind", "order", "mode", "dtype", "layout", "shape", "blocks",
@@ -307,12 +307,15 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                     f"{name}: launch-amortization model predicts no win "
                     f"(predicted_speedup={c['predicted_speedup']})")
         if c["kind"] == "dhopm3_overlap":
-            # launch schedule: both walkers must match the closed form
-            want = c["sweeps"] * dhopm_launches_per_sweep(
-                c["order"], c["split"], c["fused"],
-                overlap_chunks=c["overlap_chunks"])
-            want_sync = c["sweeps"] * dhopm_launches_per_sweep(
-                c["order"], c["split"], c["fused"])
+            # launch schedule: both walkers must match the closed form,
+            # through the same expectation the static verifier gates on
+            want = expected_launches({
+                "kind": "chain", "d": c["order"], "s": c["split"],
+                "fuse_pairs": c["fused"], "sweeps": c["sweeps"],
+                "overlap_chunks": c["overlap_chunks"]})
+            want_sync = expected_launches({
+                "kind": "chain", "d": c["order"], "s": c["split"],
+                "fuse_pairs": c["fused"], "sweeps": c["sweeps"]})
             if c["launches"] != want or c["sync_launches"] != want_sync:
                 fails.append(
                     f"{name}: launch counts ({c['launches']}, "
@@ -344,8 +347,10 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
             # at sweeps x dhopm_launches_per_sweep(d_view) — independent of
             # the group size (the amortization guarantee; a per-slot loop
             # would scale with B_g and fail here immediately)
-            want = sum(c["sweeps"] * dhopm_launches_per_sweep(len(view))
-                       for _b, view in c["comp_events"])
+            want = sum(
+                expected_launches({"kind": "chain", "d": len(view),
+                                   "sweeps": c["sweeps"]})
+                for _b, view in c["comp_events"])
             if c["comp_launches"] != want:
                 fails.append(
                     f"{name}: comp_launches {c['comp_launches']} != "
@@ -388,8 +393,9 @@ def check(payload: dict, ref: dict | None, *, acct_tol: float,
                     f"recomputed from fill_events (bucket_stack_elems - "
                     f"arena_fill_elems per event)")
             want_l = sum(
-                c["ranks"] * c["sweeps"] * dhopm_launches_per_sweep(
-                    len(view))
+                c["ranks"] * expected_launches(
+                    {"kind": "chain", "d": len(view),
+                     "sweeps": c["sweeps"]})
                 for _b, view, _cold in c["fill_events"])
             if c["launches"] != want_l:
                 fails.append(

@@ -25,7 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist import collectives as coll
 from .mixed_precision import F32, Precision, get_policy
-from .tvc import tvc, tvc2, tvc2_batched, tvc_batched, tvc_shape
+from .tvc import tvc, tvc2, tvc2_batched, tvc_batched
 
 __all__ = [
     "ShardState", "dtvc_local", "dtvc2_local", "dtvc_local_batched",

@@ -16,7 +16,6 @@ output rows that are sliced away on assembly (k != s).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 #: TPU-oriented quanta: prefer full lane multiples, then sublane multiples.

@@ -25,7 +25,6 @@ storage, high-precision accumulation).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Sequence
 
 import jax

@@ -5,7 +5,6 @@ step functions are lowered with .lower(...) only."""
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

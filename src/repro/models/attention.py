@@ -7,7 +7,6 @@ softmax run in f32 (storage stays bf16), per the mixed-precision discipline.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

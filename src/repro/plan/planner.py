@@ -43,7 +43,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 
 from . import calibration, report
 

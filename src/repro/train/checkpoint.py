@@ -12,7 +12,6 @@ import json
 import pathlib
 import shutil
 import threading
-from typing import Any
 
 import numpy as np
 import jax

@@ -34,7 +34,7 @@ from repro.core.dhopm import (
     hopm3_sharded,
     hopm_init_factors,
 )
-from repro.core.mixed_precision import F32 as PREC_F32, Precision, get_policy
+from repro.core.mixed_precision import Precision, get_policy
 from repro.dist import collectives as coll
 
 F32 = jnp.float32

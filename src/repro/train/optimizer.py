@@ -5,7 +5,6 @@ state shards like the params (GSPMD propagates the param specs)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

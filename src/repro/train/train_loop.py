@@ -18,7 +18,7 @@ import dataclasses
 import itertools
 import time
 from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +26,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.dist import collectives as coll
-from repro.dist.sharding import axis_env_for, batch_spec, named_shardings, param_specs
-from repro.models import extra_input_key, registry
+from repro.dist.sharding import named_shardings
+from repro.models import registry
 from . import checkpoint as ckpt_mod
 from . import grad_compress as gc_mod
 from . import optimizer as opt_mod

@@ -1,0 +1,20 @@
+"""Static verification of the repo's structural performance contracts.
+
+The paper's data-movement claims (zero-copy streaming, launch counts
+independent of batch size, per-hop mixed-precision wire demotion) are
+*statically decidable* from traced jaxprs.  This package turns the one-off
+jaxpr asserts the test suite accumulated into a real analyzer:
+
+- :mod:`repro.verify.walker` — the single recursive eqn walker every
+  counting check in the repo goes through,
+- :mod:`repro.verify.rules` — the rule registry (severity, waivers) with
+  expectations recomputed from ``core.memory_model`` closed forms,
+- :mod:`repro.verify.entrypoints` — the traced entry points under check,
+- ``python -m repro.verify`` — the CLI / CI gate with a JSON report.
+"""
+from .walker import (  # noqa: F401
+    count_named_calls, count_primitive, iter_eqns, primitive_counts,
+)
+from .rules import Finding, Rule, RULES, load_waivers, run_rules  # noqa: F401
+from .entrypoints import ENTRYPOINTS, EntryPoint, get_entrypoints  # noqa: F401
+from .report import run_entrypoint, run_verify  # noqa: F401

@@ -1,0 +1,82 @@
+"""CLI: ``python -m repro.verify`` — the static verification gate.
+
+Examples::
+
+    python -m repro.verify --all
+    python -m repro.verify --list
+    python -m repro.verify --entry dhopm3_p8_doubling_f32 --json report.json
+    python -m repro.verify --tag p8 --real-mesh   # under 8 devices
+    python -m repro.verify --all --waivers verify_waivers.json
+
+Exit status is 0 iff every entry point passes (waived findings do not
+block; warnings do not block).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .entrypoints import get_entrypoints
+from .report import run_verify
+from .rules import RULES, load_waivers
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.verify",
+        description="statically verify kernel/wire/arena contracts "
+                    "from traced jaxprs",
+    )
+    ap.add_argument("--all", action="store_true",
+                    help="run every entry point (the default)")
+    ap.add_argument("--entry", action="append", default=None,
+                    help="run a single entry point (repeatable)")
+    ap.add_argument("--tag", action="append", default=None,
+                    help="restrict to entry points carrying a tag")
+    ap.add_argument("--list", action="store_true",
+                    help="list entry points and rules, then exit")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full JSON report to PATH")
+    ap.add_argument("--waivers", metavar="PATH",
+                    help="JSON waiver file "
+                         '([{"entrypoint","rule","reason"}])')
+    ap.add_argument("--real-mesh", action="store_true",
+                    help="trace p=8 entries over a real device mesh "
+                         "(needs >= 8 devices)")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        print("rules:")
+        for r in RULES.values():
+            print(f"  {r.rule_id:<22} [{r.severity}] {r.description}")
+        print("entry points:")
+        for ep in get_entrypoints():
+            tags = ",".join(sorted(ep.tags))
+            print(f"  {ep.name:<28} [{tags}] rules: {', '.join(ep.rules)}")
+        return 0
+
+    waivers = load_waivers(args.waivers) if args.waivers else None
+    report = run_verify(args.entry, args.tag, waivers,
+                        real_mesh=args.real_mesh)
+
+    for r in report["entrypoints"]:
+        mark = "ok  " if r["ok"] else "FAIL"
+        print(f"{mark} {r['entrypoint']:<28} rules: {', '.join(r['rules'])}")
+        for f in r["findings"]:
+            w = " (waived)" if f["waived"] else ""
+            print(f"      {f['rule']} [{f['severity']}]{w}: {f['message']}")
+    s = report["summary"]
+    print(f"{s['entrypoints']} entry points, {s['rules_checked']} rule "
+          f"checks, {s['findings']} finding(s), {s['waived']} waived")
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"report written to {args.json}")
+
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

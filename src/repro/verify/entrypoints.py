@@ -1,0 +1,323 @@
+"""The traced entry points the static verifier proves contracts over.
+
+Each entry point builds a :class:`~repro.verify.rules.TraceCtx` — a jaxpr
+traced at a representative (d, s, B, overlap, fuse_pairs) point plus the
+rule parameters whose expectations the rules recompute from the
+``memory_model`` closed forms.
+
+Distributed (p=8) entries trace through ``jax.sharding.AbstractMesh`` by
+default, so the full schedule is verified on a single device; the
+8-virtual-device distributed suite re-runs the same entries over a real
+mesh (``real_mesh=True``) to cover concrete shard_map lowering too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import dhopm as dh
+from repro.core.arena import _scatter_rows, assemble_rows
+from repro.core.tvc import tvc, tvc2, tvc_batched
+from repro.train import grad_compress as gc
+
+from .rules import TraceCtx
+
+P8 = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    name: str
+    build: Callable[..., TraceCtx]
+    rules: tuple
+    tags: frozenset = frozenset()
+
+    def ctx(self, *, real_mesh: bool = False) -> TraceCtx:
+        if "p8" in self.tags:
+            return self.build(_mesh(P8, real=real_mesh))
+        return self.build()
+
+
+def _mesh(p: int, *, real: bool = False):
+    if real:
+        return jax.make_mesh((p,), ("x",))
+    return jax.sharding.AbstractMesh((("x", p),))
+
+
+def _zeros(shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def _vecs(shape):
+    return [jnp.zeros((n,), jnp.float32) for n in shape]
+
+
+ENTRYPOINTS: list[EntryPoint] = []
+
+
+def entrypoint(name, rules, tags=()):
+    def deco(fn):
+        ENTRYPOINTS.append(
+            EntryPoint(name, fn, tuple(rules), frozenset(tags)))
+        return fn
+
+    return deco
+
+
+# ---- TVC kernels: mode-oblivious single launch, zero padding ---------------
+
+@entrypoint("tvc_pallas_m1", ["no_pad", "launch_count"], tags=["kernel"])
+def _tvc_m1():
+    shape = (8, 6, 16)
+    jx = jax.make_jaxpr(
+        lambda A, x: tvc(A, x, 1, impl="pallas"))(_zeros(shape), _zeros(6))
+    return TraceCtx("tvc_pallas_m1", jx, {"launch": {"kind": "tvc"}})
+
+
+@entrypoint("tvc_pallas_epilogue", ["no_pad", "launch_count"],
+            tags=["kernel"])
+def _tvc_epilogue():
+    shape = (8, 6, 16)
+    y = jnp.ones((8, 16), jnp.float32)
+    jx = jax.make_jaxpr(
+        lambda A, x, y: tvc(A, x, 1, impl="pallas", alpha=0.5, beta=2.0,
+                            y=y))(_zeros(shape), _zeros(6), y)
+    return TraceCtx("tvc_pallas_epilogue", jx, {"launch": {"kind": "tvc"}})
+
+
+@entrypoint("tvc2_pallas_pair", ["no_pad", "launch_count"], tags=["kernel"])
+def _tvc2_pair():
+    shape = (8, 6, 16)
+    jx = jax.make_jaxpr(
+        lambda A, x1, x2: tvc2(A, x1, 1, x2, 2, impl="pallas"))(
+            _zeros(shape), _zeros(6), _zeros(16))
+    return TraceCtx("tvc2_pallas_pair", jx, {"launch": {"kind": "tvc"}})
+
+
+@entrypoint("tvc_batched_pallas_B8", ["no_pad", "launch_count"],
+            tags=["kernel"])
+def _tvc_batched():
+    shape = (8, 6, 16)
+    jx = jax.make_jaxpr(
+        lambda A, x: tvc_batched(A, x, 1, impl="pallas"))(
+            _zeros((8,) + shape), _zeros((8, 6)))
+    return TraceCtx("tvc_batched_pallas_B8", jx, {"launch": {"kind": "tvc"}})
+
+
+# ---- HOPM3 sweep chains: closed-form launch counts -------------------------
+
+@entrypoint("hopm3_pallas_d4_fused", ["no_pad", "launch_count"],
+            tags=["kernel"])
+def _hopm3_fused():
+    shape = (8, 6, 16, 4)
+    jx = jax.make_jaxpr(
+        lambda A, *x: dh.hopm3(A, list(x), sweeps=2, impl="pallas",
+                               fuse_pairs=True)[0])(
+            _zeros(shape), *_vecs(shape))
+    return TraceCtx("hopm3_pallas_d4_fused", jx, {
+        "pad_scope": "kernel",
+        "launch": {"kind": "chain", "d": 4, "s": None,
+                   "fuse_pairs": "auto", "sweeps": 2},
+    })
+
+
+@entrypoint("hopm3_mulsum_bitwise", ["mulsum_determinism", "no_stack"],
+            tags=["kernel"])
+def _hopm3_mulsum():
+    shape = (8, 6, 16)
+    jx = jax.make_jaxpr(
+        lambda A, *x: dh.hopm3(A, list(x), sweeps=2, impl="mulsum")[0])(
+            _zeros(shape), *_vecs(shape))
+    return TraceCtx("hopm3_mulsum_bitwise", jx, {})
+
+
+@entrypoint("hopm3_batched_pallas_B5", ["no_pad", "launch_count"],
+            tags=["kernel"])
+def _hopm3_batched():
+    shape = (8, 6, 16)
+    B = 5
+    jx = jax.make_jaxpr(
+        lambda A, *x: dh.hopm3_batched(A, list(x), sweeps=2,
+                                       impl="pallas")[0])(
+            _zeros((B,) + shape), *[_zeros((B, n)) for n in shape])
+    return TraceCtx("hopm3_batched_pallas_B5", jx, {
+        "pad_scope": "kernel",
+        "launch": {"kind": "chain", "d": 3, "s": None, "sweeps": 2},
+    })
+
+
+# ---- dHOPM3 at p=8: launches, collective schedule, wire demotion -----------
+
+_DHOPM_RULES = ["no_pad", "launch_count", "collective_schedule",
+                "wire_demotion"]
+
+
+def _dhopm3_ctx(name, mesh, shape, *, s, prec, overlap=False,
+                fuse_pairs=None, sweeps=1, batch=None):
+    chunks = dh.OVERLAP_CHUNKS_DEFAULT if overlap else 1
+    if batch is None:
+        def fn(A, *x):
+            return dh.dhopm3(
+                A, list(x), mesh, "x", s=s, sweeps=sweeps, impl="pallas",
+                prec=prec, fuse_pairs=fuse_pairs, overlap=overlap)[0]
+
+        args = (_zeros(shape), *_vecs(shape))
+    else:
+        def fn(A, *x):
+            return dh.dhopm3_batched(
+                A, list(x), mesh, "x", s=s, sweeps=sweeps, impl="pallas",
+                prec=prec, fuse_pairs=fuse_pairs, overlap=overlap)[0]
+
+        args = (_zeros((batch,) + shape),
+                *[_zeros((batch, n)) for n in shape])
+    jx = jax.make_jaxpr(fn)(*args)
+    fuse = "auto" if fuse_pairs else ()
+    return TraceCtx(name, jx, {
+        "pad_scope": "kernel",
+        "launch": {"kind": "chain", "d": len(shape), "s": s,
+                   "fuse_pairs": fuse, "overlap_chunks": chunks,
+                   "sweeps": sweeps},
+        "schedule": {"shape": shape, "p": P8, "s": s, "prec": prec,
+                     "overlap_chunks": chunks, "sweeps": sweeps},
+    })
+
+
+@entrypoint("dhopm3_p8_doubling_f32", _DHOPM_RULES, tags=["p8", "dist"])
+def _dhopm3_doubling_f32(mesh):
+    return _dhopm3_ctx("dhopm3_p8_doubling_f32", mesh, (8, 6, 16),
+                       s=0, prec="f32", sweeps=2)
+
+
+@entrypoint("dhopm3_p8_doubling_bf16", _DHOPM_RULES, tags=["p8", "dist"])
+def _dhopm3_doubling_bf16(mesh):
+    return _dhopm3_ctx("dhopm3_p8_doubling_bf16", mesh, (8, 6, 16),
+                       s=2, prec="bf16")
+
+
+@entrypoint("dhopm3_p8_ring_f32", _DHOPM_RULES, tags=["p8", "dist"])
+def _dhopm3_ring_f32(mesh):
+    # mode 0 is past DOUBLING_MAX_ELEMENTS: the ring regime, whose f32
+    # fast path is a single psum per delayed reduction
+    return _dhopm3_ctx("dhopm3_p8_ring_f32", mesh, (80000, 8, 8),
+                       s=1, prec="f32")
+
+
+@entrypoint("dhopm3_p8_ring_bf16", _DHOPM_RULES, tags=["p8", "dist"])
+def _dhopm3_ring_bf16(mesh):
+    return _dhopm3_ctx("dhopm3_p8_ring_bf16", mesh, (80000, 8, 8),
+                       s=1, prec="bf16")
+
+
+@entrypoint("dhopm3_p8_overlap_bf16", _DHOPM_RULES, tags=["p8", "dist"])
+def _dhopm3_overlap(mesh):
+    return _dhopm3_ctx("dhopm3_p8_overlap_bf16", mesh, (8, 6, 16),
+                       s=0, prec="bf16", overlap=True)
+
+
+@entrypoint("dhopm3_p8_fused_d4", _DHOPM_RULES, tags=["p8", "dist"])
+def _dhopm3_fused(mesh):
+    return _dhopm3_ctx("dhopm3_p8_fused_d4", mesh, (8, 6, 16, 8),
+                       s=0, prec="f32", fuse_pairs=True)
+
+
+@entrypoint("dhopm3_batched_p8_B4",
+            _DHOPM_RULES + ["no_stack"], tags=["p8", "dist"])
+def _dhopm3_batched(mesh):
+    return _dhopm3_ctx("dhopm3_batched_p8_B4", mesh, (8, 6, 16),
+                       s=0, prec="f32", batch=4)
+
+
+# ---- train / serve steps ---------------------------------------------------
+
+@entrypoint("grad_compress_arena_step",
+            ["no_stack", "mulsum_determinism"], tags=["train"])
+def _grad_step():
+    cfg = gc.CompressorCfg(rank=2, sweeps=2, min_size=16, prec="f32",
+                           bucket=True, arena=True)
+    params = {f"w{i}": jnp.zeros((8, 6), jnp.float32) for i in range(3)}
+    state = gc.init_state(params, cfg)
+    mesh = jax.make_mesh((1,), ("dp",))
+
+    def body(g):
+        ng, ns, _ = gc.compress_and_sync(g, state, cfg, "dp")
+        return ng, ns
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(P(),),
+                       out_specs=(P(), P()), check_vma=False)
+    jx = jax.make_jaxpr(fn)(params)
+    return TraceCtx("grad_compress_arena_step", jx, {})
+
+
+@entrypoint("serve_compress_group_B3",
+            ["no_pad", "launch_count", "no_stack"], tags=["serve"])
+def _serve_group():
+    from repro.serve.engine import _compress_group
+    view = (2, 2, 16, 8)
+    B = 3
+    jx = jax.make_jaxpr(functools.partial(
+        _compress_group, sweeps=2, impl="pallas"))(
+            _zeros((B,) + view),
+            tuple(_zeros((B, n)) for n in view))
+    return TraceCtx("serve_compress_group_B3", jx, {
+        "pad_scope": "kernel",
+        "launch": {"kind": "chain", "d": 4, "s": None, "sweeps": 2},
+    })
+
+
+@entrypoint("serve_compress_group_mulsum",
+            ["mulsum_determinism", "no_stack"], tags=["serve"])
+def _serve_group_mulsum():
+    from repro.serve.engine import _compress_group
+    view = (2, 2, 16, 8)
+    B = 3
+    jx = jax.make_jaxpr(functools.partial(
+        _compress_group, sweeps=2, impl="mulsum"))(
+            _zeros((B,) + view),
+            tuple(_zeros((B, n)) for n in view))
+    return TraceCtx("serve_compress_group_mulsum", jx, {})
+
+
+# ---- arena: zero-copy assembly and real donation ---------------------------
+
+@entrypoint("arena_assemble_rows", ["no_stack"], tags=["arena"])
+def _arena_assemble():
+    rows = [jnp.zeros((5, 7), jnp.float32) for _ in range(4)]
+    jx = jax.make_jaxpr(lambda *rs: assemble_rows(rs))(*rows)
+    return TraceCtx("arena_assemble_rows", jx, {})
+
+
+@entrypoint("arena_scatter_donation", ["donation"], tags=["arena"])
+def _arena_donation():
+    def compiled_text():
+        buf = jnp.zeros((3, 5), jnp.float32)
+        rows = [jnp.ones((5,), jnp.float32) for _ in range(3)]
+        return _scatter_rows.lower(buf, *rows).compile().as_text()
+
+    return TraceCtx("arena_scatter_donation", None, {
+        "donation": {"compiled_text": compiled_text, "donated": [0]},
+    })
+
+
+# ---- source-level determinism hygiene --------------------------------------
+
+@entrypoint("source_no_hash_seed", ["no_hash_seed"], tags=["source"])
+def _source_hash():
+    return TraceCtx("source_no_hash_seed", None, {})
+
+
+def get_entrypoints(names=None, tags=None) -> list[EntryPoint]:
+    eps = ENTRYPOINTS
+    if names is not None:
+        wanted = set(names)
+        unknown = wanted - {e.name for e in eps}
+        if unknown:
+            raise KeyError(f"unknown entry point(s): {sorted(unknown)}")
+        eps = [e for e in eps if e.name in wanted]
+    if tags is not None:
+        eps = [e for e in eps if e.tags & set(tags)]
+    return eps

@@ -1,0 +1,42 @@
+"""Run the rule registry over the entry points and build the JSON report."""
+from __future__ import annotations
+
+from .entrypoints import EntryPoint, get_entrypoints
+from .rules import run_rules
+
+
+def run_entrypoint(ep: EntryPoint, waivers=None, *,
+                   real_mesh: bool = False) -> dict:
+    ctx = ep.ctx(real_mesh=real_mesh)
+    findings = run_rules(ctx, ep.rules, waivers)
+    blocking = [f for f in findings
+                if f.severity == "error" and not f.waived]
+    return {
+        "entrypoint": ep.name,
+        "tags": sorted(ep.tags),
+        "rules": list(ep.rules),
+        "findings": [f.to_json() for f in findings],
+        "ok": not blocking,
+    }
+
+
+def run_verify(names=None, tags=None, waivers=None, *,
+               real_mesh: bool = False) -> dict:
+    results = [
+        run_entrypoint(ep, waivers, real_mesh=real_mesh)
+        for ep in get_entrypoints(names, tags)
+    ]
+    n_findings = sum(len(r["findings"]) for r in results)
+    n_waived = sum(
+        1 for r in results for f in r["findings"] if f["waived"])
+    return {
+        "entrypoints": results,
+        "summary": {
+            "entrypoints": len(results),
+            "rules_checked": sum(len(r["rules"]) for r in results),
+            "findings": n_findings,
+            "waived": n_waived,
+            "real_mesh": real_mesh,
+        },
+        "ok": all(r["ok"] for r in results),
+    }

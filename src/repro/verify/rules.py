@@ -1,0 +1,310 @@
+"""Rule registry for the static verifier.
+
+Each rule statically checks one structural contract on a traced entry point
+(see :mod:`repro.verify.entrypoints`).  Expectations are *recomputed* from
+the ``core.memory_model`` closed forms and the ``dist.collectives`` dispatch
+— the verifier hardcodes no counts, so a change to the closed forms and a
+change to the kernels must agree before the gate goes green.
+
+Rule ids (grouped by the invariant family they prove):
+
+- ``no_pad``             zero ``pad`` eqns in the kernel layer
+- ``no_stack``           zero ``concatenate`` under arena assembly
+- ``launch_count``       pallas-call count == closed-form launches
+- ``collective_schedule``  ppermute/psum/all-gather counts match the
+  per-iteration schedule ``dhopm_wire_bytes_sweep`` prices
+- ``wire_demotion``      every ppermute hop carries storage precision
+- ``donation``           donated buffers alias in the compiled output
+- ``mulsum_determinism`` mulsum paths carry no bare reductions
+- ``no_hash_seed``       no salted ``hash(`` seeding in source
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import math
+import pathlib
+import re
+from typing import Callable
+
+import numpy as np
+
+from repro.core import memory_model as mm
+from repro.core.mixed_precision import get_policy
+from repro.dist.collectives import allreduce_algo
+
+from . import walker
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    entrypoint: str
+    severity: str
+    message: str
+    waived: bool = False
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    severity: str
+    description: str
+    fn: Callable
+
+
+@dataclasses.dataclass
+class TraceCtx:
+    """What an entry point hands the rules: a trace plus rule parameters."""
+    name: str
+    jaxpr: object = None
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(rule_id: str, *, severity: str = "error", description: str):
+    assert severity in SEVERITIES, severity
+
+    def deco(fn):
+        RULES[rule_id] = Rule(rule_id, severity, description, fn)
+        return fn
+
+    return deco
+
+
+# ---- closed-form expectations ---------------------------------------------
+
+def expected_launches(spec: dict) -> int:
+    """Expected pallas-call count, recomputed from ``memory_model``.
+
+    ``spec["kind"]``:
+      - ``"chain"``: a (d)HOPM3 sweep chain — ``sweeps x
+        dhopm_launches_per_sweep(d, s, fuse_pairs, overlap_chunks)``.
+      - ``"tvc"``: ``calls`` fused TVC kernel launches (one per tvc/tvc2
+        call — the mode-oblivious single-launch contract).
+    """
+    kind = spec["kind"]
+    if kind == "chain":
+        per_sweep = mm.dhopm_launches_per_sweep(
+            spec["d"],
+            spec.get("s"),
+            spec.get("fuse_pairs", ()),
+            overlap_chunks=spec.get("overlap_chunks", 1),
+        )
+        return spec.get("sweeps", 1) * per_sweep
+    if kind == "tvc":
+        return spec.get("calls", 1)
+    raise ValueError(f"unknown launch spec kind: {kind!r}")
+
+
+def expected_collectives(spec: dict) -> dict:
+    """Per-trace collective counts for a dHOPM3 sweep chain.
+
+    Mirrors the per-iteration dispatch ``memory_model.dhopm_wire_bytes_sweep``
+    prices: the split mode all-gathers its 1-D piece; every other mode runs
+    one delayed allreduce whose algorithm is ``allreduce_algo(n_j, p)`` —
+    doubling issues ``log2(p)`` staged hops per overlap chunk, ring issues a
+    ``psum`` when the wire needs no demotion (storage == compute) and
+    ``(p - 1)`` reduce-scatter hops plus a tiled all-gather otherwise.
+    """
+    shape = spec["shape"]
+    p = spec["p"]
+    s = spec.get("s")
+    prec = get_policy(spec.get("prec", "f32"))
+    chunks = spec.get("overlap_chunks", 1)
+    sweeps = spec.get("sweeps", 1)
+    ppermute = psum = all_gather = 0
+    for j, nj in enumerate(shape):
+        if j == s:
+            all_gather += 1
+            continue
+        if allreduce_algo(nj, p) == "doubling":
+            ppermute += int(math.log2(p)) * chunks
+        elif prec.storage == prec.compute:
+            psum += 1
+        else:
+            ppermute += p - 1
+            all_gather += 1
+    return {
+        "ppermute": sweeps * ppermute,
+        "psum": sweeps * psum,
+        "all_gather": sweeps * all_gather,
+    }
+
+
+# ---- jaxpr rules -----------------------------------------------------------
+
+@rule("no_pad", description="zero pad eqns in the kernel layer")
+def _no_pad(ctx: TraceCtx) -> list[str]:
+    scope = ctx.params.get("pad_scope", "trace")
+    n = walker.count_primitive(
+        ctx.jaxpr, "pad", kernel_only=(scope == "kernel")
+    )
+    if n:
+        return [f"{n} pad eqn(s) in the {scope} scope (expected 0)"]
+    return []
+
+
+@rule("no_stack", description="zero concatenate under bucket/arena assembly")
+def _no_stack(ctx: TraceCtx) -> list[str]:
+    n = walker.count_primitive(ctx.jaxpr, "concatenate")
+    if n:
+        return [f"{n} concatenate eqn(s) (expected 0: rows are scattered)"]
+    return []
+
+
+@rule("launch_count",
+      description="pallas-call count equals the memory_model closed form")
+def _launch_count(ctx: TraceCtx) -> list[str]:
+    want = expected_launches(ctx.params["launch"])
+    got = walker.count_primitive(ctx.jaxpr, "pallas_call")
+    if got != want:
+        return [f"traced {got} pallas_call eqn(s), closed form says {want}"]
+    return []
+
+
+@rule("collective_schedule",
+      description="ppermute/psum/all-gather counts match the priced schedule")
+def _collective_schedule(ctx: TraceCtx) -> list[str]:
+    want = expected_collectives(ctx.params["schedule"])
+    counts = walker.primitive_counts(ctx.jaxpr)
+    got = {k: counts.get(k, 0) for k in want}
+    if got != want:
+        return [f"collective counts {got} != priced schedule {want}"]
+    return []
+
+
+@rule("wire_demotion",
+      description="every ppermute hop carries the storage precision")
+def _wire_demotion(ctx: TraceCtx) -> list[str]:
+    prec = get_policy(ctx.params["schedule"].get("prec", "f32"))
+    storage = np.dtype(prec.storage)
+    bad = sorted({
+        str(eqn.invars[0].aval.dtype)
+        for eqn, _ in walker.iter_eqns(ctx.jaxpr)
+        if eqn.primitive.name == "ppermute"
+        and np.dtype(eqn.invars[0].aval.dtype) != storage
+    })
+    if bad:
+        return [
+            f"ppermute hop(s) carry {bad} on the wire, "
+            f"storage precision is {storage.name}"
+        ]
+    return []
+
+
+@rule("mulsum_determinism",
+      description="mulsum paths carry only order-explicit doubling-tree adds")
+def _mulsum_determinism(ctx: TraceCtx) -> list[str]:
+    out = []
+    for prim in ("reduce_sum", "dot_general"):
+        n = walker.count_primitive(ctx.jaxpr, prim)
+        if n:
+            out.append(
+                f"{n} bare {prim} eqn(s) in a bitwise-mulsum path "
+                f"(adds must go through the explicit doubling tree)"
+            )
+    return out
+
+
+# ---- compiled-output rule --------------------------------------------------
+
+_ALIAS_PARAM_RE = re.compile(r"\((\d+),\s*\{")
+
+
+def donated_params(compiled_text: str) -> set[int]:
+    """Parameter indices the compiled HLO aliases to outputs."""
+    key = "input_output_alias={"
+    start = compiled_text.find(key)
+    if start < 0:
+        return set()
+    i, depth = start + len(key), 1
+    while i < len(compiled_text) and depth:
+        depth += {"{": 1, "}": -1}.get(compiled_text[i], 0)
+        i += 1
+    body = compiled_text[start + len(key):i - 1]
+    return {int(n) for n in _ALIAS_PARAM_RE.findall(body)}
+
+
+@rule("donation",
+      description="donated buffers alias outputs in the compiled executable")
+def _donation(ctx: TraceCtx) -> list[str]:
+    spec = ctx.params["donation"]
+    text = spec["compiled_text"]() if callable(spec["compiled_text"]) \
+        else spec["compiled_text"]
+    want = set(spec["donated"])
+    got = donated_params(text)
+    missing = want - got
+    if missing:
+        return [
+            f"donated parameter(s) {sorted(missing)} do not alias any "
+            f"output in the compiled executable (defensive copy)"
+        ]
+    return []
+
+
+# ---- source-level AST rule -------------------------------------------------
+
+def hash_seed_sites(source: str, filename: str = "<src>") -> list[str]:
+    """Locations of salted ``hash(`` calls in ``source``.
+
+    ``hash()`` is salted per process (PYTHONHASHSEED), so seeding anything
+    from it breaks cross-process determinism — the bug class PRs 3 and 5
+    each fixed once (the cure is ``zlib.crc32`` of the stable name).
+    """
+    tree = ast.parse(source, filename=filename)
+    sites = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "hash"):
+            sites.append(f"{filename}:{node.lineno}")
+    return sites
+
+
+@rule("no_hash_seed",
+      description="no salted hash() seeding anywhere under src/repro")
+def _no_hash_seed(ctx: TraceCtx) -> list[str]:
+    root = pathlib.Path(ctx.params.get(
+        "source_root", pathlib.Path(__file__).resolve().parents[1]))
+    sites = []
+    for path in sorted(root.rglob("*.py")):
+        sites.extend(hash_seed_sites(path.read_text(), str(path)))
+    if sites:
+        return [f"salted hash() call(s) at: {', '.join(sites)}"]
+    return []
+
+
+# ---- runner ----------------------------------------------------------------
+
+def load_waivers(path) -> dict[tuple[str, str], str]:
+    """Waiver file: ``[{"entrypoint": ..., "rule": ..., "reason": ...}]``."""
+    data = json.loads(pathlib.Path(path).read_text())
+    out = {}
+    for item in data:
+        out[(item["entrypoint"], item["rule"])] = item.get("reason", "")
+    return out
+
+
+def run_rules(ctx: TraceCtx, rule_ids, waivers=None) -> list[Finding]:
+    waivers = waivers or {}
+    findings = []
+    for rid in rule_ids:
+        r = RULES[rid]
+        for msg in r.fn(ctx):
+            findings.append(Finding(
+                rule=rid,
+                entrypoint=ctx.name,
+                severity=r.severity,
+                message=msg,
+                waived=(ctx.name, rid) in waivers,
+            ))
+    return findings

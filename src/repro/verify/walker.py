@@ -1,0 +1,97 @@
+"""The one recursive jaxpr walker.
+
+Every eqn-counting check in the repo (tests, the CLI verifier, the bench
+gate's trace replays) goes through :func:`iter_eqns` so there is exactly one
+traversal implementation.  The traversal descends into sub-jaxprs held in
+eqn params, covering every container shape jax uses:
+
+- ``ClosedJaxpr`` params (``pjit``'s ``jaxpr``, ``cond``'s ``branches``
+  members) — unwrapped via ``.jaxpr``,
+- raw ``Jaxpr`` params (``pallas_call``'s ``jaxpr``, ``shard_map``'s body),
+- list/tuple params holding either of the above (``cond``'s ``branches``),
+- ``ClosedJaxpr``-wrapping-``ClosedJaxpr`` nests (historically produced by
+  ``shard_map``) — handled by unwrapping ``.jaxpr`` until eqns appear.
+
+A previous private copy of this walker (``tests/test_serving.py``) only
+recursed into params that themselves had a ``.jaxpr`` attribute, silently
+skipping list/tuple params such as ``cond`` branches; the regression test
+``tests/test_verify.py::test_walker_descends_into_cond_branches`` pins the
+fix.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Iterator
+
+
+def _as_jaxpr(obj):
+    """Unwrap ClosedJaxpr(-nests) to a raw Jaxpr, or return None."""
+    for _ in range(3):          # ClosedJaxpr -> (ClosedJaxpr ->) Jaxpr
+        if hasattr(obj, "eqns"):
+            return obj
+        obj = getattr(obj, "jaxpr", None)
+        if obj is None:
+            return None
+    return obj if hasattr(obj, "eqns") else None
+
+
+def _sub_jaxprs(eqn) -> Iterator:
+    for v in eqn.params.values():
+        for item in (v if isinstance(v, (list, tuple)) else [v]):
+            inner = _as_jaxpr(item)
+            if inner is not None:
+                yield inner
+
+
+def iter_eqns(jaxpr, *, in_kernel: bool = False):
+    """Yield ``(eqn, in_kernel)`` for every eqn reachable from ``jaxpr``.
+
+    ``jaxpr`` may be a ``ClosedJaxpr``, a raw ``Jaxpr``, or the object
+    returned by ``jax.make_jaxpr``.  ``in_kernel`` is True for eqns nested
+    (at any depth) inside a ``pallas_call`` body — the "kernel layer" the
+    no-pad rule is scoped to.
+    """
+    root = _as_jaxpr(jaxpr)
+    if root is None:
+        raise TypeError(f"not a jaxpr: {type(jaxpr).__name__}")
+    for eqn in root.eqns:
+        yield eqn, in_kernel
+        kernel = in_kernel or eqn.primitive.name == "pallas_call"
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, in_kernel=kernel)
+
+
+def count_primitive(jaxpr, name: str, *, kernel_only: bool = False) -> int:
+    """Count eqns whose primitive is ``name`` anywhere under ``jaxpr``."""
+    return sum(
+        1
+        for eqn, in_kernel in iter_eqns(jaxpr)
+        if eqn.primitive.name == name and (in_kernel or not kernel_only)
+    )
+
+
+def primitive_counts(jaxpr, *, kernel_only: bool = False) -> Counter:
+    """Histogram of primitive names reachable from ``jaxpr``."""
+    c: Counter = Counter()
+    for eqn, in_kernel in iter_eqns(jaxpr):
+        if in_kernel or not kernel_only:
+            c[eqn.primitive.name] += 1
+    return c
+
+
+def count_named_calls(jaxpr, substr: str) -> int:
+    """Count call-like eqns whose ``name`` param contains ``substr``.
+
+    Subsumes the old ``tests/test_collectives.py::_count_named_calls``
+    (used to prove the ring reorder lowers to slice+concat, not roll).
+    """
+    return sum(
+        1
+        for eqn, _ in iter_eqns(jaxpr)
+        if substr in str(eqn.params.get("name", ""))
+    )
+
+
+def collect_eqns(jaxpr) -> list:
+    """All eqns reachable from ``jaxpr`` (the old ``_walk_eqns`` helper)."""
+    return [eqn for eqn, _ in iter_eqns(jaxpr)]

@@ -18,6 +18,7 @@ from repro.core import memory_model as mm
 from repro.core.arena import BatchedArena, assemble_rows
 from repro.plan import planner
 from repro.train import grad_compress as gc
+from repro.verify.walker import collect_eqns
 
 
 # ---- closed forms ----------------------------------------------------------
@@ -166,19 +167,6 @@ def test_grad_arena_bitwise_p1():
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
-def _walk_eqns(jaxpr, out):
-    for eqn in jaxpr.eqns:
-        out.append(eqn)
-        for v in eqn.params.values():
-            vs = v if isinstance(v, (list, tuple)) else [v]
-            for o in vs:
-                j = getattr(o, "jaxpr", o)   # ClosedJaxpr -> Jaxpr
-                j = getattr(j, "jaxpr", j)   # (shard_map nests a raw Jaxpr)
-                if hasattr(j, "eqns"):
-                    _walk_eqns(j, out)
-    return out
-
-
 def _grad_trace_eqns(cfg, params, grads):
     mesh = jax.make_mesh((1,), ("dp",))
     state = gc.init_state(params, cfg)
@@ -189,7 +177,7 @@ def _grad_trace_eqns(cfg, params, grads):
 
     fn = jax.shard_map(body, mesh=mesh, in_specs=(P(),),
                        out_specs=(P(), P()), check_vma=False)
-    return _walk_eqns(jax.make_jaxpr(fn)(grads).jaxpr, [])
+    return collect_eqns(jax.make_jaxpr(fn)(grads))
 
 
 def test_grad_arena_step_jaxpr_has_no_stack():

@@ -12,6 +12,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.mixed_precision import BF16_F32, F32
 from repro.dist import collectives as coll
+from repro.verify.walker import count_named_calls
 
 
 @pytest.mark.parametrize("p", [2, 4, 8])
@@ -155,16 +156,7 @@ def _trace_p8(fn, x):
 
 
 def _count_named_calls(jaxpr, substr: str) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if substr in str(eqn.params.get("name", "")):
-            n += 1
-        for v in eqn.params.values():
-            for item in (v if isinstance(v, (list, tuple)) else [v]):
-                inner = getattr(item, "jaxpr", item)
-                if hasattr(inner, "eqns"):
-                    n += _count_named_calls(inner, substr)
-    return n
+    return count_named_calls(jaxpr, substr)
 
 
 def test_ring_reorder_is_slice_concat_not_roll():

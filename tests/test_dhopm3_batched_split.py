@@ -19,6 +19,7 @@ from repro.core import dhopm as dh
 from repro.core import memory_model as mm
 from repro.core.dtvc import ShardState, dtvc2_local_batched, dtvc_local_batched
 from repro.train import grad_compress as gc
+from repro.verify.walker import count_primitive
 
 RNG = np.random.default_rng(41)
 
@@ -32,16 +33,7 @@ def mesh1():
 
 
 def _count_pallas(jaxpr) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for v in eqn.params.values():
-            for item in (v if isinstance(v, (list, tuple)) else [v]):
-                inner = getattr(item, "jaxpr", item)
-                if hasattr(inner, "eqns"):
-                    n += _count_pallas(inner)
-    return n
+    return count_primitive(jaxpr, "pallas_call")
 
 
 # ---- launch schedule: one batched launch per chain step, any B -----------

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core import dhopm as dh
 from repro.core import memory_model as mm
 from repro.dist import collectives as coll
+from repro.verify.walker import count_primitive
 
 RNG = np.random.default_rng(57)
 
@@ -29,16 +30,7 @@ def mesh1():
 
 
 def _count_pallas(jaxpr) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for v in eqn.params.values():
-            for item in (v if isinstance(v, (list, tuple)) else [v]):
-                inner = getattr(item, "jaxpr", item)
-                if hasattr(inner, "eqns"):
-                    n += _count_pallas(inner)
-    return n
+    return count_primitive(jaxpr, "pallas_call")
 
 
 # ---- overlap_chunks normalizer -------------------------------------------

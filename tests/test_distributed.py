@@ -44,6 +44,7 @@ EXPECTED = [
     "slot_recycle_prefill_sharded",
     "grad_compress_arena_bitwise",
     "serve_compress_arena_bitwise",
+    "verify_static_gate_p8",
 ]
 
 

@@ -16,6 +16,7 @@ from repro.core.dhopm import hopm3, hopm3_batched, hopm_init_factors
 from repro.models import registry
 from repro.serve import DecodeEngine, GenerationResult, Request, RequestQueue
 from repro.serve.engine import _compress_group
+from repro.verify.walker import count_primitive
 
 EOS = 7
 
@@ -153,14 +154,9 @@ def test_compress_group_bitwise_vs_per_slot():
 
 
 def _count_pallas(jaxpr):
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for sub in eqn.params.values():
-            if hasattr(sub, "jaxpr"):
-                n += _count_pallas(sub.jaxpr)
-    return n
+    # the shared walker also descends into list/tuple params (cond
+    # branches), which this file's old private copy silently skipped
+    return count_primitive(jaxpr, "pallas_call")
 
 
 def test_compress_group_one_launch_chain_any_group_size():

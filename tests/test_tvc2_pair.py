@@ -13,6 +13,7 @@ from repro.core import memory_model as mm
 from repro.core.dtvc import ShardState, dtvc2_local
 from repro.core.tvc import tvc as core_tvc, tvc2 as core_tvc2, tvc2_bytes
 from repro.kernels import autotune, block_table, ops
+from repro.verify.walker import count_primitive
 
 RNG = np.random.default_rng(11)
 
@@ -34,16 +35,7 @@ def two_launch_ref(A, x1, k1, x2, alpha=1.0, beta=0.0, y=None):
 def _count_pallas(jaxpr) -> int:
     """pallas_call eqns in a jaxpr, recursing into sub-jaxprs (pjit bodies,
     shard_map bodies, kernel jaxprs)."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for v in eqn.params.values():
-            for item in (v if isinstance(v, (list, tuple)) else [v]):
-                inner = getattr(item, "jaxpr", item)
-                if hasattr(inner, "eqns"):
-                    n += _count_pallas(inner)
-    return n
+    return count_primitive(jaxpr, "pallas_call")
 
 
 # ---- correctness: ragged sweeps, both pair kernels, both dtypes -----------

@@ -19,6 +19,7 @@ from repro.core import memory_model as mm
 from repro.core.tvc import tvc as core_tvc, tvc2_batched, tvc_batched
 from repro.kernels import autotune, block_table, ops
 from repro.train import grad_compress as gc
+from repro.verify.walker import count_primitive
 
 RNG = np.random.default_rng(23)
 
@@ -28,16 +29,7 @@ def rand(shape, dtype=np.float32):
 
 
 def _count_pallas(jaxpr) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for v in eqn.params.values():
-            for item in (v if isinstance(v, (list, tuple)) else [v]):
-                inner = getattr(item, "jaxpr", item)
-                if hasattr(inner, "eqns"):
-                    n += _count_pallas(inner)
-    return n
+    return count_primitive(jaxpr, "pallas_call")
 
 
 # ---- correctness: batched pallas vs the vmap'd native oracle --------------

@@ -1,0 +1,237 @@
+"""The static verifier's own coverage: the shared walker (including the
+cond-branch regression the old test_serving copy missed), each rule's
+*negative* path — a seeded violation must produce exactly one finding with
+the right rule id — plus waivers, the JSON report, and the CLI."""
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import memory_model as mm
+from repro.core.tvc import tvc
+from repro.verify import walker
+from repro.verify.__main__ import main as verify_main
+from repro.verify.entrypoints import EntryPoint, get_entrypoints
+from repro.verify.report import run_entrypoint, run_verify
+from repro.verify.rules import (
+    RULES, TraceCtx, donated_params, expected_collectives,
+    expected_launches, hash_seed_sites, run_rules,
+)
+
+SHAPE = (8, 6, 16)
+
+
+def _rand(shape):
+    return jnp.asarray(np.zeros(shape, np.float32))
+
+
+def _findings(name, params, rule_ids, jaxpr=None):
+    return run_rules(TraceCtx(name, jaxpr, params), rule_ids)
+
+
+# ---- walker ----------------------------------------------------------------
+
+def test_walker_descends_into_cond_branches():
+    """Regression: the old test_serving.py walker only recursed into params
+    that had a .jaxpr attribute, so a pallas_call inside a lax.cond branch
+    (branches is a *tuple* of ClosedJaxprs) was invisible to it."""
+    A, x = _rand(SHAPE), _rand((6,))
+
+    def f(pred, A, x):
+        return lax.cond(pred,
+                        lambda a: tvc(a, x, 1, impl="pallas"),
+                        lambda a: jnp.zeros((8, 16), jnp.float32) + a[:, 0],
+                        A)
+
+    jx = jax.make_jaxpr(f)(jnp.asarray(True), A, x)
+    assert walker.count_primitive(jx, "pallas_call") == 1
+
+    # the old serving-file traversal (reproduced verbatim) misses it
+    def old_count(jaxpr):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    n += old_count(sub.jaxpr)
+        return n
+
+    assert old_count(jx.jaxpr) == 0
+
+
+def test_walker_kernel_scope_and_named_calls():
+    A, x = _rand(SHAPE), _rand((6,))
+    jx = jax.make_jaxpr(lambda a: tvc(a, x, 1, impl="pallas"))(A)
+    counts = walker.primitive_counts(jx, kernel_only=True)
+    assert counts["pallas_call"] == 0        # the call itself is host-side
+    assert sum(counts.values()) > 0          # but the kernel body is seen
+    roll = jax.make_jaxpr(lambda t: jnp.roll(t, 5))(x)
+    assert walker.count_named_calls(roll, "roll") == 1
+    assert walker.count_named_calls(jx, "roll") == 0
+    assert len(walker.collect_eqns(jx)) == sum(
+        walker.primitive_counts(jx).values())
+
+
+# ---- seeded violations: exactly one finding, right rule id -----------------
+
+def test_seeded_pad_fires_no_pad():
+    A, x = _rand(SHAPE), _rand((6,))
+    jx = jax.make_jaxpr(
+        lambda a: tvc(jnp.pad(a, ((0, 0), (1, 1), (0, 0))),
+                      jnp.pad(x, (1, 1)), 1, impl="pallas"))(A)
+    out = _findings("seeded_pad", {}, ["no_pad"], jx)
+    assert [f.rule for f in out] == ["no_pad"]
+
+
+def test_seeded_stack_fires_no_stack():
+    rows = [_rand((5, 7)) for _ in range(4)]
+    jx = jax.make_jaxpr(lambda *rs: jnp.stack(rs))(*rows)
+    out = _findings("seeded_stack", {}, ["no_stack"], jx)
+    assert [f.rule for f in out] == ["no_stack"]
+
+
+def test_seeded_extra_launch_fires_launch_count():
+    A, x = _rand(SHAPE), _rand((6,))
+    jx = jax.make_jaxpr(
+        lambda a: tvc(a, x, 1, impl="pallas")
+        + tvc(a, x, 1, impl="pallas"))(A)
+    out = _findings("seeded_launch", {"launch": {"kind": "tvc"}},
+                    ["launch_count"], jx)
+    assert [f.rule for f in out] == ["launch_count"]
+    assert "closed form says 1" in out[0].message
+
+
+def test_seeded_undemoted_hop_fires_wire_demotion():
+    mesh = jax.sharding.AbstractMesh((("x", 8),))
+    fn = jax.shard_map(
+        lambda t: lax.ppermute(t, "x", [(i, (i + 1) % 8) for i in range(8)]),
+        mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
+    jx = jax.make_jaxpr(fn)(jnp.ones((16,), jnp.float32))
+    # the hop rides the wire in f32 while the policy stores bf16
+    out = _findings("seeded_hop", {"schedule": {"prec": "bf16"}},
+                    ["wire_demotion"], jx)
+    assert [f.rule for f in out] == ["wire_demotion"]
+    # and is clean under the policy it actually honors
+    assert _findings("ok_hop", {"schedule": {"prec": "f32"}},
+                     ["wire_demotion"], jx) == []
+
+
+def test_seeded_hash_seed_fires_no_hash_seed(tmp_path):
+    bad = ("import jax\n"
+           "def init_state(path):\n"
+           "    return jax.random.PRNGKey(hash(str(path)) % 2**31)\n")
+    assert len(hash_seed_sites(bad, "bad.py")) == 1
+    (tmp_path / "seeded.py").write_text(bad)
+    out = _findings("seeded_hash", {"source_root": str(tmp_path)},
+                    ["no_hash_seed"])
+    assert [f.rule for f in out] == ["no_hash_seed"]
+    assert "seeded.py:3" in out[0].message
+
+
+def test_seeded_reduce_sum_fires_mulsum_determinism():
+    jx = jax.make_jaxpr(lambda a: jnp.sum(a, axis=1))(_rand(SHAPE))
+    out = _findings("seeded_reduce", {}, ["mulsum_determinism"], jx)
+    assert [f.rule for f in out] == ["mulsum_determinism"]
+
+
+def test_seeded_undonated_buffer_fires_donation():
+    def f(buf, r):
+        return buf.at[0].set(r)
+
+    # no donate_argnums: the compiled module aliases nothing
+    text = jax.jit(f).lower(
+        _rand((3, 5)), _rand((5,))).compile().as_text()
+    out = _findings(
+        "seeded_donation",
+        {"donation": {"compiled_text": text, "donated": [0]}},
+        ["donation"])
+    assert [f.rule for f in out] == ["donation"]
+
+
+# ---- closed-form expectations stay closed-form -----------------------------
+
+def test_expected_launches_recomputed_from_memory_model():
+    spec = {"kind": "chain", "d": 4, "s": 0, "fuse_pairs": "auto",
+            "sweeps": 3}
+    assert expected_launches(spec) \
+        == 3 * mm.dhopm_launches_per_sweep(4, 0, "auto")
+
+
+def test_expected_collectives_schedule():
+    # (8, 6, 16) at p=8 is all-doubling: 2 reductions x log2(8) hops + the
+    # split all-gather; bf16 changes nothing in the doubling regime
+    for prec in ("f32", "bf16"):
+        got = expected_collectives(
+            {"shape": (8, 6, 16), "p": 8, "s": 0, "prec": prec})
+        assert got == {"ppermute": 6, "psum": 0, "all_gather": 1}
+    # ring regime: f32 rides the psum fast path, bf16 pays the staged hops
+    ring_f32 = expected_collectives(
+        {"shape": (80000, 8, 8), "p": 8, "s": 1, "prec": "f32"})
+    assert ring_f32 == {"ppermute": 3, "psum": 1, "all_gather": 1}
+    ring_bf16 = expected_collectives(
+        {"shape": (80000, 8, 8), "p": 8, "s": 1, "prec": "bf16"})
+    assert ring_bf16 == {"ppermute": 10, "psum": 0, "all_gather": 2}
+
+
+def test_donated_params_parser():
+    text = ("HloModule jit_f, is_scheduled=true, "
+            "input_output_alias={ {}: (0, {}, may-alias) }, "
+            "entry_computation_layout={(f32[3,5]{1,0})->f32[3,5]{1,0}}")
+    assert donated_params(text) == {0}
+    assert donated_params("HloModule jit_f") == set()
+
+
+# ---- waivers, report, CLI --------------------------------------------------
+
+def _seeded_stack_ep():
+    rows = [_rand((5, 7)) for _ in range(4)]
+    jx = jax.make_jaxpr(lambda *rs: jnp.stack(rs))(*rows)
+    return EntryPoint("seeded", lambda: TraceCtx("seeded", jx, {}),
+                      ("no_stack",))
+
+
+def test_waived_finding_does_not_block():
+    ep = _seeded_stack_ep()
+    assert run_entrypoint(ep)["ok"] is False
+    waived = run_entrypoint(ep, {("seeded", "no_stack"): "known cold path"})
+    assert waived["ok"] is True
+    assert waived["findings"][0]["waived"] is True
+
+
+def test_run_verify_green_on_head_subset():
+    report = run_verify(names=["tvc_pallas_m1", "arena_assemble_rows",
+                               "source_no_hash_seed"])
+    assert report["ok"] is True
+    assert report["summary"]["entrypoints"] == 3
+    assert report["summary"]["findings"] == 0
+
+
+def test_every_registered_rule_is_exercised_by_an_entrypoint():
+    used = {r for ep in get_entrypoints() for r in ep.rules}
+    assert used == set(RULES), (used, set(RULES))
+
+
+def test_cli_json_report(tmp_path):
+    out = tmp_path / "report.json"
+    rc = verify_main(["--entry", "arena_assemble_rows",
+                      "--entry", "source_no_hash_seed",
+                      "--json", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["ok"] is True
+    assert {r["entrypoint"] for r in report["entrypoints"]} \
+        == {"arena_assemble_rows", "source_no_hash_seed"}
+
+
+def test_cli_waiver_file(tmp_path):
+    wf = tmp_path / "waivers.json"
+    wf.write_text(json.dumps([{"entrypoint": "arena_assemble_rows",
+                               "rule": "no_stack",
+                               "reason": "example"}]))
+    rc = verify_main(["--entry", "arena_assemble_rows",
+                      "--waivers", str(wf)])
+    assert rc == 0
